@@ -1,0 +1,193 @@
+"""Benchmarks mirroring the paper's tables (scaled to the CPU demo
+substrate; trends and invariants, not absolute numbers — DESIGN.md §5).
+
+Table 1 (JSON): syntax errors + generation time, SynCode vs standard.
+Table 2 (SQL): validity/"executability" proxy + tokens + time.
+Table 3 (GPL): syntax-error reduction on the GPL stand-in (minilang).
+Table 5: mask-store creation time/memory vs vocabulary size.
+Fig. 10: per-step overhead, incremental parsing vs from scratch.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from .common import build_demo, emit, timeit
+
+
+def _run_requests(engine, grammar, n, max_new, constrained=True, seed0=0,
+                  temperature=0.9):
+    from repro.core.decoding import DecodeConfig
+    from repro.serving.engine import Request
+    reqs = [
+        Request(rid=i, prompt=b"Q: generate. A:",
+                grammar=grammar if constrained else None,
+                max_new_tokens=max_new,
+                decode=DecodeConfig(method="sample",
+                                    temperature=temperature),
+                seed=seed0 + i)
+        for i in range(n)
+    ]
+    return engine.generate(reqs)
+
+
+def _error_counts(states, parser, grammar=None, table=None):
+    complete = [s for s in states if s.finish_reason == "eos"]
+    syntax_errors = sum(
+        1 for s in states
+        if not parser.recognize(s.generated))
+    # like the paper (§6.3): length-truncated outputs count as compiler
+    # errors even though SynCode keeps them valid PARTIAL programs —
+    # report that invariant separately
+    valid_partial = 0
+    if grammar is not None:
+        from repro.core.parser import IncrementalParser
+        for s in states:
+            try:
+                IncrementalParser(grammar, table).partial_parse(s.generated)
+                valid_partial += 1
+            except Exception:
+                pass
+    return syntax_errors, len(complete), valid_partial
+
+
+def table1_json(n=6, max_new=60):
+    from repro.core.parser import IncrementalParser
+    engine, bundles, tok = build_demo(("json",))
+    g, tab, _ = bundles["json"]
+    parser = IncrementalParser(g, tab)
+
+    t0 = time.time()
+    sync_states, sync_stats = _run_requests(engine, "json", n, max_new)
+    sync_time = time.time() - t0
+    t0 = time.time()
+    std_states, std_stats = _run_requests(engine, "json", n, max_new,
+                                          constrained=False)
+    std_time = time.time() - t0
+
+    sync_err, sync_done, _ = _error_counts(sync_states, parser)
+    std_err, std_done, _ = _error_counts(std_states, parser)
+    sync_complete_valid = sum(
+        parser.recognize(s.generated) for s in sync_states
+        if s.finish_reason == "eos")
+    emit("table1_json_syncode", sync_time / n * 1e6,
+         f"syntax_errors={sync_err}/{n};complete={sync_done};"
+         f"valid_complete={sync_complete_valid}/{sync_done};"
+         f"tok_s={sync_stats.tokens_per_sec:.1f}")
+    emit("table1_json_standard", std_time / n * 1e6,
+         f"syntax_errors={std_err}/{n};"
+         f"tok_s={std_stats.tokens_per_sec:.1f}")
+
+
+def table2_sql(n=6, max_new=140):
+    from repro.core.parser import IncrementalParser
+    engine, bundles, tok = build_demo(("sql",))
+    g, tab, _ = bundles["sql"]
+    parser = IncrementalParser(g, tab)
+    t0 = time.time()
+    st, stats = _run_requests(engine, "sql", n, max_new)
+    dt = time.time() - t0
+    err, done, vp = _error_counts(st, parser, g, tab)
+    toks = stats.tokens / max(1, n)
+    t0 = time.time()
+    st2, stats2 = _run_requests(engine, "sql", n, max_new,
+                                constrained=False)
+    dt2 = time.time() - t0
+    err2, _, vp2 = _error_counts(st2, parser, g, tab)
+    emit("table2_sql_syncode", dt / n * 1e6,
+         f"syntax_errors={err}/{n};complete={done};"
+         f"valid_partial={vp}/{n};avg_tokens={toks:.0f}")
+    emit("table2_sql_standard", dt2 / n * 1e6,
+         f"syntax_errors={err2}/{n};valid_partial={vp2}/{n}")
+
+
+def table3_gpl(n=6, max_new=140):
+    from repro.core.parser import IncrementalParser
+    for gname in ("minilang", "calc"):
+        engine, bundles, tok = build_demo((gname,))
+        g, tab, _ = bundles[gname]
+        parser = IncrementalParser(g, tab)
+        st, stats = _run_requests(engine, gname, n, max_new)
+        err, done, vp = _error_counts(st, parser, g, tab)
+        st2, _ = _run_requests(engine, gname, n, max_new,
+                               constrained=False)
+        err2, _, vp2 = _error_counts(st2, parser, g, tab)
+        red = (1 - err / max(err2, 1)) * 100 if err2 else 100.0
+        emit(f"table3_{gname}", stats.wall / max(stats.tokens, 1) * 1e6,
+             f"syncode_errors={err}/{n};standard_errors={err2}/{n};"
+             f"reduction={red:.0f}%;valid_partial={vp}vs{vp2}")
+
+
+def table5_mask_store():
+    from repro.core.grammars import load_grammar
+    from repro.core.mask_store import build_mask_store
+    from repro.core.tokenizer import ByteTokenizer
+    for vocab in (512, 2048, 8192):
+        tok = ByteTokenizer(vocab)
+        for gname in ("json", "minilang"):
+            g, tab = load_grammar(gname)
+            t0 = time.time()
+            store = build_mask_store(g, tok)
+            dt = time.time() - t0
+            emit(f"table5_store_{gname}_v{vocab}", dt * 1e6,
+                 f"rows={store.num_rows};MB={store.nbytes()/1e6:.2f}")
+
+
+def fig10_incremental():
+    """Per-step parser cost, incremental vs from scratch, growing output."""
+    from repro.core.grammars import load_grammar
+    from repro.core.parser import IncrementalParser
+    from repro.core.sampling import GrammarSampler
+    g, tab = load_grammar("minilang")
+    gs = GrammarSampler(g, seed=5)
+    text = b" ".join(gs.sample(16, max_bytes=400) for _ in range(12))
+    for mode, inc in (("incremental", True), ("scratch", False)):
+        p = IncrementalParser(g, tab)
+        t0 = time.time()
+        steps = 0
+        i = 8
+        while i < min(len(text), 1200):
+            p.partial_parse(text[:i], incremental=inc)
+            i += 4
+            steps += 1
+        dt = (time.time() - t0) / steps
+        emit(f"fig10_parse_{mode}", dt * 1e6, f"steps={steps}")
+
+
+def mask_union_micro():
+    """The paper's accelerator offload: fused mask gather+union+apply."""
+    import jax.numpy as jnp
+    from repro.kernels.masked_logits.kernel import masked_logits
+    from repro.kernels.masked_logits.ref import masked_logits_ref
+    rng = np.random.default_rng(0)
+    B, V, R, A = 8, 2048, 2000, 32
+    store = jnp.asarray(rng.integers(0, 2 ** 32, (R, V // 32),
+                                     dtype=np.uint32))
+    rows = jnp.asarray(rng.integers(-1, R, (B, A)).astype(np.int32))
+    logits = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32))
+    eos = jnp.asarray(np.ones(B, bool))
+    ref = jax.jit(masked_logits_ref)
+    dt = timeit(lambda: jax.block_until_ready(
+        ref(logits, store, rows, eos)), n=20)
+    emit("mask_union_jnp_ref", dt * 1e6, f"B={B};V={V};A={A}")
+    dt2 = timeit(lambda: jax.block_until_ready(
+        masked_logits(logits, store, rows, eos, block_v=2048,
+                      interpret=True)), n=3)
+    emit("mask_union_pallas_interpret", dt2 * 1e6,
+         "interpret-mode (CPU correctness path; TPU is the target)")
+
+
+def opportunistic_ablation(n=4, max_new=50):
+    for opp in (False, True):
+        engine, bundles, tok = build_demo(("json",), opportunistic=opp)
+        st, stats = _run_requests(engine, "json", n, max_new)
+        emit(f"opportunistic_{'on' if opp else 'off'}",
+             stats.wall / max(stats.tokens, 1) * 1e6,
+             f"mask_computations={stats.mask_computations};"
+             f"hits={stats.opportunistic_hits};tokens={stats.tokens}")
+
+
+ALL = [table1_json, table2_sql, table3_gpl, table5_mask_store,
+       fig10_incremental, mask_union_micro, opportunistic_ablation]

@@ -1,0 +1,32 @@
+"""Shared benchmark substrate: demo engine construction + measurement."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def build_demo(grammars=("json",), vocab=2048, opportunistic=False,
+               seed=0, max_len=400):
+    from repro.launch.serve import build_engine
+    return build_engine("syncode-demo", grammars=grammars, vocab=vocab,
+                        opportunistic=opportunistic, seed=seed,
+                        max_len=max_len)
+
+
+def timeit(fn, n=5, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.time()
+    for _ in range(n):
+        fn()
+    return (time.time() - t0) / n
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,55 @@
+"""Roofline report: aggregates artifacts/dryrun/*.json into the per-
+(arch x shape x mesh) table used by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(mesh=None):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_table(recs, include_skipped=True):
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'fits':5s} "
+           f"{'hbm':>5s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'bound':>8s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        if "skipped" in r:
+            if include_skipped:
+                lines.append(f"{r['arch']:22s} {r['shape']:12s} "
+                             f"{r['mesh']:8s} SKIP  ({r['skipped'][:60]})")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{'yes' if r['fits_hbm'] else 'NO':5s} "
+            f"{r['hbm_utilization']:5.2f} "
+            f"{t['compute_s']:10.3e} {t['memory_s']:10.3e} "
+            f"{t['collective_s']:10.3e} {t['bottleneck'][:-2]:>8s} "
+            f"{r['useful_flops_ratio']:7.3f}")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    print(fmt_table(recs))
+    ok = [r for r in recs if "skipped" not in r]
+    fits = sum(1 for r in ok if r["fits_hbm"])
+    print(f"\n{len(ok)} compiled, {fits} fit HBM, "
+          f"{len(recs) - len(ok)} documented skips")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Benchmark driver: one function per paper table (+ substrate micro-
+benches). Prints ``name,us_per_call,derived`` CSV, then the roofline
+table if dry-run artifacts exist."""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import bench_tables
+    for fn in bench_tables.ALL:
+        try:
+            fn()
+        except Exception:
+            print(f"{fn.__name__},0,ERROR")
+            traceback.print_exc()
+    # roofline table (requires dry-run artifacts)
+    try:
+        from benchmarks import roofline
+        recs = roofline.load_records()
+        if recs:
+            print("\n=== roofline (from dry-run artifacts) ===")
+            roofline.main()
+    except Exception:
+        traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: grammar-constrained generation in ~40 lines.
+
+Builds the offline artifacts (grammar -> LR table -> DFA mask store),
+wraps a small LM with the SynCode constraint, and generates JSON that is
+guaranteed syntactically valid whenever generation completes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.constrain import GrammarConstraint
+from repro.core.decoding import DecodeConfig
+from repro.core.grammars import load_grammar
+from repro.core.mask_store import build_mask_store
+from repro.core.parser import IncrementalParser
+from repro.core.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.serving.engine import Engine, Request
+
+
+def main():
+    # --- offline: grammar -> parser tables + DFA mask store -------------
+    grammar, table = load_grammar("json")
+    tokenizer = ByteTokenizer(2048)
+    store = build_mask_store(grammar, tokenizer, verbose=True)
+
+    # --- peek at the mechanism (paper Fig. 1) ---------------------------
+    gc = GrammarConstraint(grammar, table, store, tokenizer)
+    for prefix in (b"", b'{"name', b'{"a": [1, 2', b'{"a": 1}'):
+        sm = gc.step_rows(prefix)
+        mask = gc.token_mask(prefix)
+        allowed = np.where(mask)[0]
+        ex = [tokenizer.id_to_bytes[t] for t in allowed[:5]]
+        print(f"C_k={prefix!r:16} |A|={sm.num_sequences:2d} "
+              f"allowed={len(allowed):4d} eos={sm.eos_allowed} e.g. {ex}")
+
+    # --- online: constrained generation with a (random-init) LM --------
+    model = build_model(get_config("syncode-demo"))
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, tokenizer,
+                    {"json": (grammar, table, store)}, max_len=300)
+    reqs = [Request(rid=i, prompt=b"Return JSON:", grammar="json",
+                    max_new_tokens=60,
+                    decode=DecodeConfig(method="sample", temperature=0.8),
+                    seed=i) for i in range(3)]
+    states, stats = engine.generate(reqs, verbose=True)
+
+    parser = IncrementalParser(grammar, table)
+    for st in states:
+        ok = parser.recognize(st.generated)
+        print(f"req {st.req.rid}: finish={st.finish_reason:8s} "
+              f"valid={ok} -> {st.generated[:60]!r}")
+    print(f"\n{stats.tokens_per_sec:.1f} tok/s "
+          f"(mask: {stats.mask_time:.2f}s/{stats.mask_computations} steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver: TRAIN a small LM on grammar-sampled calc-DSL data,
+then serve it with and without SynCode and compare syntax validity +
+(crude) semantic quality — the full paper loop on one CPU.
+
+    PYTHONPATH=src python examples/train_grammar_lm.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_config
+from repro.core.decoding import DecodeConfig
+from repro.core.grammars import load_grammar
+from repro.core.mask_store import build_mask_store
+from repro.core.parser import IncrementalParser
+from repro.core.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.serving.engine import Engine, Request
+from repro.training.data import GrammarDataPipeline
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--grammar", default="calc")
+    args = ap.parse_args()
+
+    cfg = get_config("syncode-demo")
+    tok = ByteTokenizer(cfg.vocab_size)
+    g, tab = load_grammar(args.grammar)
+    store = build_mask_store(g, tok)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    print(f"== training {cfg.name} on {args.grammar} samples ==")
+    data = iter(GrammarDataPipeline(g, tok, seq_len=96, batch_size=8,
+                                    seed=0))
+    params, result = train(
+        model, params, data, steps=args.steps,
+        opt_cfg=AdamWConfig(lr=2e-3, warmup_steps=20,
+                            total_steps=args.steps),
+        log_every=max(1, args.steps // 8))
+
+    print("\n== serving: standard vs SynCode ==")
+    engine = Engine(model, params, tok, {args.grammar: (g, tab, store)},
+                    max_len=200)
+    parser = IncrementalParser(g, tab)
+    for label, gname in (("standard", None), ("syncode", args.grammar)):
+        reqs = [Request(rid=i, prompt=b"", grammar=gname,
+                        max_new_tokens=48,
+                        decode=DecodeConfig(method="sample",
+                                            temperature=0.8),
+                        seed=10 + i) for i in range(6)]
+        states, stats = engine.generate(reqs)
+        valid = sum(parser.recognize(s.generated) for s in states)
+        complete = sum(s.finish_reason == "eos" for s in states)
+        print(f"{label:9s}: valid {valid}/6, complete {complete}/6, "
+              f"{stats.tokens_per_sec:.1f} tok/s")
+        for s in states[:2]:
+            print(f"   {s.generated[:64]!r}")
+
+
+if __name__ == "__main__":
+    main()

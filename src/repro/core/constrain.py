@@ -1,0 +1,118 @@
+"""Online grammar-mask computation (paper Algorithm 2 + §4.3).
+
+Per decoding step, the CPU side is O(|A|·len(r) + |A|) — walk the first
+terminal's DFA on the remainder r for each accept sequence, then emit the
+mask-store *row ids*. The expensive part — unioning |A| vocabulary masks
+and applying them to the logits — runs on the accelerator
+(`repro.kernels.masked_logits`, the paper's GPU-offload adapted to TPU).
+
+`GrammarConstraint` also implements the paper's *opportunistic masking*
+(§5 Baselines, Beurer-Kellner et al. 2024): first let the model propose a
+token, and only compute the full mask if the proposal is syntactically
+invalid.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .grammar import Grammar
+from .lexer import LexError
+from .lr import LRTable
+from .mask_store import MaskStore
+from .parser import IncrementalParser, ParseError
+from .tokenizer import ByteTokenizer, EOS_ID
+
+
+@dataclass
+class StepMask:
+    """Host-side result for one sequence at one decoding step."""
+    rows: np.ndarray          # [max_accept] int32 row ids into the store, -1 pad
+    eos_allowed: bool
+    num_sequences: int        # |A| before dedup/capping (diagnostics)
+
+
+class GrammarConstraint:
+    """Per-sequence constrained-decoding state (owns an incremental parser)."""
+
+    def __init__(self, grammar: Grammar, table: LRTable, store: MaskStore,
+                 tokenizer: ByteTokenizer, max_accept: int = 48):
+        self.grammar = grammar
+        self.store = store
+        self.tokenizer = tokenizer
+        self.parser = IncrementalParser(grammar, table)
+        self.max_accept = max_accept
+        self._stride = store.row_stride
+
+    def reset(self):
+        self.parser.reset_cache()
+
+    # ---- Algorithm 2 (host part): accept sequences + r -> store row ids --
+
+    def step_rows(self, partial_output: bytes) -> StepMask:
+        res = self.parser.partial_parse(partial_output)
+        r = res.remainder
+        rows: list[int] = []
+        seen = set()
+        for seq in res.accept_sequences:
+            t1 = seq[0]
+            term = self.grammar.terminals[t1]
+            dfa = term.dfa
+            q = dfa.walk_live(dfa.start, r)
+            if not dfa.live[q]:
+                continue
+            base = (self.grammar.state_offset[t1] + q) * self._stride
+            if len(seq) == 1:
+                rid = base
+            else:
+                rid = base + 1 + self.grammar.term_id[seq[1]]
+            if rid not in seen:
+                seen.add(rid)
+                rows.append(rid)
+        arr = np.full(self.max_accept, -1, dtype=np.int32)
+        n = min(len(rows), self.max_accept)
+        arr[:n] = rows[:n]
+        return StepMask(rows=arr, eos_allowed=res.eos_allowed,
+                        num_sequences=len(res.accept_sequences))
+
+    # ---- host reference mask (numpy; the device path lives in kernels/) --
+
+    def token_mask(self, partial_output: bytes) -> np.ndarray:
+        """Full boolean vocab mask (reference / tests / CPU serving)."""
+        sm = self.step_rows(partial_output)
+        packed = self.store.union_rows(sm.rows)
+        mask = self.store.unpack(packed)
+        if sm.eos_allowed:
+            mask[EOS_ID] = True
+        return mask
+
+    # ---- validity oracle (used by tests and opportunistic masking) ------
+
+    def is_valid_extension(self, partial_output: bytes, token_id: int) -> bool:
+        """partial_output + token stays in L_p(G)?
+
+        Never over-approximates (safe for the opportunistic fast path):
+        the parse must succeed AND the remainder must still be a viable
+        prefix of some *acceptable* terminal. It may under-approximate in
+        the rare case where the final lexical token's type must change in
+        the future — then the caller just falls back to the mask.
+        """
+        if token_id == EOS_ID:
+            return self.parser.partial_parse(partial_output).eos_allowed
+        tb = self.tokenizer.id_to_bytes[token_id]
+        if not tb:
+            return False
+        try:
+            res = self.parser.partial_parse(partial_output + tb,
+                                            incremental=False)
+        except (ParseError, LexError):
+            return False
+        if not res.remainder:
+            return True
+        for seq in res.accept_sequences:
+            dfa = self.grammar.terminals[seq[0]].dfa
+            q = dfa.walk_live(dfa.start, res.remainder)
+            if dfa.live[q]:
+                return True
+        return False

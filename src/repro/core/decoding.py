@@ -1,0 +1,119 @@
+"""Decoding algorithms, composable with grammar masks (paper §2.1 / §3.2:
+"any algorithm that could be applied to V can instead be applied to V_k").
+
+All selectors operate on a (possibly masked) logits vector. Masking is
+`logits + log(mask)` i.e. -inf outside the mask — applied *before* the
+selector, so greedy / temperature / top-k / top-p / beam all compose
+unchanged (the paper's generality claim).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def apply_bool_mask(logits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """logits [..., V], mask [..., V] bool -> masked logits."""
+    return jnp.where(mask, logits, NEG_INF)
+
+
+def unpack_mask_words(packed: jnp.ndarray, vocab_size: int) -> jnp.ndarray:
+    """packed [..., W] uint32 -> bool [..., W*32][:vocab] (little-endian)."""
+    bits = jnp.arange(32, dtype=jnp.uint32)
+    unpacked = (packed[..., :, None] >> bits) & jnp.uint32(1)
+    out = unpacked.reshape(*packed.shape[:-1], -1)
+    return out[..., :vocab_size].astype(bool)
+
+
+def union_packed_rows(store: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """store [R, W] uint32, rows [..., A] int32 (-1 pad) -> [..., W] uint32.
+    Pure-jnp reference for the Pallas masked_logits kernel."""
+    safe = jnp.maximum(rows, 0)
+    gathered = store[safe]                                  # [..., A, W]
+    valid = (rows >= 0)[..., None]
+    gathered = jnp.where(valid, gathered, jnp.uint32(0))
+    return jax.lax.reduce(gathered, jnp.uint32(0),
+                          jnp.bitwise_or, dimensions=(gathered.ndim - 2,))
+
+
+# ---------------------------- selectors -----------------------------------
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1)
+
+
+def sample(logits: jnp.ndarray, key: jax.Array, temperature: float = 1.0,
+           top_k: Optional[int] = None, top_p: Optional[float] = None
+           ) -> jnp.ndarray:
+    """Temperature / top-k / top-p sampling over the last axis."""
+    logits = logits / jnp.maximum(temperature, 1e-6)
+    if top_k is not None:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    if top_p is not None:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep tokens until cumulative prob exceeds top_p (incl. first over)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, NEG_INF, logits)
+    return jax.random.categorical(key, logits, axis=-1)
+
+
+@dataclass
+class DecodeConfig:
+    method: str = "greedy"            # greedy | sample
+    temperature: float = 1.0
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+
+    def select(self, logits: jnp.ndarray, key: Optional[jax.Array] = None
+               ) -> jnp.ndarray:
+        if self.method == "greedy":
+            return greedy(logits)
+        if self.method == "sample":
+            assert key is not None
+            return sample(logits, key, self.temperature, self.top_k,
+                          self.top_p)
+        raise ValueError(self.method)
+
+
+# ------------------------- host-level beam search --------------------------
+
+def beam_search(step_fn: Callable, init_state, beam_width: int,
+                max_steps: int, eos_id: int):
+    """Generic host-driven beam search.
+
+    step_fn(state, token_history) -> (log_probs over V [np], new_state).
+    The grammar mask composes by step_fn masking its log_probs — beam is
+    just another selector over V_k (paper generality).
+    Returns list of (tokens, score) best-first.
+    """
+    beams = [([], 0.0, init_state, False)]
+    for _ in range(max_steps):
+        if all(done for (_, _, _, done) in beams):
+            break
+        cand = []
+        for toks, score, state, done in beams:
+            if done:
+                cand.append((toks, score, state, True))
+                continue
+            logp, new_state = step_fn(state, toks)
+            top = np.argsort(logp)[::-1][:beam_width]
+            for t in top:
+                if not np.isfinite(logp[t]):
+                    continue
+                cand.append((toks + [int(t)], score + float(logp[t]),
+                             new_state, int(t) == eos_id))
+        if not cand:
+            break
+        cand.sort(key=lambda c: c[1], reverse=True)
+        beams = cand[:beam_width]
+    return [(toks, score) for toks, score, _, done in beams]

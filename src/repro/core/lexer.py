@@ -1,0 +1,74 @@
+"""Maximal-munch lexer over the grammar's combined lexer DFA (paper §4.2).
+
+`lex_partial` implements the paper's partial-output lexing with the two
+remainder cases:
+
+* Case 1 — the input ends exactly at a complete lexical token: the token
+  list includes the final token; the caller treats the final token as the
+  remainder `r` (its type may still change as the LLM extends the text).
+* Case 2 — the input ends with a suffix that is not (yet) a complete
+  token but is a live prefix of some terminal: that suffix is returned as
+  the unlexed remainder `u`.
+
+A dead suffix (no terminal can ever match) raises LexError — such a
+string is not in L_p(G) for any grammar over these terminals.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .grammar import Grammar
+
+
+class LexError(ValueError):
+    def __init__(self, msg, pos=None):
+        super().__init__(msg)
+        self.pos = pos
+
+
+@dataclass
+class LexToken:
+    type: str
+    value: bytes
+    pos: int
+
+
+def lex_partial(grammar: Grammar, data: bytes):
+    """Returns (tokens, unlexed_suffix). unlexed_suffix == b'' means Case 1
+    (or empty input); non-empty means Case 2."""
+    dfa = grammar.lexer_dfa
+    tags = grammar.lexer_tags
+    trans = dfa.trans
+    live = dfa.live
+    finals = dfa.finals
+    tokens: list[LexToken] = []
+    pos = 0
+    n = len(data)
+    while pos < n:
+        q = dfa.start
+        j = pos
+        last_acc = -1
+        last_tag = None
+        while j < n:
+            nq = trans[q, data[j]]
+            if not live[nq]:
+                break
+            q = nq
+            j += 1
+            if finals[q]:
+                last_acc = j
+                last_tag = tags[q]
+        if j == n and live[q] and q != dfa.start:
+            # reached end of input while a token is still in progress
+            if finals[q]:
+                tokens.append(LexToken(last_tag, data[pos:j], pos))
+                pos = j
+                continue
+            return tokens, data[pos:]
+        if last_acc < 0:
+            raise LexError(
+                f"no terminal matches at byte {pos} ({data[pos:pos+12]!r})",
+                pos=pos)
+        tokens.append(LexToken(last_tag, data[pos:last_acc], pos))
+        pos = last_acc
+    return tokens, b""

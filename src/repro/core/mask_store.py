@@ -1,0 +1,223 @@
+"""The DFA mask store (paper §4.3, Def. 12) — precomputed offline.
+
+For every live DFA state `q` (over all terminals' DFAs, globally numbered)
+the store holds packed boolean vocabulary masks:
+
+  * M0 row  — tokens t with dmatch(t, q, ())          [α = 0]
+  * M1 rows — tokens t with dmatch(t, q, (τ',)) per τ' [α = 1]
+
+dmatch (Def. 10) decomposes, for a token t walked from q on terminal τ's
+DFA, into:
+  cond 1: the walk ends in a live state of D_τ
+  cond 2: some *proper* prefix of t lands in F_τ (α = 0 only)
+  cond 3: some prefix (incl. ε and all of t) lands in F_τ and the rest of
+          t "pmatches" τ' from its start state (α = 1)
+
+Construction is vectorized with numpy over the whole vocabulary at once:
+tokens are a padded [V, L] byte matrix; a DFA walk from any state is L
+gather steps over the transition table. Complexity matches the paper's
+O(|Q_Ω|·|V|·|Γ|^α) with tiny constants; stores are cached on disk keyed by
+(grammar, vocab) fingerprints (paper §6.4 reports one-time costs only).
+
+Row layout (used by the serving kernel): row(q, α=0) = q·(|Γ|+1);
+row(q, τ') = q·(|Γ|+1) + 1 + tid(τ'). Packed as uint32 little-endian
+bit-words: word w bit b ⇔ token id w·32+b.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+
+import numpy as np
+
+from .grammar import Grammar
+from .tokenizer import ByteTokenizer, EOS_ID, PAD_ID
+
+
+class MaskStore:
+    def __init__(self, grammar: Grammar, tokenizer: ByteTokenizer,
+                 packed: np.ndarray, meta: dict):
+        self.grammar = grammar
+        self.tokenizer = tokenizer
+        self.packed = packed            # [rows, words] uint32
+        self.meta = meta
+        self.num_terminals = len(grammar.terminal_names)
+        self.row_stride = self.num_terminals + 1
+
+    # ---- row addressing ----
+    def global_state(self, terminal: str, q: int) -> int:
+        return self.grammar.state_offset[terminal] + q
+
+    def row_m0(self, terminal: str, q: int) -> int:
+        return self.global_state(terminal, q) * self.row_stride
+
+    def row_m1(self, terminal: str, q: int, next_terminal: str) -> int:
+        tid = self.grammar.term_id[next_terminal]
+        return self.global_state(terminal, q) * self.row_stride + 1 + tid
+
+    # ---- host-side mask ops (reference; device path is in kernels/) ----
+    def union_rows(self, rows) -> np.ndarray:
+        """OR of packed rows -> packed [words] uint32."""
+        out = np.zeros(self.packed.shape[1], dtype=np.uint32)
+        for r in rows:
+            if r >= 0:
+                out |= self.packed[r]
+        return out
+
+    def unpack(self, packed_row: np.ndarray) -> np.ndarray:
+        bits = np.unpackbits(packed_row.view(np.uint8), bitorder="little")
+        return bits[: self.tokenizer.vocab_size].astype(bool)
+
+    @property
+    def num_rows(self):
+        return self.packed.shape[0]
+
+    @property
+    def num_words(self):
+        return self.packed.shape[1]
+
+    def nbytes(self):
+        return self.packed.nbytes
+
+
+def _fingerprint(grammar: Grammar, tok: ByteTokenizer) -> str:
+    h = hashlib.sha256()
+    h.update(grammar.name.encode())
+    for t in grammar.terminal_names:
+        h.update(t.encode())
+        h.update(grammar.terminals[t].dfa.trans.tobytes())
+        h.update(grammar.terminals[t].dfa.finals.tobytes())
+    h.update(str(tok.vocab_size).encode())
+    for b in tok.id_to_bytes[:64]:
+        h.update(b)
+    h.update(str(sum(map(len, tok.id_to_bytes))).encode())
+    return h.hexdigest()[:16]
+
+
+def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,
+                     cache_dir: str | None = None,
+                     verbose: bool = False) -> MaskStore:
+    fp = _fingerprint(grammar, tokenizer)
+    if cache_dir:
+        path = os.path.join(cache_dir, f"maskstore_{grammar.name}_{fp}.npz")
+        if os.path.exists(path):
+            z = np.load(path)
+            return MaskStore(grammar, tokenizer, z["packed"],
+                             {"cached": True, "path": path})
+
+    t0 = time.time()
+    V = tokenizer.vocab_size
+    toks = tokenizer.token_bytes()
+    L = max(1, max(len(b) for b in toks))
+    T = np.zeros((V, L), dtype=np.int32)
+    tok_len = np.zeros(V, dtype=np.int32)
+    for i, b in enumerate(toks):
+        tok_len[i] = len(b)
+        if b:
+            T[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
+    # special tokens (len 0) must never be "valid": we make their rows 0
+    nonempty = tok_len > 0
+
+    terms = grammar.terminal_names
+    G = len(terms)
+    stride = G + 1
+
+    # ---- per-terminal suffix pmatch table S[g, v, i] =
+    #      dmatch(t[i:], start(τ_g), ()) for i in 0..L  (i > len -> False)
+    # Packed over the split index i into uint64 bit-lanes so the per-state
+    # M1 computation is a single AND+nonzero over [G, V] (instead of a
+    # [G, V, L] reduction) — TPU-thinking applied to the host build.
+    if L + 1 > 64:
+        raise ValueError("token length > 63 unsupported by packed build")
+    S = np.zeros((G, V, L + 1), dtype=bool)
+    for g, name in enumerate(terms):
+        dfa = grammar.terminals[name].dfa
+        trans, finals, live = dfa.trans, dfa.finals, dfa.live
+        # suffix walk: states[v, i] after consuming t[i:]? Cheaper: for each
+        # start position i, walk from q0 over t[i:]. We do it by iterating
+        # start positions; each walk is <= L steps over [V] vectors.
+        for i in range(L + 1):
+            ok = tok_len >= i
+            st = np.full(V, dfa.start, dtype=np.int32)
+            hitF = np.zeros(V, dtype=bool)   # F hit strictly before suffix end
+            for j in range(i, L):
+                act = j < tok_len
+                hitF |= ok & act & finals[st]       # prefix ending at j (proper)
+                st_new = trans[st, T[:, j]]
+                st = np.where(act, st_new, st)
+            end_live = live[st]
+            # dmatch(suffix, q0, ()) = end live (cond1) or proper-prefix in F
+            # (cond2, needs nonempty rest which "strictly before end" gives)
+            S[g, :, i] = ok & nonempty & (end_live | hitF)
+            # note: empty suffix (i == len): cond1 with ε -> q0 live == True
+            isempty = tok_len == i
+            S[g, :, i] |= isempty & live[dfa.start]
+        # tokens shorter than i already masked by ok
+
+    # bit-pack S over the split axis: S_bits[g, v] bit i <-> S[g, v, i]
+    lanes = (np.uint64(1) << np.arange(L + 1, dtype=np.uint64))
+    S_bits = (S.astype(np.uint64) * lanes[None, None, :]).sum(axis=2,
+                                                              dtype=np.uint64)
+
+    # ---- per-state rows
+    total_states = grammar.total_dfa_states
+    rows = np.zeros((total_states * stride, V), dtype=bool)
+    for name in terms:
+        dfa = grammar.terminals[name].dfa
+        trans, finals, live = dfa.trans, dfa.finals, dfa.live
+        off = grammar.state_offset[name]
+        for q in range(dfa.num_states):
+            if not live[q]:
+                continue  # dead-state rows stay all-zero (never queried)
+            st = np.full(V, q, dtype=np.int32)
+            # hitF_at[v, i]: state after consuming t[:i] is in F  (i=0..L)
+            hitF_at = np.zeros((V, L + 1), dtype=bool)
+            hitF_at[:, 0] = finals[q]
+            for j in range(L):
+                act = j < tok_len
+                st_new = trans[st, T[:, j]]
+                st = np.where(act, st_new, st)
+                hitF_at[:, j + 1] = act & finals[st]
+            end_live = live[st] & nonempty
+            pos = np.arange(L + 1)[None, :]
+            valid_split = pos <= tok_len[:, None]
+            proper = hitF_at & (pos < tok_len[:, None])   # strict prefix in F
+            anyF = hitF_at & valid_split                  # any prefix incl. full
+            base = off + q
+            # M0: cond1 | cond2
+            rows[base * stride] = end_live | proper.any(axis=1)
+            # M1[τ']: cond1 | (split in F and suffix pmatches τ')
+            anyF_bits = (anyF.astype(np.uint64) *
+                         lanes[None, :]).sum(axis=1, dtype=np.uint64)
+            m1 = (S_bits & anyF_bits[None, :]) != 0
+            rows[base * stride + 1: base * stride + 1 + G] = m1 | end_live
+
+    # never allow specials through the grammar mask (EOS handled separately)
+    rows[:, ~nonempty] = False
+
+    # pack little-endian
+    Wbits = ((V + 31) // 32) * 32
+    padded = np.zeros((rows.shape[0], Wbits), dtype=bool)
+    padded[:, :V] = rows
+    packed = np.packbits(padded, axis=1, bitorder="little")
+    packed = packed.view(np.uint32) if packed.flags["C_CONTIGUOUS"] else \
+        np.ascontiguousarray(packed).view(np.uint32)
+
+    meta = {
+        "build_seconds": time.time() - t0,
+        "rows": rows.shape[0],
+        "bytes": int(packed.nbytes),
+        "grammar": grammar.name,
+        "vocab": V,
+        "cached": False,
+    }
+    if verbose:
+        print(f"[mask_store] {grammar.name}: {meta['rows']} rows x "
+              f"{packed.shape[1]} words, {meta['bytes']/1e6:.1f} MB, "
+              f"{meta['build_seconds']:.1f}s")
+    if cache_dir:
+        os.makedirs(cache_dir, exist_ok=True)
+        np.savez_compressed(path, packed=packed)
+        meta["path"] = path
+    return MaskStore(grammar, tokenizer, packed, meta)

@@ -1,0 +1,222 @@
+"""Incremental LR parser producing accept sequences + remainder (paper §4.2,
+§4.5, Appendix A.3).
+
+`IncrementalParser.partial_parse(C_k)` returns a `ParseResult` with:
+  * accept_sequences: list of 1- or 2-length terminal-name tuples (the set A)
+  * remainder r (bytes) — suffix of C_k whose lexical type may still change
+  * eos_allowed — whether C_k ∈ L(G) (the EOS token may be emitted)
+
+Incrementality (App. A.3): parser stacks are cached per prefix of the
+non-ignored lexical token list; re-parsing after the LLM appends a token
+restores the longest cached prefix and parses only the new tail.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .grammar import END, Grammar
+from .lexer import LexError, LexToken, lex_partial
+from .lr import LRTable, build_lr_table
+
+
+class ParseError(ValueError):
+    pass
+
+
+@dataclass
+class ParseResult:
+    accept_sequences: list        # list[tuple[str, ...]]
+    remainder: bytes
+    eos_allowed: bool
+    tokens: list = field(default_factory=list)
+    case: int = 1                 # 1 or 2 (paper's remainder cases)
+
+
+class IncrementalParser:
+    def __init__(self, grammar: Grammar, table: LRTable | None = None,
+                 lalr: bool = True, max_accept: int | None = None):
+        self.grammar = grammar
+        self.table = table or build_lr_table(grammar, lalr=lalr)
+        self.ignores = set(grammar.ignores)
+        self.parse_terminal_list = list(grammar.parse_terminals)
+        self.max_accept = max_accept
+        # incremental cache: token keys + stack snapshots (tuples)
+        self._cache_keys: list[tuple] = []
+        self._cache_stacks: list[tuple] = [(self.table.start_state,)]
+
+    # ---------------- LR machinery ----------------
+
+    def _shift(self, stack: list, term: str) -> bool:
+        """Perform reduces until `term` can be shifted; mutate stack.
+        Returns False (stack possibly dirty) if `term` is not acceptable."""
+        action = self.table.action
+        goto = self.table.goto
+        prods = self.table.productions
+        while True:
+            ent = action[stack[-1]].get(term)
+            if ent is None:
+                return False
+            op = ent[0]
+            if op == "s":
+                stack.append(ent[1])
+                return True
+            if op == "acc":
+                return True
+            # reduce
+            prod = prods[ent[1]]
+            if len(prod.rhs):
+                del stack[-len(prod.rhs):]
+            nxt = goto[stack[-1]].get(prod.lhs)
+            if nxt is None:
+                return False
+            stack.append(nxt)
+
+    def _can_shift(self, stack: tuple, term: str) -> bool:
+        if not self.table.lalr:
+            # canonical LR(1): immediate error detection — table presence
+            # is exact.
+            return term in self.table.action[stack[-1]]
+        s = list(stack)
+        return self._shift(s, term)
+
+    def accept_terminals(self, stack: tuple) -> list[str]:
+        """A(stack): acceptable next terminals (paper's immediate-error-
+        detection accept set), excluding END."""
+        if not self.table.lalr:
+            return [t for t in self.table.action[stack[-1]]
+                    if t != END]
+        return [t for t in self.parse_terminal_list
+                if self._can_shift(stack, t)]
+
+    def _end_acceptable(self, stack: tuple) -> bool:
+        return self._can_shift(stack, END)
+
+    # ---------------- incremental prefix parsing ----------------
+
+    def _parse_tokens(self, toks: list[LexToken]) -> tuple:
+        """Parse non-ignored tokens, using/updating the prefix cache.
+        Returns the final stack (tuple)."""
+        keys = [(t.type, t.value) for t in toks]
+        cp = 0
+        maxcp = min(len(keys), len(self._cache_keys))
+        while cp < maxcp and self._cache_keys[cp] == keys[cp]:
+            cp += 1
+        # truncate stale cache
+        del self._cache_keys[cp:]
+        del self._cache_stacks[cp + 1:]
+        stack = list(self._cache_stacks[cp])
+        for i in range(cp, len(keys)):
+            t = toks[i]
+            if not self._shift(stack, t.type):
+                raise ParseError(
+                    f"unexpected {t.type} ({t.value!r}) at byte {t.pos}")
+            self._cache_keys.append(keys[i])
+            self._cache_stacks.append(tuple(stack))
+        return tuple(stack)
+
+    def parse_from_scratch_stack(self, toks: list[LexToken]) -> tuple:
+        stack = [self.table.start_state]
+        for t in toks:
+            if not self._shift(stack, t.type):
+                raise ParseError(
+                    f"unexpected {t.type} ({t.value!r}) at byte {t.pos}")
+        return tuple(stack)
+
+    def reset_cache(self):
+        self._cache_keys = []
+        self._cache_stacks = [(self.table.start_state,)]
+
+    # ---------------- the paper's partial parse ----------------
+
+    def partial_parse(self, data: bytes, incremental: bool = True) -> ParseResult:
+        toks, unlexed = lex_partial(self.grammar, data)
+        ignores = self.ignores
+
+        if unlexed:
+            # Case 2: unlexed suffix u — parse ALL lexed tokens, 1-length
+            # sequences from the accept set.
+            parse_toks = [t for t in toks if t.type not in ignores]
+            stack = (self._parse_tokens(parse_toks) if incremental
+                     else self.parse_from_scratch_stack(parse_toks))
+            a1 = self.accept_terminals(stack)
+            seqs = [(t,) for t in a1]
+            seqs += [(ig,) for ig in self.grammar.ignores]
+            return ParseResult(self._cap(seqs), unlexed, eos_allowed=False,
+                               tokens=toks, case=2)
+
+        # Case 1: input ends at a complete lexical token l_f (possibly none)
+        if not toks:
+            stack = (self._parse_tokens([]) if incremental
+                     else self.parse_from_scratch_stack([]))
+            a0 = self.accept_terminals(stack)
+            seqs = [(t,) for t in a0] + [(ig,) for ig in self.grammar.ignores]
+            return ParseResult(self._cap(seqs), b"",
+                               eos_allowed=self._end_acceptable(stack),
+                               tokens=toks, case=1)
+
+        lf = toks[-1]
+        head = toks[:-1]
+        parse_head = [t for t in head if t.type not in ignores]
+        stack0 = (self._parse_tokens(parse_head) if incremental
+                  else self.parse_from_scratch_stack(parse_head))
+        a0 = self.accept_terminals(stack0)
+
+        shifted = True
+        if lf.type in ignores:
+            eos = self._end_acceptable(stack0)
+            a1 = a0
+        else:
+            s = list(stack0)
+            if self._shift(s, lf.type):
+                stack1 = tuple(s)
+                eos = self._end_acceptable(stack1)
+                a1 = self.accept_terminals(stack1)
+            else:
+                # l_f's current type is not acceptable here — but the token
+                # may still grow into an acceptable terminal (e.g. "!" ->
+                # "!=", identifier prefix -> keyword). Only the 1-length
+                # A0 sequences apply (paper §4.5 Case 1).
+                shifted = False
+                eos = False
+                a1 = []
+                if not a0:
+                    raise ParseError(
+                        f"unexpected {lf.type} ({lf.value!r}) at byte "
+                        f"{lf.pos}: no acceptable terminals")
+
+        seqs = []
+        if shifted:
+            seqs += [(lf.type, t1) for t1 in a1]
+            seqs += [(lf.type, ig) for ig in self.grammar.ignores]
+        seqs += [(t0,) for t0 in a0 if t0 != lf.type]
+        return ParseResult(self._cap(seqs), lf.value, eos_allowed=eos,
+                           tokens=toks, case=1)
+
+    def _cap(self, seqs):
+        # dedupe, keep order
+        seen = set()
+        out = []
+        for s in seqs:
+            if s not in seen:
+                seen.add(s)
+                out.append(s)
+        if self.max_accept is not None:
+            out = out[: self.max_accept]
+        return out
+
+    # ---------------- whole-string recognition (for tests/benchmarks) ----
+
+    def recognize(self, data: bytes) -> bool:
+        """C ∈ L(G)?"""
+        try:
+            toks, unlexed = lex_partial(self.grammar, data)
+        except LexError:
+            return False
+        if unlexed:
+            return False
+        parse_toks = [t for t in toks if t.type not in self.ignores]
+        stack = [self.table.start_state]
+        for t in parse_toks:
+            if not self._shift(stack, t.type):
+                return False
+        return self._can_shift(tuple(stack), END)

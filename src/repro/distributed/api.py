@@ -1,0 +1,43 @@
+"""Logical sharding hints.
+
+Model code calls `shard_hint(x, "logical_name")`; outside a sharding
+context this is the identity (smoke tests, CPU serving). Inside
+`use_sharding(mesh, rules)` (set up by the launcher) it becomes
+`lax.with_sharding_constraint` with the rule's PartitionSpec — keeping
+mesh-axis names out of model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh, rules: dict):
+    """rules: logical name -> PartitionSpec."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def shard_hint(x, name: str):
+    ctx = _rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

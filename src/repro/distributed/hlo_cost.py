@@ -1,0 +1,282 @@
+"""Roofline-term extraction from optimized (post-SPMD) HLO text.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE, so under
+layer-scanned models it undercounts FLOPs/bytes/collectives by the trip
+count (verified empirically; see EXPERIMENTS.md §Dry-run methodology).
+This module parses the partitioned HLO and computes, per device:
+
+  * flops       — MXU work: 2 x |result| x |contracting dims| per `dot`,
+                  scaled by enclosing while-loop trip counts
+  * hbm_bytes   — traffic model: per top-level instruction, result +
+                  operand bytes (fusion internals assumed register/VMEM
+                  resident), scaled by trip counts
+  * collectives — wire bytes with ring factors (see hlo_stats), scaled by
+                  trip counts
+
+Trip counts come from the integer constant in each while-condition
+computation (XLA emits `compare(iter, constant(N)), direction=LT`).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=|body=)%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_INT_RE = re.compile(r"\bconstant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = ("parameter", "constant", "tuple(", "get-tuple-element",
+                   "bitcast", "iota", "after-all", "partition-id",
+                   "replica-id")
+
+
+def _shapes(line: str):
+    out = []
+    for m in _SHAPE_RE.finditer(line):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        out.append((dt, n, [int(d) for d in dims.split(",") if d.strip()]))
+    return out
+
+
+def _split_computations(text: str) -> dict:
+    comps = {}
+    cur = None
+    buf = []
+    for line in text.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_START_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                buf = []
+                continue
+        if line.strip() == "}" and cur is not None:
+            comps[cur] = buf
+            cur = None
+            continue
+        if cur is not None:
+            buf.append(line.strip())
+    return comps
+
+
+def _op_name(line: str):
+    """Op name = first identifier after the (possibly tuple) result type."""
+    eq = line.find("=")
+    if eq < 0:
+        return ""
+    rest = line[eq + 1:].lstrip()
+    if rest.startswith("("):
+        depth = 0
+        for i, c in enumerate(rest):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    rest = rest[i + 1:].lstrip()
+                    break
+    else:
+        sp = rest.find(" ")
+        rest = rest[sp + 1:].lstrip() if sp > 0 else ""
+    m = re.match(r"([a-z][a-z0-9\-]*)\(", rest)
+    return m.group(1) if m else ""
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=")
+_DOT_OPERANDS_RE = re.compile(r"\bdot\(%([\w.\-]+),")
+
+
+def _symtab(lines):
+    """instruction name -> (dtype, elems, dims) of its (first) result."""
+    tab = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        head = ln.split("=", 1)[1].split("(", 1)[0]
+        sh = _shapes(head)
+        if sh:
+            tab[m.group(1)] = sh[0]
+    return tab
+
+
+def _dot_flops(line: str, symtab: dict) -> float:
+    shapes = _shapes(line.split("=", 1)[1].split("(", 1)[0])
+    if not shapes:
+        return 0.0
+    res_elems = shapes[0][1]
+    om = _DOT_OPERANDS_RE.search(line)
+    if not om or om.group(1) not in symtab:
+        return 2.0 * res_elems  # unknown contraction: lower bound
+    lhs_dims = symtab[om.group(1)][2]
+    cm = _CONTRACT_RE.search(line)
+    contract = 1
+    if cm:
+        for d in cm.group(1).split(","):
+            if d.strip():
+                contract *= lhs_dims[int(d)]
+    return 2.0 * res_elems * contract
+
+
+def _group_size(line: str) -> int:
+    gm = _GROUPS_RE.search(line)
+    if gm:
+        ids = [x for x in gm.group(1).split(",") if x.strip()]
+        return max(2, len(ids))
+    gi = _GROUPS_IOTA_RE.search(line)
+    return max(2, int(gi.group(2))) if gi else 2
+
+
+def _collective_wire(kind: str, rb: float, n: int) -> float:
+    if kind == "all-reduce":
+        return 2 * (n - 1) / n * rb
+    if kind == "all-gather":
+        return (n - 1) / n * rb
+    if kind == "reduce-scatter":
+        return (n - 1) * rb
+    if kind == "all-to-all":
+        return (n - 1) / n * rb
+    return rb  # collective-permute
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = _split_computations(text)
+        self._trips: dict[str, int] = {}
+        self._memo: dict[str, tuple] = {}
+        # entry = computation containing a while/... choose the one not
+        # referenced by others; XLA marks it ENTRY but we stripped that —
+        # detect by "main" prefix fallback to the largest.
+        refs = set()
+        for name, lines in self.comps.items():
+            for ln in lines:
+                for cm in _CALL_RE.finditer(ln):
+                    refs.add(cm.group(1))
+                cc = _COND_RE.search(ln)
+                if cc:
+                    refs.add(cc.group(1))
+        entries = [n for n in self.comps if n not in refs]
+        self.entry = None
+        for n in entries:
+            if n.startswith("main") or ".main" in n:
+                self.entry = n
+        if self.entry is None and entries:
+            self.entry = max(entries, key=lambda n: len(self.comps[n]))
+
+    def _trip_count(self, cond_name: str) -> int:
+        if cond_name in self._trips:
+            return self._trips[cond_name]
+        trips = 1
+        for ln in self.comps.get(cond_name, []):
+            for cm in _CONST_INT_RE.finditer(ln):
+                trips = max(trips, int(cm.group(1)))
+        self._trips[cond_name] = trips
+        return trips
+
+    def analyze(self, name: str | None = None) -> dict:
+        name = name or self.entry
+        if name in self._memo:
+            return self._memo[name]
+        flops = 0.0
+        bytes_ = 0.0
+        coll = defaultdict(lambda: {"count": 0.0, "wire_bytes": 0.0})
+        lines = self.comps.get(name, [])
+        symtab = _symtab(lines)
+        for ln in lines:
+            op = _op_name(ln)
+            if op == "dot":
+                flops += _dot_flops(ln, symtab)
+            # bytes: skip no-traffic ops; while-loop traffic is accounted
+            # by its body (counting the carry tuple here would double it).
+            # Traffic model = result bytes per instruction (operand shapes
+            # are not inline in optimized HLO; producers were counted when
+            # defined). dynamic-update-slice aliases its big operand in
+            # place — the written window was already counted at its
+            # producer — so it contributes 0, not a full stacked-buffer
+            # rewrite per layer-scan iteration.
+            if op and op not in ("while", "dynamic-update-slice",
+                                 "scatter") and \
+                    not any(op.startswith(s.rstrip("(")) for s in
+                            _SKIP_BYTES_OPS):
+                bytes_ += sum(s[1] * _DTYPE_BYTES[s[0]]
+                              for s in _shapes(ln))
+            for ck in _COLLECTIVES:
+                if op == ck or op == ck + "-start":
+                    rb = sum(s[1] * _DTYPE_BYTES[s[0]]
+                             for s in _shapes(ln.split("(", 1)[0]))
+                    n = _group_size(ln)
+                    coll[ck]["count"] += 1
+                    coll[ck]["wire_bytes"] += _collective_wire(ck, rb, n)
+            # recurse into calls
+            if "while(" in ln:
+                cm = _CALL_RE.search(ln)      # body=
+                cond = _COND_RE.search(ln)
+                trips = self._trip_count(cond.group(1)) if cond else 1
+                if cm:
+                    sub = self.analyze(cm.group(1))
+                    flops += trips * sub["flops"]
+                    bytes_ += trips * sub["hbm_bytes"]
+                    for k, v in sub["collectives"].items():
+                        coll[k]["count"] += trips * v["count"]
+                        coll[k]["wire_bytes"] += trips * v["wire_bytes"]
+            elif "fusion(" in ln or "to_apply=" in ln or " call(" in ln:
+                cm = _CALL_RE.search(ln)
+                if cm and cm.group(1) in self.comps:
+                    sub = self.analyze(cm.group(1))
+                    flops += sub["flops"]
+                    # fusion internals don't touch HBM; bytes counted at
+                    # the call site above. But nested collectives/dots do.
+                    for k, v in sub["collectives"].items():
+                        coll[k]["count"] += v["count"]
+                        coll[k]["wire_bytes"] += v["wire_bytes"]
+        res = {"flops": flops, "hbm_bytes": bytes_,
+               "collectives": {k: dict(v) for k, v in coll.items()}}
+        res["wire_bytes"] = sum(v["wire_bytes"]
+                                for v in res["collectives"].values())
+        self._memo[name] = res
+        return res
+
+
+def roofline_counts(hlo_text: str) -> dict:
+    return HloCost(hlo_text).analyze()
+
+
+_WIDEN_RE = re.compile(
+    r"%wrapped_convert[\w.]*\s*=\s*f32\[([0-9,]+)\][^=]*fusion\(")
+
+
+def bf16_widening_correction(hlo_text: str, min_bytes: int = 32 << 20) -> int:
+    """Bytes over-reported by the CPU backend's bf16->f32 widening of
+    while-loop tensors (wrapped_convert fusions producing big f32 copies
+    of bf16 loop state). The TPU backend keeps these in bf16, so the
+    corrected temp estimate subtracts half of each widened f32 buffer.
+    Returns the total number of bytes to subtract."""
+    saved = 0
+    for m in _WIDEN_RE.finditer(hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            if d.strip():
+                n *= int(d)
+        b = n * 4
+        if b >= min_bytes:
+            saved += b // 2
+    return saved

@@ -1,0 +1,85 @@
+"""Collective-traffic accounting from compiled/optimized HLO text.
+
+cost_analysis() has FLOPs and HBM bytes but no collective volume, so we
+parse the partitioned HLO (shapes there are PER-DEVICE) and estimate wire
+bytes per device with ring-algorithm factors:
+
+  all-reduce        2(N-1)/N x bytes(result)
+  all-gather        (N-1)/N  x bytes(result)
+  reduce-scatter    (N-1)    x bytes(result)   (operand = N x result)
+  all-to-all        (N-1)/N  x bytes(result)
+  collective-permute 1       x bytes(result)
+
+N = replica-group size parsed from the op's replica_groups attribute.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_OP_RE = re.compile(
+    r"=\s+(?:\()?\s*((?:[a-z0-9]+\[[0-9,]*\][^\s]*|\([^)]*\)))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", )
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """-> {op_kind: {"count": int, "result_bytes": int, "wire_bytes": int},
+          "total_wire_bytes": int}"""
+    out = defaultdict(lambda: {"count": 0, "result_bytes": 0,
+                               "wire_bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # counted at -start
+        type_str, kind = m.group(1), m.group(2)
+        rb = _shape_bytes(type_str)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            ids = [x for x in gm.group(1).split(",") if x.strip()]
+            n = max(2, len(ids))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            n = max(2, int(gi.group(2))) if gi else 2
+        if kind == "all-reduce":
+            wire = 2 * (n - 1) / n * rb
+        elif kind == "all-gather":
+            wire = (n - 1) / n * rb
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * rb
+        elif kind == "all-to-all":
+            wire = (n - 1) / n * rb
+        else:  # collective-permute
+            wire = rb
+        d = out[kind]
+        d["count"] += 1
+        d["result_bytes"] += rb
+        d["wire_bytes"] += int(wire)
+    result = {k: dict(v) for k, v in out.items()}
+    result["total_wire_bytes"] = sum(v["wire_bytes"] for v in out.values())
+    return result

@@ -1,0 +1,240 @@
+"""Per-architecture sharding rules (pjit PartitionSpecs).
+
+Mesh axes: ("data", "model") single-pod 16x16, ("pod", "data", "model")
+multi-pod 2x16x16. The pod axis is pure data parallelism (batch sharded
+over ("pod","data")).
+
+Parameter rules (megatron-style tensor parallelism on "model"):
+  * column-parallel (wq/wk/wv/w_gate/w_up/w_in/...): last dim on model
+  * row-parallel (wo/w_down/w_out): contracted dim on model
+  * MoE expert weights [E,D,F]: expert dim on model (expert parallelism)
+  * embed [V,D] / lm_head [D,V]: vocab dim on model
+  * 1-D params replicate; any non-divisible dim falls back to replicated
+    (e.g. smollm's 15 heads on a 16-way model axis).
+
+KV caches: batch on data; kv-head dim on model when divisible, otherwise
+the cache *sequence* dim goes on model (flash-decode-style partial
+attention — GSPMD inserts the softmax all-reduces).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(n, mesh, axis) -> bool:
+    if isinstance(axis, tuple):
+        size = int(np.prod([mesh.shape[a] for a in axis]))
+    else:
+        size = mesh.shape[axis]
+    return n % size == 0
+
+
+def _dp(mesh, n):
+    """data axes if divisible, else fewer axes, else None."""
+    axes = data_axes(mesh)
+    if _div(n, mesh, tuple(axes)):
+        return tuple(axes) if len(axes) > 1 else axes[0]
+    if len(axes) > 1 and _div(n, mesh, axes[-1]):
+        return axes[-1]
+    return None
+
+
+_COL = ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_gelu", "w_rec",
+        "w_a", "w_i", "router")
+_ROW = ("wo", "w_down", "w_out")
+
+
+def param_spec(path_str: str, shape, mesh, fsdp: bool = False) -> P:
+    """Sharding rule for one parameter leaf. Leaves under ['groups'] /
+    ['encoder'] carry one leading layer-stack dim (never sharded).
+    With fsdp=True, the largest remaining divisible dim is additionally
+    sharded over the data axes (pjit-FSDP: GSPMD all-gathers at use
+    sites) — required for the >=33B archs whose weights exceed HBM under
+    tensor parallelism alone."""
+    stacked = ("['groups']" in path_str) or ("['encoder']" in path_str)
+    pre = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+    name = path_str.rsplit("['", 1)[-1].rstrip("']")
+
+    def mp(n):
+        return "model" if _div(n, mesh, "model") else None
+
+    spec = None
+    is_moe = "['moe']" in path_str
+    if len(core) <= 1:
+        spec = [None] * len(core)
+    elif is_moe and name in ("w_gate", "w_up", "w_down") and len(core) == 3:
+        # Expert parallelism: E on model. (H2b tried contraction-dim-on-
+        # model + E-on-data instead: collective term regressed 70->112 s
+        # on kimi prefill — the reduce-scatter of the [B,E,C,F] hidden is
+        # worse than the baseline flows. See EXPERIMENTS.md Perf H2.)
+        spec = [mp(core[0]), None, None]
+    elif name == "embed":
+        spec = [mp(core[0]), None]
+    elif name == "lm_head":
+        spec = [None, mp(core[1])]
+    elif name in _COL:
+        spec = [None] * (len(core) - 1) + [mp(core[-1])]
+    elif name in _ROW:
+        spec = [None] * len(core)
+        spec[-2] = mp(core[-2])
+    elif name == "conv_w":
+        spec = [None, mp(core[-1])]
+    else:
+        spec = [None] * len(core)
+
+    if fsdp and len(core) >= 2:
+        dpa = data_axes(mesh)
+        dax = tuple(dpa) if len(dpa) > 1 else dpa[0]
+        # Prefer sharding a NON-contracted dim: gathering the weight is a
+        # small collective, while a sharded contraction dim makes GSPMD
+        # all-reduce the (much larger) activation partial sums
+        # (EXPERIMENTS.md Perf H2: 1.9 TB/device of all-reduce on kimi
+        # prefill when expert D was the fsdp dim).
+        contracted = None  # (H2a: excluding contraction dims measured
+        # no change — GSPMD re-shards to its preferred strategy anyway)
+        best = None
+        for i, s in enumerate(spec):
+            if s is None and i != contracted and \
+                    _div(core[i], mesh, tuple(dpa)):
+                if best is None or core[i] > core[best]:
+                    best = i
+        if best is None:
+            for i, s in enumerate(spec):
+                if s is None and _div(core[i], mesh, tuple(dpa)):
+                    if best is None or core[i] > core[best]:
+                        best = i
+        if best is not None:
+            spec[best] = dax
+    return P(*pre, *spec)
+
+
+def needs_fsdp(abstract_params, mesh, budget_bytes: float = 3.5e9) -> bool:
+    """True when bf16 weights exceed `budget_bytes`/device under tensor
+    parallelism alone."""
+    total = sum(leaf.size * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+                for leaf in jax.tree.leaves(abstract_params))
+    return total / mesh.shape["model"] > budget_bytes
+
+
+def params_shardings(abstract_params, mesh, fsdp: bool = False):
+    def rule(path, leaf):
+        return NamedSharding(
+            mesh, param_spec(jax.tree_util.keystr(path), leaf.shape, mesh,
+                             fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def opt_state_shardings(abstract_opt, mesh, zero: bool = True):
+    """Optimizer-moment shardings. With zero=True (ZeRO-1 style), each
+    moment additionally shards its largest not-yet-sharded dim over the
+    data axes — Adam moments dominate training memory at scale."""
+    def rule(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = list(param_spec(ps, leaf.shape, mesh))
+        while len(spec) < leaf.ndim:
+            spec.append(None)
+        if zero:
+            dpa = data_axes(mesh)
+            free = [i for i, s in enumerate(spec) if s is None]
+            # pick the largest divisible free dim
+            best = None
+            for i in free:
+                if _div(leaf.shape[i], mesh, tuple(dpa)):
+                    if best is None or leaf.shape[i] > leaf.shape[best]:
+                        best = i
+            if best is not None:
+                spec[best] = tuple(dpa) if len(dpa) > 1 else dpa[0]
+        return NamedSharding(mesh, P(*spec))
+
+    def top(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        if ps.startswith("['step']"):
+            return NamedSharding(mesh, P())
+        return rule(path, leaf)
+    return jax.tree_util.tree_map_with_path(top, abstract_opt)
+
+
+def batch_shardings(abstract_batch, mesh):
+    def rule(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 0
+        dp = _dp(mesh, b) if leaf.ndim else None
+        return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+    return jax.tree_util.tree_map_with_path(rule, abstract_batch)
+
+
+def cache_shardings(abstract_caches, mesh, cfg):
+    """Caches are [count, B, ...] stacked trees."""
+    def rule(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        name = ps.rsplit("['", 1)[-1].rstrip("']")
+        shape = leaf.shape
+        if len(shape) < 2:
+            return NamedSharding(mesh, P())
+        B = shape[1]
+        dp = _dp(mesh, B)
+        if name in ("k", "v") and len(shape) == 5:
+            _, _, L, K, Dh = shape
+            if _div(K, mesh, "model"):
+                return NamedSharding(mesh, P(None, dp, None, "model", None))
+            if _div(L, mesh, "model"):
+                # sequence-sharded cache (flash-decode style)
+                return NamedSharding(mesh, P(None, dp, "model", None, None))
+            if _div(Dh, mesh, "model"):
+                return NamedSharding(mesh, P(None, dp, None, None, "model"))
+            return NamedSharding(mesh, P(None, dp, None, None, None))
+        if name == "kv_pos" and len(shape) == 3:
+            return NamedSharding(mesh, P(None, dp, None))
+        if name == "h" and len(shape) == 5:    # ssm state [c,B,Hs,N,P]
+            Hs = shape[2]
+            mp = "model" if _div(Hs, mesh, "model") else None
+            return NamedSharding(mesh, P(None, dp, mp, None, None))
+        if name == "h" and len(shape) == 3:    # rglru state [c,B,R]
+            R = shape[2]
+            mp = "model" if _div(R, mesh, "model") else None
+            return NamedSharding(mesh, P(None, dp, mp))
+        if name == "conv" and len(shape) == 4:
+            C = shape[3]
+            mp = "model" if _div(C, mesh, "model") else None
+            return NamedSharding(mesh, P(None, dp, None, mp))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+    return jax.tree.map(
+        lambda l: None, abstract_caches) if abstract_caches is None else \
+        jax.tree_util.tree_map_with_path(rule, abstract_caches)
+
+
+def activation_rules(mesh, cfg, batch_size: int, seq_parallel: bool = False):
+    """Logical-name rules consumed by shard_hint (distributed/api.py).
+
+    seq_parallel=True shards the sequence dim of activations over
+    `model` — the fallback parallelism when attention heads don't divide
+    the model axis (e.g. smollm's 15 heads; hillclimb §Perf H1)."""
+    dpa = _dp(mesh, batch_size)
+    mp_v = "model" if _div(cfg.vocab_size, mesh, "model") else None
+    mp_e = "model" if cfg.num_experts and _div(cfg.num_experts, mesh,
+                                               "model") else None
+    kv_mp = "model" if cfg.num_kv_heads and _div(cfg.num_kv_heads, mesh,
+                                                 "model") else None
+    rules = {
+        "act_bsd": P(dpa, "model" if seq_parallel else None, None),
+        # [B, S, K, Dh] K/V before blocked attention: heads on model when
+        # divisible, otherwise explicitly replicated ONCE (H2c)
+        "attn_kv": P(dpa, None, kv_mp, None),
+        "logits_bsv": P(dpa, None, mp_v),
+        "logits_bv": P(dpa, mp_v),
+        # MoE dispatch/combine buffers [B,E,C,D]: sharded on batch + D —
+        # NOT on E — so the index scatter (dispatch) and gather (combine)
+        # are shard-local; the expert einsums against E-sharded weights
+        # are where GSPMD inserts the expert-parallel collectives.
+        "moe_becd": P(dpa, None, None,
+                      "model" if _div(cfg.d_model, mesh, "model") else None),
+    }
+    return rules

@@ -1,0 +1,21 @@
+"""Public op: attention with kernel/oracle dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              backend: str = "auto", block_q: int = 128,
+              block_k: int = 128):
+    if backend == "jnp":
+        return attention_ref(q, k, v, causal=causal, window=window)
+    interpret = jax.default_backend() != "tpu"
+    if backend == "auto" and interpret and q.shape[1] * k.shape[1] > 1 << 18:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=min(block_q, q.shape[1]),
+                           block_k=min(block_k, k.shape[1]),
+                           interpret=interpret)

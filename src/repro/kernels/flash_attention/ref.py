@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash_attention kernel (direct softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,Sq,H,Dh]; k,v [B,Sk,K,Dh] (GQA, H multiple of K) -> [B,Sq,H,Dh].
+    q positions are right-aligned to k positions (q_offset = Sk - Sq)."""
+    B, Sq, H, Dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / (Dh ** 0.5)
+    qg = (q * scale).astype(jnp.float32).reshape(B, Sq, K, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    iq = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    ik = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= ik <= iq
+    if window:
+        mask &= ik > iq - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, Dh).astype(q.dtype)

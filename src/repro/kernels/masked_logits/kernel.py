@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused mask-row gather + bitwise union + logits mask.
+
+This is the paper's accelerator offload (§3.2 "parallelizing ... by
+offloading them to a GPU") adapted to TPU:
+
+  * mask rows stay bit-PACKED (uint32, 32 tokens/word) end-to-end; the
+    union is a bitwise-OR over a [A, BV/32] VMEM tile (one 128-lane
+    vector op per word-block) and bits are tested in-register while the
+    logits tile streams through VMEM — the [V] boolean mask never touches
+    HBM.
+  * the row ids are scalar-prefetched (PrefetchScalarGridSpec) so the
+    store row for grid step (b, a) is selected by the BlockSpec
+    index_map — the TPU-idiomatic dynamic gather.
+
+Grid: (B, V_blocks, A) with A innermost; the output logits block
+(b, vblk) is revisited across a, accumulating the union in a VMEM
+scratch, and the masked logits are written on the last a step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(rows_ref,            # scalar-prefetch [B, A] int32
+            eos_ref,             # scalar-prefetch [B] int32
+            logits_ref,          # [1, BV]
+            store_ref,           # [1, BW] uint32 (row selected by index_map)
+            out_ref,             # [1, BV]
+            acc_ref,             # scratch [1, BW] uint32
+            *, eos_id: int, num_accept: int, block_v: int):
+    b = pl.program_id(0)
+    vblk = pl.program_id(1)
+    a = pl.program_id(2)
+
+    @pl.when(a == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rid = rows_ref[b, a]
+    word = jnp.where(rid >= 0, store_ref[...], jnp.uint32(0))
+    acc_ref[...] |= word
+
+    @pl.when(a == num_accept - 1)
+    def _finish():
+        words = acc_ref[0, :]                       # [BW] uint32
+        # unpack: bit j of word w guards vocab index 32*w + j
+        idx = jax.lax.broadcasted_iota(jnp.int32, (block_v,), 0)
+        wsel = words[idx // 32]
+        bit = (wsel >> (idx % 32).astype(jnp.uint32)) & jnp.uint32(1)
+        allow = bit == jnp.uint32(1)
+        # EOS override
+        gpos = vblk * block_v + idx
+        allow |= (gpos == eos_id) & (eos_ref[b] > 0)
+        lg = logits_ref[0, :]
+        out_ref[0, :] = jnp.where(allow, lg,
+                                  jnp.asarray(NEG_INF, lg.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("eos_id", "block_v",
+                                             "interpret"))
+def masked_logits(logits, store, rows, eos_allowed, *, eos_id: int = 1,
+                  block_v: int = 4096, interpret: bool = True):
+    """logits [B,V], store [R,W] uint32, rows [B,A] int32,
+    eos_allowed [B] bool -> [B,V] masked logits."""
+    B, V = logits.shape
+    R, W = store.shape
+    A = rows.shape[1]
+    block_v = min(block_v, V)
+    assert V % block_v == 0 and block_v % 32 == 0, (V, block_v)
+    bw = block_v // 32
+    nv = V // block_v
+
+    grid = (B, nv, A)
+    kernel = functools.partial(_kernel, eos_id=eos_id, num_accept=A,
+                               block_v=block_v)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_v), lambda b, v, a, rows, eos: (b, v)),
+                pl.BlockSpec(
+                    (1, bw),
+                    lambda b, v, a, rows, eos: (jnp.maximum(rows[b, a], 0), v)),
+            ],
+            out_specs=pl.BlockSpec((1, block_v),
+                                   lambda b, v, a, rows, eos: (b, v)),
+            scratch_shapes=[pltpu.VMEM((1, bw), jnp.uint32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, V), logits.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(rows.astype(jnp.int32), eos_allowed.astype(jnp.int32), logits, store)
+    return out

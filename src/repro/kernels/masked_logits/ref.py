@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the masked_logits kernel.
+
+Semantics: for each batch row b, union the packed mask-store rows
+`rows[b, :]` (int32 row ids, -1 = padding), unpack the resulting bitmask,
+and replace logits outside the mask with NEG_INF. `eos_allowed[b]`
+additionally opens the EOS position (paper: EOS is legal iff C_k ∈ L(G),
+decided host-side by the parser).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def masked_logits_ref(logits, store, rows, eos_allowed, eos_id: int = 1):
+    """logits [B,V], store [R,W] uint32, rows [B,A] int32,
+    eos_allowed [B] bool -> masked logits [B,V]."""
+    B, V = logits.shape
+    safe = jnp.maximum(rows, 0)
+    gathered = store[safe]                                   # [B,A,W]
+    gathered = jnp.where((rows >= 0)[..., None], gathered, jnp.uint32(0))
+    words = jax.lax.reduce(gathered, jnp.uint32(0), jnp.bitwise_or,
+                           dimensions=(1,))                  # [B,W]
+    bits = (words[:, :, None] >> jnp.arange(32, dtype=jnp.uint32)) & \
+        jnp.uint32(1)
+    mask = bits.reshape(B, -1)[:, :V].astype(bool)
+    mask = mask.at[:, eos_id].set(mask[:, eos_id] | eos_allowed)
+    return jnp.where(mask, logits, jnp.asarray(NEG_INF, logits.dtype))

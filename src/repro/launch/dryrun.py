@@ -1,0 +1,343 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture x input
+shape) on the production mesh, record memory/cost/collective stats.
+
+The two lines above MUST precede any jax import: the dry-run builds a
+16x16 (and 2x16x16) mesh out of 512 host placeholder devices. Run as its
+own process (`python -m repro.launch.dryrun ...`); tests and benches see
+the single real CPU device.
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-370m --shape train_4k
+  python -m repro.launch.dryrun --arch kimi-k2-1t-a32b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --all            # every combo, subprocesses
+  python -m repro.launch.dryrun --all --multi-pod
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.api import use_sharding
+from repro.distributed.hlo_stats import collective_stats
+from repro.distributed.sharding import (activation_rules, batch_shardings,
+                                        cache_shardings, opt_state_shardings,
+                                        params_shardings)
+from repro.launch.mesh import (HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.shapes import (SHAPES, applicable, input_specs,
+                                 variant_for_shape)
+from repro.models.model import build_model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def count_params(abstract_params, cfg):
+    """(total_params, active_params) — active discounts expert weights by
+    top-k/E (MoE forward touches only routed experts)."""
+    total = 0
+    active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(abstract_params)[0]
+    for path, leaf in flat:
+        ps = jax.tree_util.keystr(path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "['moe']" in ps and any(
+                f"['{w}']" in ps for w in ("w_gate", "w_up", "w_down")):
+            active += n * cfg.experts_per_token / max(cfg.num_experts, 1)
+        else:
+            active += n
+    return total, int(active)
+
+
+def _jit_target(model, mode, specs, mesh, microbatch: int = 1):
+    """-> (jitted fn, ordered abstract args)."""
+    from repro.distributed.sharding import needs_fsdp
+    cfg = model.cfg
+    fsdp = needs_fsdp(specs["params"], mesh)
+    p_sh = params_shardings(specs["params"], mesh, fsdp=fsdp)
+    if mode == "train":
+        from repro.training.optimizer import AdamWConfig, apply_updates
+
+        def train_step(params, opt_state, batch):
+            if microbatch > 1:
+                # gradient accumulation: scan over microbatches; the
+                # remat residual stack shrinks by the microbatch factor
+                # (the activation-memory lever — EXPERIMENTS.md §Perf)
+                def micro(carry, mb):
+                    acc, lsum = carry
+                    (loss, _), grads = jax.value_and_grad(
+                        model.loss, has_aux=True)(params, mb)
+                    acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32) / microbatch,
+                        acc, grads)
+                    return (acc, lsum + loss / microbatch), None
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(microbatch,
+                                        x.shape[0] // microbatch,
+                                        *x.shape[1:]),
+                    batch)
+                # grad accumulator: ZeRO-sharded like the Adam moments
+                # (unconstrained, GSPMD replicated it across data -> OOM)
+                mu_sh = o_sh["mu"]
+                acc0 = jax.tree.map(
+                    lambda p, s: jax.lax.with_sharding_constraint(
+                        jnp.zeros(p.shape, jnp.float32), s),
+                    params, mu_sh)
+                (grads, loss), _ = jax.lax.scan(
+                    micro, (acc0, jnp.zeros((), jnp.float32)), mbs)
+            else:
+                (loss, _), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, batch)
+            params2, opt_state2, om = apply_updates(
+                AdamWConfig(), params, grads, opt_state,
+                update_shardings=o_sh["mu"], param_shardings=p_sh)
+            return params2, opt_state2, loss
+
+        o_sh = opt_state_shardings(specs["opt_state"], mesh)
+        b_sh = batch_shardings(specs["batch"], mesh)
+        fn = jax.jit(train_step, in_shardings=(p_sh, o_sh, b_sh),
+                     donate_argnums=(0, 1))
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+        return fn, args
+    if mode == "prefill":
+        b_sh = batch_shardings(specs["batch"], mesh)
+
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+
+        fn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+        return fn, (specs["params"], specs["batch"])
+    if mode == "decode":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.sharding import _div
+        from repro.kernels.masked_logits.ref import masked_logits_ref
+        c_sh = cache_shardings(specs["caches"], mesh, cfg)
+        B = specs["token"].shape[0]
+        t_sh = batch_shardings({"t": specs["token"]}, mesh)["t"]
+        # mask store sharded over the packed-word (vocab) dim on `model`,
+        # aligned with vocab-sharded logits (DESIGN.md §3 — beyond-paper:
+        # the union + apply is then fully local)
+        W = specs["mask_store"].shape[1]
+        mp_w = "model" if _div(W, mesh, "model") else None
+        s_sh = NamedSharding(mesh, P(None, mp_w))
+
+        def serve_step(params, caches, token, pos, mask_store, mask_rows,
+                       eos_allowed):
+            logits, caches = model.decode_step(params, caches, token, pos)
+            masked = masked_logits_ref(logits, mask_store, mask_rows,
+                                       eos_allowed)
+            nxt = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+            return nxt, masked, caches
+
+        fn = jax.jit(serve_step,
+                     in_shardings=(p_sh, c_sh, t_sh, t_sh, s_sh, t_sh,
+                                   t_sh),
+                     donate_argnums=(1,))
+        return fn, (specs["params"], specs["caches"], specs["token"],
+                    specs["pos"], specs["mask_store"], specs["mask_rows"],
+                    specs["eos_allowed"])
+    raise ValueError(mode)
+
+
+# gradient-accumulation factor per arch for train_4k (keeps the remat
+# residual stack within HBM; chosen via the §Perf iteration log)
+DEFAULT_MICROBATCH = {
+    "internlm2-1.8b": 2,
+    "qwen1.5-0.5b": 2,
+    "smollm-360m": 2,
+    "mamba2-370m": 2,
+    "deepseek-coder-33b": 16,
+    "recurrentgemma-9b": 4,
+    "kimi-k2-1t-a32b": 16,
+    "llama-3.2-vision-90b": 16,
+    "qwen3-moe-30b-a3b": 16,
+    "whisper-base": 2,
+}
+
+
+def run_one(arch: str, shape: str, multi_pod: bool = False,
+            save: bool = True, verbose: bool = True,
+            microbatch: int | None = None,
+            seq_parallel: bool = False) -> dict:
+    ok, why = applicable(get_config(arch), shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "skipped": why}
+        if save:
+            _save(rec)
+        return rec
+
+    cfg = variant_for_shape(get_config(arch), shape)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    mode, specs = input_specs(model, shape)
+    info = SHAPES[shape]
+    rules = activation_rules(mesh, cfg, info["global_batch"],
+                             seq_parallel=seq_parallel)
+    if microbatch is None:
+        microbatch = DEFAULT_MICROBATCH.get(arch, 1) if mode == "train" else 1
+
+    t0 = time.time()
+    with use_sharding(mesh, rules):
+        fn, args = _jit_target(model, mode, specs, mesh, microbatch)
+        lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    # XLA's cost_analysis counts while-loop bodies once (layer scans!), so
+    # roofline terms come from our trip-count-aware HLO analyzer.
+    from repro.distributed.hlo_cost import roofline_counts
+    hlo_text = compiled.as_text()
+    rc = roofline_counts(hlo_text)
+    flops_dev = float(rc["flops"])
+    bytes_dev = float(rc["hbm_bytes"])
+    coll = rc["collectives"]
+    coll["total_wire_bytes"] = rc["wire_bytes"]
+    wire_dev = float(rc["wire_bytes"])
+    xla_cost = {"flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+
+    total_p, active_p = count_params(specs["params"], cfg)
+    if mode == "train":
+        tokens = info["global_batch"] * info["seq_len"]
+        model_flops = 6.0 * active_p * tokens
+    elif mode == "prefill":
+        tokens = info["global_batch"] * info["seq_len"]
+        model_flops = 2.0 * active_p * tokens
+    else:
+        tokens = info["global_batch"]
+        model_flops = 2.0 * active_p * tokens
+
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mem_fields = {}
+    for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        if hasattr(mem, f):
+            mem_fields[f] = int(getattr(mem, f))
+    # the CPU backend widens bf16 while-loop state to f32 (wrapped_convert
+    # fusions); the TPU backend keeps bf16 — correct the estimate and
+    # report both (methodology: EXPERIMENTS.md §Dry-run)
+    from repro.distributed.hlo_cost import bf16_widening_correction
+    widen = bf16_widening_correction(hlo_text)
+    mem_fields["cpu_bf16_widening_bytes_removed"] = int(widen)
+    peak_bytes = mem_fields.get("temp_size_in_bytes", 0) + \
+        mem_fields.get("argument_size_in_bytes", 0) - widen
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "mode": mode,
+        "chips": chips, "microbatch": microbatch,
+        "seq_parallel": seq_parallel,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev,
+        "hbm_bytes_per_device": bytes_dev,
+        "wire_bytes_per_device": wire_dev,
+        "collectives": coll,
+        "xla_cost_analysis": xla_cost,
+        "memory": mem_fields,
+        "fits_hbm": bool(peak_bytes <= HBM_BYTES),
+        "hbm_utilization": peak_bytes / HBM_BYTES,
+        "params_total": total_p,
+        "params_active": active_p,
+        "model_flops_global": model_flops,
+        "hlo_flops_global": flops_dev * chips,
+        "useful_flops_ratio":
+            model_flops / max(flops_dev * chips, 1.0),
+        "roofline": {**{k: float(v) for k, v in terms.items()},
+                     "bottleneck": bottleneck},
+    }
+    if verbose:
+        print(json.dumps({k: rec[k] for k in
+                          ("arch", "shape", "mesh", "mode", "compile_s",
+                           "fits_hbm", "hbm_utilization",
+                           "useful_flops_ratio")}, indent=None))
+        print("  roofline:", {k: f"{v:.3e}" for k, v in terms.items()},
+              "->", bottleneck)
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec):
+    os.makedirs(ART_DIR, exist_ok=True)
+    fn = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(ART_DIR, fn), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run_all(multi_pod: bool, archs=None, shapes=None, timeout: int = 3600):
+    """Each combo in its own subprocess (isolates compile memory)."""
+    archs = archs or ARCH_IDS
+    shapes = shapes or list(SHAPES)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape]
+            if multi_pod:
+                cmd.append("--multi-pod")
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=timeout,
+                               env={**os.environ,
+                                    "PYTHONPATH": os.environ.get(
+                                        "PYTHONPATH", "src")})
+            status = "ok" if r.returncode == 0 else "FAIL"
+            print(f"[{status}] {arch} x {shape} "
+                  f"({time.time() - t0:.0f}s)")
+            if r.returncode != 0:
+                failures.append((arch, shape, r.stderr[-2000:]))
+    for arch, shape, err in failures:
+        print(f"\n=== FAILURE {arch} x {shape} ===\n{err}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--seq-parallel", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        archs = [args.arch] if args.arch else None
+        shapes = [args.shape] if args.shape else None
+        failures = run_all(args.multi_pod, archs, shapes)
+        sys.exit(1 if failures else 0)
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    run_one(args.arch, args.shape, args.multi_pod,
+            microbatch=args.microbatch, seq_parallel=args.seq_parallel)
+
+
+if __name__ == "__main__":
+    main()

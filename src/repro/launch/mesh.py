@@ -1,0 +1,26 @@
+"""Production mesh definition (assignment: 16x16 single pod = 256 chips,
+2x16x16 multi-pod = 512 chips). A function, not a module-level constant,
+so importing never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Mesh over whatever devices exist (tests / CPU demos)."""
+    n = jax.device_count()
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline targets; see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per direction)
+HBM_BYTES = 16e9                # v5e HBM capacity per chip

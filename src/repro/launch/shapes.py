@@ -1,0 +1,111 @@
+"""Assigned input shapes + per-(arch, shape) input ShapeDtypeStruct specs.
+
+``input_specs(cfg, shape)`` returns abstract inputs (no allocation) for
+the step function the shape exercises:
+  * train_4k     -> train_step(params, opt_state, batch)
+  * prefill_32k  -> prefill(params, batch)
+  * decode_*     -> decode_step(params, caches, token, pos)
+
+Applicability carve-outs (DESIGN.md §4):
+  * long_500k needs bounded state: ssm/hybrid run natively; dense/moe/vlm
+    run the sliding-window variant (window 8192); whisper is skipped.
+  * whisper decode shapes drive the *decoder* serve_step; the conv/mel
+    frontend is stubbed via precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, mode="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, mode="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, mode="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, mode="decode"),
+}
+
+SLIDING_WINDOW_FOR_LONG = 8192
+
+
+def applicable(cfg, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k":
+        if cfg.arch_type == "audio":
+            return False, ("whisper-base is full-attention enc-dec; no "
+                           "faithful sub-quadratic variant (DESIGN.md §4)")
+    return True, ""
+
+
+def variant_for_shape(cfg, shape: str):
+    """Config actually lowered for this shape."""
+    if shape == "long_500k" and cfg.arch_type in ("dense", "moe", "vlm"):
+        return replace(cfg, sliding_window=SLIDING_WINDOW_FOR_LONG)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg, seq_len: int, batch: int, with_labels: bool):
+    b = {"tokens": _sds((batch, seq_len), jnp.int32)}
+    if with_labels:
+        b["labels"] = _sds((batch, seq_len), jnp.int32)
+        b["loss_mask"] = _sds((batch, seq_len), jnp.float32)
+    if cfg.arch_type == "vlm":
+        b["image_embeds"] = _sds((batch, cfg.num_image_tokens, cfg.d_model),
+                                 jnp.bfloat16)
+    if cfg.arch_type == "audio":
+        b["frames"] = _sds((batch, cfg.audio_frames, cfg.d_model),
+                           jnp.bfloat16)
+    return b
+
+
+def input_specs(model, shape: str):
+    """-> (mode, specs dict). specs keys depend on mode:
+    train:   params, opt_state, batch
+    prefill: params, batch
+    decode:  params, caches, token, pos
+    """
+    cfg = model.cfg
+    info = SHAPES[shape]
+    S, B, mode = info["seq_len"], info["global_batch"], info["mode"]
+    params = model.abstract_params()
+    if mode == "train":
+        from repro.training.optimizer import init_opt_state
+        opt_state = jax.eval_shape(init_opt_state, params)
+        return mode, {
+            "params": params,
+            "opt_state": opt_state,
+            "batch": batch_specs(cfg, S, B, with_labels=True),
+        }
+    if mode == "prefill":
+        return mode, {
+            "params": params,
+            "batch": batch_specs(cfg, S, B, with_labels=False),
+        }
+    if mode == "decode":
+        caches = jax.eval_shape(
+            lambda: model.init_decode_caches(B, S))
+        # the serve step includes the paper's grammar mask: packed DFA
+        # mask-store rows (uint32 bit-words over the vocab) + per-request
+        # row ids from the host-side incremental parser
+        words = (cfg.vocab_size + 31) // 32
+        words = ((words + 15) // 16) * 16   # model-axis divisible
+        return mode, {
+            "params": params,
+            "caches": caches,
+            "token": _sds((B,), jnp.int32),
+            "pos": _sds((B,), jnp.int32),
+            "mask_store": _sds((MASK_STORE_ROWS, words), jnp.uint32),
+            "mask_rows": _sds((B, MAX_ACCEPT), jnp.int32),
+            "eos_allowed": _sds((B,), jnp.bool_),
+        }
+    raise ValueError(mode)
+
+
+# sized for the Python grammar scale the paper reports (|Γ|=94 terminals,
+# a few thousand DFA states x (|Γ|+1) rows)
+MASK_STORE_ROWS = 16384
+MAX_ACCEPT = 48

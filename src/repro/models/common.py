@@ -1,0 +1,305 @@
+"""Shared model components: norms, RoPE, chunked (flash-style) attention in
+pure jnp, embeddings, losses, init helpers.
+
+TPU adaptation note (DESIGN.md §3): prefill attention never materializes
+the [S, S] score matrix — it is an online-softmax scan over KV chunks
+(lax.scan), which is what bounds compiled HBM at 32k/500k context. The
+Pallas `flash_attention` kernel is the hot-path twin with explicit VMEM
+BlockSpecs; the jnp path here is the oracle + the dry-run lowering path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------- init helpers -------------------------------
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.bfloat16):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ----------------------------- norms / rope -------------------------------
+
+def rms_norm(x, weight, eps):
+    """RMSNorm with an f32 *reduction* but no f32 image of x: the sum of
+    squares is a contraction with f32 accumulation, so XLA never sees an
+    elementwise convert(x) it could hoist out of the backward layer loop
+    (that hoist materialized an f32 copy of the whole [L,B,S,D] residual
+    stack — 12.9 GB/device on internlm2 train_4k; EXPERIMENTS.md §Perf)."""
+    sq = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(sq / x.shape[-1] + eps)
+    return (x * inv[..., None].astype(x.dtype)) * weight
+
+
+def rope_frequencies(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x [..., S, H, Dh], positions [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(dh, theta), dtype=jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,S,dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+# ------------------------ chunked causal attention -------------------------
+
+def _gqa_scores(q, k):
+    """q [B,Sq,H,Dh], k [B,Sk,K,Dh] with H = K*G -> scores [B,H,Sq,Sk]
+    (f32 accumulation; operands stay in their dtype so no full-size f32
+    image of K is ever materialized)."""
+    B, Sq, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    return s.reshape(B, H, Sq, k.shape[1])
+
+
+def _gqa_out(p, v):
+    """p [B,H,Sq,Sk], v [B,Sk,K,Dh] -> [B,Sq,H,Dh] (f32 accumulation)."""
+    B, H, Sq, Sk = p.shape
+    K = v.shape[2]
+    G = H // K
+    pg = p.reshape(B, K, G, Sq, Sk)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pg, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, v.shape[-1])
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      window: int = 0, chunk: int = 1024,
+                      kv_valid_len=None, q_chunk: int = 0):
+    """Online-softmax attention over KV chunks, additionally blocked over
+    the query dim (lax.map over q blocks) so peak score-buffer memory is
+    [B,H,q_chunk,chunk] regardless of sequence length.
+
+    q [B,Sq,H,Dh]; k,v [B,Sk,K,Dh] (GQA). `q_offset`: absolute position of
+    q[0] (for decode, q_offset = pos). `window`>0 = sliding window.
+    `kv_valid_len` (scalar or [B]) masks out cache positions >= valid.
+    """
+    B, Sq, H, Dh = q.shape
+    q_chunk = q_chunk or chunk
+    # Pin K/V to their attention layout ONCE, before the q-block scan:
+    # otherwise GSPMD re-gathers every KV chunk inside every q-block
+    # iteration (measured 125k tiny all-gathers = 2.1 TB/device on kimi
+    # prefill_32k; EXPERIMENTS.md Perf H2c).
+    from repro.distributed.api import shard_hint
+    k = shard_hint(k, "attn_kv")
+    v = shard_hint(v, "attn_kv")
+    if Sq > q_chunk and Sq % q_chunk == 0:
+        nq = Sq // q_chunk
+        qb = q.reshape(B, nq, q_chunk, H, Dh).swapaxes(0, 1)
+
+        def one(args):
+            i, qblk = args
+            return _kv_chunked_attention(
+                qblk, k, v, causal=causal,
+                q_offset=q_offset + i * q_chunk, window=window,
+                chunk=chunk, kv_valid_len=kv_valid_len)
+
+        out = jax.lax.map(one, (jnp.arange(nq), qb))
+        return out.swapaxes(0, 1).reshape(B, Sq, H, Dh)
+    return _kv_chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                 window=window, chunk=chunk,
+                                 kv_valid_len=kv_valid_len)
+
+
+def _kv_chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                          window: int = 0, chunk: int = 1024,
+                          kv_valid_len=None):
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+    qf = (q * scale).astype(q.dtype)
+
+    if Sk <= chunk:
+        s = _gqa_scores(qf, k)
+        s = _mask_scores(s, Sq, Sk, 0, q_offset, causal, window, kv_valid_len)
+        p = jax.nn.softmax(s, axis=-1)
+        return _gqa_out(p.astype(q.dtype), v).astype(q.dtype)
+
+    nchunks = (Sk + chunk - 1) // chunk
+    pad = nchunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        base_valid = kv_valid_len if kv_valid_len is not None else Sk
+    else:
+        base_valid = kv_valid_len
+    kc = k.reshape(B, nchunks, chunk, *k.shape[2:]).swapaxes(0, 1)
+    vc = v.reshape(B, nchunks, chunk, *v.shape[2:]).swapaxes(0, 1)
+
+    def body(carry, xs):
+        acc, m, denom, idx = carry
+        kb, vb = xs
+        s = _gqa_scores(qf, kb)                          # [B,H,Sq,chunk] f32
+        s = _mask_scores(s, Sq, chunk, idx * chunk, q_offset, causal,
+                         window, base_valid)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom = denom * alpha + p.sum(axis=-1)
+        # p [B,H,Sq,chunk] x v [B,chunk,K,Dh] -> [B,H,Sq,Dh] (GQA grouped)
+        K = vb.shape[2]
+        G = H // K
+        pg = p.astype(vb.dtype).reshape(B, K, G, Sq, chunk)
+        og = jnp.einsum("bkgqs,bskd->bkgqd", pg, vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + og.reshape(B, H, Sq, Dh)
+        return (acc, m_new, denom, idx + 1), None
+
+    acc0 = jnp.zeros((B, H, Sq, Dh), jnp.float32)
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, denom, _), _ = jax.lax.scan(body, (acc0, m0, d0, 0), (kc, vc))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)          # [B,Sq,H,Dh]
+
+
+def _expand_kv(kv, H):
+    """[B,S,K,Dh] -> [B,S,H,Dh] by repeating groups (for einsum in scan)."""
+    B, S, K, Dh = kv.shape
+    G = H // K
+    return jnp.repeat(kv, G, axis=2)
+
+
+def _mask_scores(s, Sq, Sk_chunk, kv_start, q_offset, causal, window,
+                 kv_valid_len):
+    """s [B,H,Sq,Sk_chunk]; positions: q_pos = q_offset + iq,
+    kv_pos = kv_start + ik."""
+    iq = jnp.arange(Sq)[:, None] + q_offset
+    ik = jnp.arange(Sk_chunk)[None, :] + kv_start
+    mask = jnp.ones((Sq, Sk_chunk), bool)
+    if causal:
+        mask &= ik <= iq
+    if window:
+        mask &= ik > iq - window
+    m = mask[None, None]
+    if kv_valid_len is not None:
+        vl = jnp.asarray(kv_valid_len)
+        if vl.ndim == 0:
+            m = m & (ik < vl)[None, None]
+        else:
+            m = m & (ik[None] < vl[:, None, None])[:, None]
+    return jnp.where(m, s, NEG_INF)
+
+
+# ----------------------------- attention layer -----------------------------
+
+def init_attention(key, cfg, dtype):
+    D, H, K, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * Dh), dtype=dtype),
+        "wk": dense_init(ks[1], (D, K * Dh), dtype=dtype),
+        "wv": dense_init(ks[2], (D, K * Dh), dtype=dtype),
+        "wo": dense_init(ks[3], (H * Dh, D), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((K * Dh,), dtype)
+        p["bv"] = jnp.zeros((K * Dh,), dtype)
+    return p
+
+
+def qkv_proj(p, x, cfg):
+    B, S, D = x.shape
+    H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return (q.reshape(B, S, H, Dh), k.reshape(B, S, K, Dh),
+            v.reshape(B, S, K, Dh))
+
+
+def attn_out(p, o):
+    B, S, H, Dh = o.shape
+    return o.reshape(B, S, H * Dh) @ p["wo"]
+
+
+# ----------------------------- FFN -----------------------------------------
+
+def init_ffn(key, d_model, d_ff, dtype):
+    ks = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def ffn(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ----------------------------- embedding / loss ----------------------------
+
+def init_embed(key, cfg, dtype):
+    ks = split_keys(key, 2)
+    p = {"embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                             scale=1.0, dtype=dtype),
+         "final_norm": jnp.ones((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                  dtype=dtype)
+    return p
+
+
+def embed_tokens(p, tokens):
+    return p["embed"][tokens]
+
+
+def lm_logits(p, x, cfg):
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return x @ p["embed"].T
+    return x @ p["lm_head"]
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """logits [B,S,V] (any float dtype), labels [B,S] int.
+
+    The gold logit is picked with an iota-compare reduction rather than
+    take_along_axis so a vocab-sharded logits tensor reduces with a small
+    all-reduce instead of an all-gather (GSPMD-friendly)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = (jnp.arange(V, dtype=labels.dtype) == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,446 @@
+"""Layer kinds assembled into pattern blocks by decoder.py.
+
+Each kind implements:
+  init_<kind>(key, cfg, dtype) -> params
+  <kind>_train(params, x, ctx)            -> x
+  <kind>_prefill(params, x, ctx)          -> (x, cache)
+  <kind>_decode(params, x, cache, ctx)    -> (x, cache)
+
+ctx is a dict: {"positions": [B,S] or None, "pos": scalar decode position,
+"image_embeds": [B,Ni,D] (vlm), "enc_out": [B,Se,D] (audio),
+"cache_len": static cache length, "window": per-layer window override}.
+
+KV caches store rotated K plus a per-slot absolute-position array
+(`kv_pos`, −1 = empty) so ring-buffer (sliding-window) and linear caches
+share one masking rule: valid ⇔ 0 ≤ kv_pos ≤ q_pos (∧ q_pos − kv_pos <
+window).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (NEG_INF, apply_rope, attn_out, chunked_attention,
+                     dense_init, ffn, init_attention, init_ffn, qkv_proj,
+                     rms_norm, split_keys)
+from .moe import init_moe, moe_ffn
+from .rglru import (init_rglru, init_rglru_cache, rglru_decode,
+                    rglru_prefill, rglru_train)
+from .ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_prefill, ssm_train
+from ..distributed.api import shard_hint
+
+
+# ======================= attention with explicit cache =====================
+
+def _window_of(cfg, ctx):
+    return ctx.get("window", cfg.sliding_window)
+
+
+def _cache_len(cfg, ctx, seq_len):
+    w = _window_of(cfg, ctx)
+    L = ctx.get("cache_len", seq_len)
+    return min(L, w) if w else L
+
+
+def init_kv_cache(cfg, batch, length, dtype, kv_heads=None):
+    K = kv_heads or cfg.num_kv_heads
+    Dh = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, length, K, Dh), dtype),
+        "v": jnp.zeros((batch, length, K, Dh), dtype),
+        "kv_pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def _self_attention_train(p, x, cfg, ctx, causal=True):
+    B, S, D = x.shape
+    q, k, v = qkv_proj(p, x, cfg)
+    positions = ctx.get("positions")
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=causal,
+                          window=_window_of(cfg, ctx), chunk=cfg.attn_chunk)
+    return attn_out(p, o)
+
+
+def _self_attention_prefill(p, x, cfg, ctx):
+    """Returns (out, cache) — cache covers the last `cache_len` positions
+    (ring layout slot = pos % cache_len)."""
+    B, S, D = x.shape
+    q, k, v = qkv_proj(p, x, cfg)
+    positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=True,
+                          window=_window_of(cfg, ctx), chunk=cfg.attn_chunk)
+    L = _cache_len(cfg, ctx, S)
+    cache = init_kv_cache(cfg, B, L, x.dtype)
+    take = jnp.arange(L) + max(0, S - L)          # last L absolute positions
+    slot = take % L
+    kv_pos = jnp.broadcast_to(jnp.where(take < S, take, -1)[None, :],
+                              (B, L))
+    cache = {
+        "k": cache["k"].at[:, slot].set(k[:, take].astype(cache["k"].dtype)),
+        "v": cache["v"].at[:, slot].set(v[:, take].astype(cache["v"].dtype)),
+        "kv_pos": jnp.zeros((B, L), jnp.int32).at[:, slot].set(kv_pos),
+    }
+    return attn_out(p, o), cache
+
+
+def _self_attention_decode(p, x, cache, cfg, ctx):
+    """x [B,1,D]; ctx['pos'] is a scalar or [B] int32 vector of absolute
+    positions (per-request positions in the serving engine)."""
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(ctx["pos"], jnp.int32), (B,))
+    q, k, v = qkv_proj(p, x, cfg)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    L = cache["k"].shape[1]
+    slot = pos % L                                            # [B]
+    # where-blend instead of scatter: GSPMD partitions a batched scatter
+    # on a sharded cache via an f32-upcast rewrite (observed 10.7 GB of
+    # f32 cache copies on the VLM decode); the select is shard-agnostic.
+    hit = (jnp.arange(L)[None, :] == slot[:, None])           # [B, L]
+    kc = jnp.where(hit[:, :, None, None], k.astype(cache["k"].dtype),
+                   cache["k"])
+    vc = jnp.where(hit[:, :, None, None], v.astype(cache["v"].dtype),
+                   cache["v"])
+    kv_pos = jnp.where(hit, pos[:, None], cache["kv_pos"])
+
+    # mask from absolute positions
+    w = _window_of(cfg, ctx)
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])          # [B, L]
+    if w:
+        valid &= kv_pos > (pos[:, None] - w)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    K = kc.shape[2]
+    G = cfg.num_heads // K
+    qg = (q * scale).reshape(B, 1, K, G, -1)
+    # bf16 operands + f32 accumulation: never materialize an f32 image of
+    # the KV cache (it dominated decode HBM on the 100-layer VLM)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pr.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, cfg.num_heads, -1).astype(x.dtype)
+    return attn_out(p, o), {"k": kc, "v": vc, "kv_pos": kv_pos}
+
+
+# ============================ layer kinds ==================================
+
+# ---- "attn": self-attention + dense FFN (pre-norm residual) ----
+
+def init_attn_layer(key, cfg, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+ZERO_AUX = {"lb": 0.0, "z": 0.0}
+
+
+def _zero_aux():
+    return {"lb": jnp.zeros((), jnp.float32), "z": jnp.zeros((), jnp.float32)}
+
+
+def attn_train(p, x, cfg, ctx):
+    x = x + _self_attention_train(p["attn"], rms_norm(x, p["ln1"],
+                                                      cfg.norm_eps), cfg, ctx)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard_hint(x, "act_bsd"), _zero_aux()
+
+
+def attn_prefill(p, x, cfg, ctx):
+    o, cache = _self_attention_prefill(p["attn"],
+                                       rms_norm(x, p["ln1"], cfg.norm_eps),
+                                       cfg, ctx)
+    x = x + o
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard_hint(x, "act_bsd"), cache
+
+
+def attn_decode(p, x, cache, cfg, ctx):
+    o, cache = _self_attention_decode(p["attn"],
+                                      rms_norm(x, p["ln1"], cfg.norm_eps),
+                                      cache, cfg, ctx)
+    x = x + o
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, cache
+
+
+# ---- "moe": self-attention + MoE FFN ----
+
+def init_moe_layer(key, cfg, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "moe": init_moe(ks[1], cfg, dtype),
+    }
+
+
+def moe_train(p, x, cfg, ctx):
+    x = x + _self_attention_train(p["attn"], rms_norm(x, p["ln1"],
+                                                      cfg.norm_eps), cfg, ctx)
+    y, aux = moe_ffn(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return shard_hint(x + y, "act_bsd"), {"lb": aux["lb_loss"],
+                                          "z": aux["z_loss"]}
+
+
+def moe_prefill(p, x, cfg, ctx):
+    o, cache = _self_attention_prefill(p["attn"],
+                                       rms_norm(x, p["ln1"], cfg.norm_eps),
+                                       cfg, ctx)
+    x = x + o
+    y, _ = moe_ffn(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return shard_hint(x + y, "act_bsd"), cache
+
+
+def moe_decode(p, x, cache, cfg, ctx):
+    o, cache = _self_attention_decode(p["attn"],
+                                      rms_norm(x, p["ln1"], cfg.norm_eps),
+                                      cache, cfg, ctx)
+    x = x + o
+    y, _ = moe_ffn(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x + y, cache
+
+
+# ---- "cross": cross-attention to image/encoder tokens + FFN (VLM) ----
+
+def init_cross_layer(key, cfg, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        "gate": jnp.zeros((1,), dtype),      # tanh-gated residual
+    }
+
+
+def _cross_kv(p, mem, cfg):
+    B, Sm, D = mem.shape
+    K, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = mem @ p["wk"]
+    v = mem @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return k.reshape(B, Sm, K, Dh), v.reshape(B, Sm, K, Dh)
+
+
+def _cross_attention(p, x, k, v, cfg):
+    B, S, D = x.shape
+    H, Dh = cfg.num_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, Dh)
+    o = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return attn_out(p, o)
+
+
+def cross_train(p, x, cfg, ctx):
+    mem = ctx["image_embeds"] if "image_embeds" in ctx else ctx["enc_out"]
+    k, v = _cross_kv(p["attn"], mem, cfg)
+    g = jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype)
+    x = x + g * _cross_attention(p["attn"],
+                                 rms_norm(x, p["ln1"], cfg.norm_eps),
+                                 k, v, cfg)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard_hint(x, "act_bsd"), _zero_aux()
+
+
+def cross_prefill(p, x, cfg, ctx):
+    mem = ctx["image_embeds"] if "image_embeds" in ctx else ctx["enc_out"]
+    k, v = _cross_kv(p["attn"], mem, cfg)
+    g = jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype)
+    x = x + g * _cross_attention(p["attn"],
+                                 rms_norm(x, p["ln1"], cfg.norm_eps),
+                                 k, v, cfg)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard_hint(x, "act_bsd"), {"k": k, "v": v}
+
+
+def cross_decode(p, x, cache, cfg, ctx):
+    g = jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype)
+    x = x + g * _cross_attention(p["attn"],
+                                 rms_norm(x, p["ln1"], cfg.norm_eps),
+                                 cache["k"], cache["v"], cfg)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, cache
+
+
+# ---- "rec": RG-LRU recurrent block + FFN (RecurrentGemma) ----
+
+def init_rec_layer(key, cfg, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "rec": init_rglru(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def rec_train(p, x, cfg, ctx):
+    x = x + rglru_train(p["rec"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard_hint(x, "act_bsd"), _zero_aux()
+
+
+def rec_prefill(p, x, cfg, ctx):
+    o, cache = rglru_prefill(p["rec"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                             cfg)
+    x = x + o
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard_hint(x, "act_bsd"), cache
+
+
+def rec_decode(p, x, cache, cfg, ctx):
+    o, cache = rglru_decode(p["rec"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                            cache, cfg)
+    x = x + o
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, cache
+
+
+# ---- "ssm": Mamba2 block (no separate FFN; norm + SSD + residual) ----
+
+def init_ssm_layer(key, cfg, dtype):
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ssm": init_ssm(key, cfg, dtype),
+    }
+
+
+def ssm_layer_train(p, x, cfg, ctx):
+    return shard_hint(
+        x + ssm_train(p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg),
+        "act_bsd"), _zero_aux()
+
+
+def ssm_layer_prefill(p, x, cfg, ctx):
+    o, cache = ssm_prefill(p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                           cfg)
+    return shard_hint(x + o, "act_bsd"), cache
+
+
+def ssm_layer_decode(p, x, cache, cfg, ctx):
+    o, cache = ssm_decode(p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                          cache, cfg)
+    return x + o, cache
+
+
+# ---- "enc": non-causal encoder layer (Whisper encoder) ----
+
+def init_enc_layer(key, cfg, dtype):
+    return init_attn_layer(key, cfg, dtype)
+
+
+def enc_train(p, x, cfg, ctx):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = qkv_proj(p["attn"], h, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    x = x + attn_out(p["attn"], o)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard_hint(x, "act_bsd"), _zero_aux()
+
+
+# ---- "dec": decoder layer with self + cross (Whisper decoder) ----
+
+def init_dec_layer(key, cfg, dtype):
+    ks = split_keys(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "lnx": jnp.ones((cfg.d_model,), dtype),
+        "xattn": init_attention(ks[1], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": init_ffn(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dec_train(p, x, cfg, ctx):
+    x = x + _self_attention_train(p["attn"],
+                                  rms_norm(x, p["ln1"], cfg.norm_eps),
+                                  cfg, ctx)
+    k, v = _cross_kv(p["xattn"], ctx["enc_out"], cfg)
+    x = x + _cross_attention(p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps),
+                             k, v, cfg)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard_hint(x, "act_bsd"), _zero_aux()
+
+
+def dec_prefill(p, x, cfg, ctx):
+    o, self_cache = _self_attention_prefill(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, ctx)
+    x = x + o
+    k, v = _cross_kv(p["xattn"], ctx["enc_out"], cfg)
+    x = x + _cross_attention(p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps),
+                             k, v, cfg)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard_hint(x, "act_bsd"), {"self": self_cache,
+                                      "cross": {"k": k, "v": v}}
+
+
+def dec_decode(p, x, cache, cfg, ctx):
+    o, self_cache = _self_attention_decode(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cache["self"],
+        cfg, ctx)
+    x = x + o
+    x = x + _cross_attention(p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps),
+                             cache["cross"]["k"], cache["cross"]["v"], cfg)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, {"self": self_cache, "cross": cache["cross"]}
+
+
+# ============================ registry =====================================
+
+KIND_INIT = {
+    "attn": init_attn_layer,
+    "moe": init_moe_layer,
+    "cross": init_cross_layer,
+    "rec": init_rec_layer,
+    "ssm": init_ssm_layer,
+    "enc": init_enc_layer,
+    "dec": init_dec_layer,
+}
+KIND_TRAIN = {
+    "attn": attn_train,
+    "moe": moe_train,
+    "cross": cross_train,
+    "rec": rec_train,
+    "ssm": ssm_layer_train,
+    "enc": enc_train,
+    "dec": dec_train,
+}
+KIND_PREFILL = {
+    "attn": attn_prefill,
+    "moe": moe_prefill,
+    "cross": cross_prefill,
+    "rec": rec_prefill,
+    "ssm": ssm_layer_prefill,
+    "dec": dec_prefill,
+}
+KIND_DECODE = {
+    "attn": attn_decode,
+    "moe": moe_decode,
+    "cross": cross_decode,
+    "rec": rec_decode,
+    "ssm": ssm_layer_decode,
+    "dec": dec_decode,
+}

@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Gated linear recurrence h_t = a_t·h_{t-1} + sqrt(1-a_t²)·(i_t ⊙ x_t) with
+a_t = exp(-c·softplus(Λ)·r_t). Training/prefill uses
+`lax.associative_scan` (log-depth, TPU-friendly); decode is O(1).
+The surrounding block is Griffin's: GeLU branch ⊙ (conv1d → RG-LRU),
+then an output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype):
+    D = cfg.d_model
+    R = cfg.lru_dim
+    Kc = cfg.conv_kernel
+    ks = split_keys(key, 6)
+    return {
+        "w_gelu": dense_init(ks[0], (D, R), dtype=dtype),
+        "w_rec": dense_init(ks[1], (D, R), dtype=dtype),
+        "conv_w": dense_init(ks[2], (Kc, R), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((R,), dtype),
+        "w_a": dense_init(ks[3], (R, R), dtype=dtype),
+        "b_a": jnp.zeros((R,), jnp.float32),
+        "w_i": dense_init(ks[4], (R, R), dtype=dtype),
+        "b_i": jnp.zeros((R,), jnp.float32),
+        "lam": jnp.full((R,), 0.7, jnp.float32),     # Λ
+        "w_out": dense_init(ks[5], (R, D), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _gates(params, x):
+    """x [.., R] -> (log_a, b_t) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) +
+                       params["b_a"])
+    i = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32) +
+                       params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * xf)
+    return a, b
+
+
+def rglru_train(params, x, cfg):
+    y, _ = _rglru_forward(params, x, cfg, return_state=False)
+    return y
+
+
+def rglru_prefill(params, x, cfg):
+    return _rglru_forward(params, x, cfg, return_state=True)
+
+
+def _rglru_forward(params, x, cfg, return_state: bool):
+    """x [B,S,D]."""
+    u = jax.nn.gelu(x @ params["w_gelu"])
+    v_raw = x @ params["w_rec"]
+    v = _causal_conv(v_raw, params["conv_w"], params["conv_b"])
+    a, b = _gates(params, v)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = hh                                           # [B,S,R] f32
+    y = (u.astype(jnp.float32) * h).astype(x.dtype) @ params["w_out"]
+    if not return_state:
+        return y, None
+    K = cfg.conv_kernel - 1
+    S = x.shape[1]
+    conv_cache = (v_raw[:, S - K:, :] if S >= K else
+                  jnp.pad(v_raw, ((0, 0), (K - S, 0), (0, 0))))
+    cache = {"h": h[:, -1, :], "conv": conv_cache.astype(x.dtype)}
+    return y, cache
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    R = cfg.lru_dim
+    return {
+        "h": jnp.zeros((batch, R), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, R), dtype),
+    }
+
+
+def rglru_decode(params, x, cache, cfg):
+    """x [B,1,D] -> ([B,1,D], cache)."""
+    u = jax.nn.gelu(x[:, 0] @ params["w_gelu"])
+    v_raw = x[:, 0] @ params["w_rec"]
+    hist = jnp.concatenate(
+        [cache["conv"], v_raw[:, None, :].astype(cache["conv"].dtype)],
+        axis=1)
+    w = params["conv_w"]
+    v = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                   w.astype(jnp.float32)) + params["conv_b"].astype(
+        jnp.float32)
+    a, b = _gates(params, v)
+    h = a * cache["h"] + b
+    y = ((u.astype(jnp.float32) * h).astype(x.dtype) @
+         params["w_out"])[:, None, :]
+    return y, {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,191 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+TPU adaptation: the SSD "chunked" algorithm is already MXU-shaped — the
+sequence is split into chunks; intra-chunk terms are batched matmuls and
+the inter-chunk term is a first-order recurrence over per-chunk states
+(lax.scan over nchunks, each step a few einsums). Decode is the O(1)
+recurrent update h' = exp(dt·A)·h + dt·(B ⊗ x).
+
+Layout: d_inner = expand*d_model, heads Hs = d_inner/ssm_head_dim (P),
+state N = cfg.ssm_state, single B/C group (ngroups=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+
+def init_ssm(key, cfg, dtype):
+    D = cfg.d_model
+    Din = cfg.ssm_inner
+    Hs = cfg.ssm_heads
+    N = cfg.ssm_state
+    Kc = cfg.conv_kernel
+    ks = split_keys(key, 6)
+    conv_dim = Din + 2 * N           # conv over x, B, C (mamba2 layout)
+    return {
+        # in_proj -> [z, xBC, dt]
+        "w_in": dense_init(ks[0], (D, 2 * Din + 2 * N + Hs), dtype=dtype),
+        "conv_w": dense_init(ks[1], (Kc, conv_dim), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((Hs,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((Hs,), jnp.float32),
+        "dt_bias": jnp.zeros((Hs,), jnp.float32),
+        "w_out": dense_init(ks[2], (Din, D), dtype=dtype),
+        "norm_w": jnp.ones((Din,), dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    Din, N, Hs = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :Din]
+    xBC = proj[..., Din:Din + Din + 2 * N]
+    dt = proj[..., Din + Din + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv_train(xBC, w, b):
+    """Depthwise causal conv over seq. xBC [B,S,C], w [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y, z, w, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+
+
+def ssm_train(params, x, cfg):
+    """x [B,S,D] -> [B,S,D] via chunked SSD."""
+    y, _ = _ssd_forward(params, x, cfg, return_state=False)
+    return y
+
+
+def ssm_prefill(params, x, cfg):
+    """Returns (y, cache) — the final recurrent state feeds decode."""
+    return _ssd_forward(params, x, cfg, return_state=True)
+
+
+def _ssd_forward(params, x, cfg, return_state: bool):
+    B, S, D = x.shape
+    Din, N, Hs, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nch = S // Q
+
+    proj = x @ params["w_in"]
+    z, xBC_raw, dt_raw = _split_proj(cfg, proj)
+    xBC = _causal_conv_train(xBC_raw, params["conv_w"], params["conv_b"])
+    xs = xBC[..., :Din].reshape(B, S, Hs, P).astype(jnp.float32)
+    Bmat = xBC[..., Din:Din + N].astype(jnp.float32)        # [B,S,N]
+    Cmat = xBC[..., Din + N:].astype(jnp.float32)           # [B,S,N]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"])                 # [B,S,Hs]
+    A = -jnp.exp(params["A_log"])                           # [Hs]
+    a = dt * A                                              # [B,S,Hs] (log-decay)
+
+    # chunk reshape
+    xs_c = xs.reshape(B, nch, Q, Hs, P)
+    B_c = Bmat.reshape(B, nch, Q, N)
+    C_c = Cmat.reshape(B, nch, Q, N)
+    dt_c = dt.reshape(B, nch, Q, Hs)
+    a_c = a.reshape(B, nch, Q, Hs)
+    acs = jnp.cumsum(a_c, axis=2)                           # [B,nch,Q,Hs]
+
+    # --- intra-chunk (quadratic within chunk, batched matmuls) ---
+    # L[b,c,h,i,j] = exp(acs_i - acs_j) for i >= j
+    diff = acs[:, :, :, None, :] - acs[:, :, None, :, :]    # [B,nch,Q,Q,Hs]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores CB[b,c,i,j] = C_i . B_j
+    CB = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)
+    M = CB[..., None] * Lmat                                # [B,nch,Q,Q,Hs]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M,
+                         xs_c * dt_c[..., None])
+
+    # --- chunk states: S_c = sum_j exp(acs_Q - acs_j) B_j (dt_j x_j)^T ---
+    decay_to_end = jnp.exp(acs[:, :, -1:, :] - acs)         # [B,nch,Q,Hs]
+    state_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                         B_c, decay_to_end * dt_c, xs_c)    # [B,nch,Hs,N,P]
+
+    # --- inter-chunk recurrence over chunk states ---
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                 # [B,nch,Hs]
+
+    def scan_fn(h, inp):
+        st, dec = inp                                       # [B,Hs,N,P],[B,Hs]
+        h_out = h                                           # state BEFORE chunk
+        h = h * dec[..., None, None] + st
+        return h, h_out
+
+    st_sw = state_c.swapaxes(0, 1)                          # [nch,B,Hs,N,P]
+    dec_sw = chunk_decay.swapaxes(0, 1)
+    h0 = jnp.zeros((B, Hs, N, P), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(scan_fn, h0, (st_sw, dec_sw))
+    h_prev = h_prevs.swapaxes(0, 1)                         # [B,nch,Hs,N,P]
+
+    # --- inter-chunk output: y_j += C_j exp(acs_j) h_prev ---
+    decay_from_start = jnp.exp(acs)                         # [B,nch,Q,Hs]
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                         C_c, h_prev, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(B, S, Hs, P)
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, Din)
+    y = _gated_norm(y, z, params["norm_w"])
+    out = (y.astype(x.dtype) @ params["w_out"])
+    if not return_state:
+        return out, None
+    K = cfg.conv_kernel - 1
+    conv_cache = (xBC_raw[:, S - K:, :] if S >= K else
+                  jnp.pad(xBC_raw, ((0, 0), (K - S, 0), (0, 0))))
+    cache = {"h": h_last, "conv": conv_cache.astype(x.dtype)}
+    return out, cache
+
+
+def init_ssm_cache(cfg, batch, dtype):
+    Hs, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_dim = cfg.ssm_inner + 2 * N
+    return {
+        "h": jnp.zeros((batch, Hs, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(params, x, cache, cfg):
+    """x [B,1,D] single step."""
+    B = x.shape[0]
+    Din, N, Hs, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    proj = x[:, 0] @ params["w_in"]                         # [B, ...]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    # conv with cache
+    hist = jnp.concatenate([cache["conv"],
+                            xBC[:, None, :].astype(cache["conv"].dtype)],
+                           axis=1)                          # [B,K,conv_dim]
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          w.astype(jnp.float32)) + params["conv_b"].astype(
+        jnp.float32)
+    xBC = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+
+    xs = xBC[:, :Din].reshape(B, Hs, P)
+    Bv = xBC[:, Din:Din + N]
+    Cv = xBC[:, Din + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    dec = jnp.exp(dt * A)                                   # [B,Hs]
+    h = cache["h"] * dec[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bv, dt, xs)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, h)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(B, Din)
+    y = _gated_norm(y, z, params["norm_w"])
+    out = (y.astype(x.dtype) @ params["w_out"])[:, None, :]
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,224 @@
+"""Grammar-constrained serving engine (paper Algorithm 3 as a runtime).
+
+Responsibilities:
+  * request queue + round-robin continuous stepping,
+  * per-request incremental parser / GrammarConstraint state (host side),
+  * device decode steps with KV/SSM caches,
+  * masked sampling via the masked_logits kernel path,
+  * the paper's *opportunistic masking* fast path (validate the model's
+    unconstrained proposal before paying for the mask — §5 Baselines),
+  * an exactness wrapper: because the α≤1 mask store over-approximates
+    (sound, not complete — paper §4.4), sampled tokens are verified with
+    the precise parser oracle and rejected/resampled, so emitted text
+    provably stays in L_p(G) and terminates only when in L(G).
+
+The engine is single-host (CPU demo substrate); the batched device path
+used on real meshes is exercised by launch/serve.py and the dry-run.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constrain import GrammarConstraint
+from repro.core.decoding import DecodeConfig, NEG_INF
+from repro.core.tokenizer import ByteTokenizer, EOS_ID
+from repro.kernels.masked_logits.ops import apply_grammar_mask
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: bytes = b""
+    grammar: Optional[str] = None           # None = unconstrained
+    max_new_tokens: int = 128
+    decode: DecodeConfig = field(default_factory=DecodeConfig)
+    seed: int = 0
+
+
+@dataclass
+class RequestState:
+    req: Request
+    caches: object = None
+    pos: int = 0
+    generated: bytes = b""
+    token_ids: list = field(default_factory=list)
+    constraint: Optional[GrammarConstraint] = None
+    done: bool = False
+    finish_reason: str = ""
+    pending_logits: object = None
+    mask_time: float = 0.0
+    mask_computations: int = 0
+    opportunistic_hits: int = 0
+    steps: int = 0
+
+
+@dataclass
+class EngineStats:
+    requests: int = 0
+    tokens: int = 0
+    wall: float = 0.0
+    mask_time: float = 0.0
+    mask_computations: int = 0
+    opportunistic_hits: int = 0
+
+    @property
+    def tokens_per_sec(self):
+        return self.tokens / max(self.wall, 1e-9)
+
+
+class Engine:
+    def __init__(self, model, params, tokenizer: ByteTokenizer,
+                 grammar_bundles: dict, max_len: int = 512,
+                 opportunistic: bool = False, mask_backend: str = "jnp"):
+        """grammar_bundles: name -> (grammar, table, store)."""
+        self.model = model
+        self.params = params
+        self.tok = tokenizer
+        self.bundles = grammar_bundles
+        self.max_len = max_len
+        self.opportunistic = opportunistic
+        self.mask_backend = mask_backend
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=max_len))
+        self._decode = jax.jit(model.decode_step)
+        self._store_dev = {name: jnp.asarray(b[2].packed)
+                           for name, b in grammar_bundles.items()}
+
+    # ------------------------------ lifecycle -----------------------------
+
+    def _start(self, req: Request) -> RequestState:
+        st = RequestState(req=req)
+        if req.grammar is not None:
+            g, tab, store = self.bundles[req.grammar]
+            st.constraint = GrammarConstraint(g, tab, store, self.tok)
+        ids = self.tok.encode(req.prompt) if req.prompt else []
+        if not ids:
+            ids = [2]  # BOS
+        tokens = jnp.asarray([ids], jnp.int32)
+        logits, caches = self._prefill(self.params, {"tokens": tokens})
+        st.caches = caches
+        st.pos = len(ids)
+        st.token_ids = list(ids)
+        st.pending_logits = logits[:, -1]       # prediction for next token
+        return st
+
+    def _logits(self, st: RequestState):
+        if getattr(st, "pending_logits", None) is not None:
+            lg = st.pending_logits
+            st.pending_logits = None
+            return lg
+        tok = jnp.asarray([st.token_ids[-1]], jnp.int32)
+        pos = jnp.asarray([st.pos - 1], jnp.int32)
+        lg, st.caches = self._decode(self.params, st.caches, tok, pos)
+        return lg  # [1, V] device array
+
+    # --------------------------- one decode step --------------------------
+
+    def _select(self, st: RequestState, logits, key) -> int:
+        return int(st.req.decode.select(logits, key)[0])
+
+    def _step(self, st: RequestState, key) -> None:
+        logits = self._logits(st)
+        st.steps += 1
+        req = st.req
+
+        if st.constraint is None:
+            nxt = self._select(st, logits, key)
+            self._commit(st, nxt)
+            return
+
+        gc = st.constraint
+        text = st.generated
+
+        if self.opportunistic:
+            proposal = self._select(st, logits, key)
+            if gc.is_valid_extension(text, proposal):
+                st.opportunistic_hits += 1
+                self._commit(st, proposal)
+                return
+
+        t0 = time.time()
+        sm = gc.step_rows(text)
+        rows = jnp.asarray(sm.rows[None, :])
+        eos = jnp.asarray([sm.eos_allowed])
+        masked = apply_grammar_mask(logits, self._store_dev[req.grammar],
+                                    rows, eos, backend=self.mask_backend)
+        st.mask_time += time.time() - t0
+        st.mask_computations += 1
+
+        # rejection wrapper: the α<=1 mask is sound but over-approximate;
+        # verify with the exact oracle, demote invalid picks, resample. If a
+        # few samples fail, fall back to exact-filtering the allowed set
+        # (cheap: |allowed| oracle calls) so the step never dead-ends while
+        # a valid continuation exists.
+        masked = np.asarray(masked, np.float32)
+        for attempt in range(4):
+            key, sub = jax.random.split(key)
+            nxt = self._select(st, jnp.asarray(masked), sub)
+            if masked[0, nxt] <= NEG_INF / 2:
+                break
+            if nxt == EOS_ID or gc.is_valid_extension(text, nxt):
+                self._commit(st, nxt)
+                return
+            masked[0, nxt] = NEG_INF
+
+        allowed = np.where(masked[0] > NEG_INF / 2)[0]
+        for t in allowed:
+            if not (t == EOS_ID or gc.is_valid_extension(text, int(t))):
+                masked[0, t] = NEG_INF
+        if (masked[0] > NEG_INF / 2).any():
+            key, sub = jax.random.split(key)
+            nxt = self._select(st, jnp.asarray(masked), sub)
+            self._commit(st, nxt)
+            return
+        # nothing valid (should not happen for C_k in L_p(G)) — stop
+        st.done = True
+        st.finish_reason = "mask_exhausted"
+
+    def _commit(self, st: RequestState, token: int):
+        st.token_ids.append(token)
+        st.pos += 1
+        if token == EOS_ID:
+            st.done = True
+            st.finish_reason = "eos"
+            return
+        st.generated += self.tok.id_to_bytes[token]
+        if st.steps >= st.req.max_new_tokens:
+            st.done = True
+            st.finish_reason = "length"
+        if st.pos >= self.max_len - 1:
+            st.done = True
+            st.finish_reason = "max_len"
+
+    # ------------------------------- serve --------------------------------
+
+    def generate(self, requests: list[Request], verbose: bool = False):
+        """Round-robin continuous stepping over all requests."""
+        t0 = time.time()
+        states = [self._start(r) for r in requests]
+        keys = {r.rid: jax.random.PRNGKey(r.seed) for r in requests}
+        active = list(states)
+        while active:
+            for st in list(active):
+                keys[st.req.rid], sub = jax.random.split(keys[st.req.rid])
+                self._step(st, sub)
+                if st.done:
+                    active.remove(st)
+                    if verbose:
+                        print(f"[req {st.req.rid}] {st.finish_reason}: "
+                              f"{st.generated[:70]!r}")
+        stats = EngineStats(
+            requests=len(states),
+            tokens=sum(s.steps for s in states),
+            wall=time.time() - t0,
+            mask_time=sum(s.mask_time for s in states),
+            mask_computations=sum(s.mask_computations for s in states),
+            opportunistic_hits=sum(s.opportunistic_hits for s in states),
+        )
+        return states, stats

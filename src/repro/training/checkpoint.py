@@ -1,0 +1,59 @@
+"""Msgpack checkpointing for param/optimizer pytrees (offline container:
+no orbax). Arrays serialize as (dtype, shape, raw bytes); bfloat16 round-
+trips via a uint16 view."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {"dt": "bfloat16", "sh": list(arr.shape),
+                "b": arr.view(np.uint16).tobytes()}
+    return {"dt": arr.dtype.str, "sh": list(arr.shape), "b": arr.tobytes()}
+
+
+def _unpack_leaf(d):
+    if d["dt"] == "bfloat16":
+        arr = np.frombuffer(d["b"], dtype=np.uint16).reshape(d["sh"])
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    return jnp.asarray(np.frombuffer(d["b"], dtype=np.dtype(d["dt"]))
+                       .reshape(d["sh"]))
+
+
+def save_checkpoint(path: str, tree, step: int = 0, extra: dict = None):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    payload = {
+        "step": step,
+        "extra": extra or {},
+        "leaves": [[jax.tree_util.keystr(k), _pack_leaf(v)]
+                   for k, v in flat],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like_tree):
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    by_key = {k: _unpack_leaf(v) for k, v in payload["leaves"]}
+    leaves = []
+    for k, old in flat:
+        ks = jax.tree_util.keystr(k)
+        if ks not in by_key:
+            raise KeyError(f"checkpoint missing {ks}")
+        new = by_key[ks]
+        if new.shape != old.shape:
+            raise ValueError(f"{ks}: shape {new.shape} != {old.shape}")
+        leaves.append(new)
+    return treedef.unflatten(leaves), payload["step"], payload["extra"]

@@ -1,0 +1,59 @@
+"""Training loop: jitted train_step (loss + grads + AdamW update), metrics
+logging, periodic checkpointing."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .checkpoint import save_checkpoint
+from .optimizer import AdamWConfig, apply_updates, init_opt_state
+
+
+def make_train_step(model, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    losses: list = field(default_factory=list)
+    metrics: list = field(default_factory=list)
+    steps_per_sec: float = 0.0
+
+
+def train(model, params, data_iter, steps: int,
+          opt_cfg: AdamWConfig | None = None, log_every: int = 10,
+          checkpoint_path: str | None = None, checkpoint_every: int = 0,
+          verbose: bool = True) -> tuple:
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    result = TrainResult()
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(data_iter)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            result.losses.append(m["loss"])
+            result.metrics.append(m)
+            if verbose:
+                print(f"step {i:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                      f"lr {m['lr']:.2e} gnorm {m['gnorm']:.2f}")
+        if checkpoint_path and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_path, params, step=i + 1)
+    result.steps_per_sec = steps / max(time.time() - t0, 1e-9)
+    if checkpoint_path:
+        save_checkpoint(checkpoint_path, params, step=steps)
+    return params, result

@@ -1,0 +1,135 @@
+"""Grammar frontend, lexer, LR tables, incremental parser."""
+import json as pyjson
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grammars import BUILTIN, load_grammar
+from repro.core.lexer import LexError, lex_partial
+from repro.core.parser import IncrementalParser, ParseError
+from repro.core.sampling import GrammarSampler
+
+
+@pytest.mark.parametrize("name", BUILTIN)
+def test_grammar_compiles(name):
+    g, tab = load_grammar(name)
+    assert tab.num_states > 3
+    assert g.total_dfa_states > 0
+
+
+# ---------------- JSON vs Python's json module -------------------------
+
+json_values = st.recursive(
+    st.none() | st.booleans() | st.integers(-10**6, 10**6)
+    | st.floats(allow_nan=False, allow_infinity=False, width=32)
+    | st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126,
+                                     exclude_characters='"\\'), max_size=8),
+    lambda ch: st.lists(ch, max_size=4)
+    | st.dictionaries(st.text(alphabet="abcdef_", max_size=6), ch,
+                      max_size=4),
+    max_leaves=10,
+)
+
+
+@settings(max_examples=150, deadline=None)
+@given(v=json_values)
+def test_json_recognizes_python_json(v, grammar_bundle):
+    g, tab, _, _ = grammar_bundle("json")
+    p = IncrementalParser(g, tab)
+    s = pyjson.dumps(v)
+    assert p.recognize(s.encode()), s
+
+
+@pytest.mark.parametrize("bad", [
+    b"{", b"[1,]", b'{"a" 1}', b'{"a": 1,,}', b"tru", b"[1 2]",
+    b'{"a": 1} extra', b"'single'", b"{]",
+])
+def test_json_rejects_invalid(bad, grammar_bundle):
+    g, tab, _, _ = grammar_bundle("json")
+    p = IncrementalParser(g, tab)
+    assert not p.recognize(bad)
+
+
+# ---------------- sampled strings recognized, all grammars --------------
+
+@pytest.mark.parametrize("name", BUILTIN)
+def test_sampled_strings_recognized(name, grammar_bundle):
+    g, tab, _, _ = grammar_bundle(name)
+    p = IncrementalParser(g, tab)
+    gs = GrammarSampler(g, seed=7)
+    for _ in range(20):
+        s = gs.sample(14, max_bytes=400)
+        assert p.recognize(s), s
+
+
+# ---------------- lexer remainder cases --------------------------------
+
+def test_lexer_case2_unlexed_suffix(grammar_bundle):
+    g, _, _, _ = grammar_bundle("calc")
+    toks, rem = lex_partial(g, b"math_sqrt(2.")
+    assert rem == b"2."
+    assert [t.type for t in toks] == ["__MATH_SQRT", "__LPAR"]
+
+
+def test_lexer_case1_complete_final_token(grammar_bundle):
+    g, _, _, _ = grammar_bundle("calc")
+    toks, rem = lex_partial(g, b"math_sqrt(23")
+    assert rem == b""
+    assert toks[-1].type == "INT" and toks[-1].value == b"23"
+
+
+def test_lexer_dead_suffix_raises(grammar_bundle):
+    g, _, _, _ = grammar_bundle("calc")
+    with pytest.raises(LexError):
+        lex_partial(g, b"1 @ 2")
+
+
+def test_lexer_maximal_munch(grammar_bundle):
+    g, _, _, _ = grammar_bundle("minilang")
+    toks, rem = lex_partial(g, b"a<=b ")
+    assert [t.type for t in toks if t.type != "WS"] == \
+        ["NAME", "__LESSTHAN_EQUAL", "NAME"]
+    # keyword vs identifier
+    toks, _ = lex_partial(g, b"iffy ")
+    assert toks[0].type == "NAME"
+    toks, _ = lex_partial(g, b"if ")
+    assert toks[0].type == "__IF"
+
+
+# ---------------- incremental == from-scratch ---------------------------
+
+@pytest.mark.parametrize("name", BUILTIN)
+def test_incremental_matches_scratch(name, grammar_bundle):
+    g, tab, _, _ = grammar_bundle(name)
+    gs = GrammarSampler(g, seed=3)
+    p = IncrementalParser(g, tab)
+    rng = random.Random(0)
+    for _ in range(10):
+        s = gs.sample(12, max_bytes=200)
+        # grow the string in random increments, as an LLM would
+        i = 0
+        while i < len(s):
+            i = min(len(s), i + rng.randint(1, 4))
+            inc = p.partial_parse(s[:i], incremental=True)
+            p2 = IncrementalParser(g, tab)
+            scratch = p2.partial_parse(s[:i], incremental=False)
+            assert inc.remainder == scratch.remainder
+            assert set(inc.accept_sequences) == set(scratch.accept_sequences)
+            assert inc.eos_allowed == scratch.eos_allowed
+
+
+def test_parse_error_on_garbage(grammar_bundle):
+    g, tab, _, _ = grammar_bundle("json")
+    p = IncrementalParser(g, tab)
+    with pytest.raises((ParseError, LexError)):
+        p.partial_parse(b'{"a": 1}}')
+
+
+def test_eos_allowed_iff_complete(grammar_bundle):
+    g, tab, _, _ = grammar_bundle("json")
+    p = IncrementalParser(g, tab)
+    assert p.partial_parse(b'{"a": 1}').eos_allowed
+    assert p.partial_parse(b'{"a": 1} ').eos_allowed  # trailing ignored WS
+    assert not p.partial_parse(b'{"a": 1').eos_allowed
+    assert not p.partial_parse(b'').eos_allowed

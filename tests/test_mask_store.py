@@ -1,0 +1,114 @@
+"""DFA mask store: vectorized construction vs a direct pure-Python dmatch
+oracle (paper Def. 10), plus the soundness property (paper Thm. 1) on
+grammar-sampled valid strings."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grammars import BUILTIN, load_grammar
+from repro.core.sampling import GrammarSampler
+from repro.core.tokenizer import EOS_ID
+
+
+# ---------------- direct dmatch oracle (slow, obviously-correct) --------
+
+def dmatch_oracle(grammar, terminal, q, token: bytes, next_terminal=None):
+    """Def. 10 with Λ = () or (τ',), written naively."""
+    dfa = grammar.terminals[terminal].dfa
+    # cond 1: walk ends live
+    st = q
+    states = [st]
+    for b in token:
+        st = int(dfa.trans[st, b])
+        states.append(st)
+    if dfa.live[st]:
+        return True
+    for i in range(len(token) + 1):
+        if not dfa.finals[states[i]]:
+            continue
+        rest = token[i:]
+        if next_terminal is None:
+            # cond 2: needs nonempty rest
+            if len(rest) > 0:
+                return True
+        else:
+            # cond 3: dmatch(rest, q0', ()) — cond1 or cond2 recursively
+            d2 = grammar.terminals[next_terminal].dfa
+            st2 = d2.start
+            states2 = [st2]
+            for b in rest:
+                st2 = int(d2.trans[st2, b])
+                states2.append(st2)
+            if d2.live[st2]:
+                return True
+            if any(d2.finals[states2[j]] for j in range(len(rest))):
+                return True
+    return False
+
+
+@pytest.mark.parametrize("name", ["calc", "json"])
+def test_store_matches_dmatch_oracle(name, grammar_bundle, tokenizer):
+    g, tab, store, gc = grammar_bundle(name)
+    rng = np.random.default_rng(0)
+    toks = tokenizer.token_bytes()
+    token_ids = rng.choice(np.arange(3, tokenizer.vocab_size), size=60,
+                           replace=False)
+    stride = store.row_stride
+    terms = g.terminal_names
+    for t1 in terms:
+        dfa = g.terminals[t1].dfa
+        qs = [q for q in range(dfa.num_states) if dfa.live[q]]
+        for q in qs[:6]:
+            row0 = store.unpack(store.packed[store.row_m0(t1, q)])
+            for tid in token_ids[:25]:
+                want = dmatch_oracle(g, t1, q, toks[tid])
+                assert bool(row0[tid]) == want, (t1, q, toks[tid], "M0")
+            for t2 in (terms[0], terms[len(terms) // 2], terms[-1]):
+                row1 = store.unpack(store.packed[store.row_m1(t1, q, t2)])
+                for tid in token_ids[25:45]:
+                    want = dmatch_oracle(g, t1, q, toks[tid], t2)
+                    assert bool(row1[tid]) == want, (t1, q, toks[tid], t2)
+
+
+# ---------------- Thm. 1 soundness on valid continuations ---------------
+
+@pytest.mark.parametrize("name", BUILTIN)
+def test_mask_soundness_on_valid_strings(name, grammar_bundle, tokenizer):
+    g, tab, store, gc = grammar_bundle(name)
+    gs = GrammarSampler(g, seed=11)
+    checked = 0
+    for _ in range(8):
+        s = gs.sample(18, max_bytes=250)
+        ids = tokenizer.encode(s)
+        prefix = b""
+        for tid in ids:
+            mask = gc.token_mask(prefix)
+            assert mask[tid], (
+                f"sound mask must keep valid token: {prefix!r} + "
+                f"{tokenizer.id_to_bytes[tid]!r}")
+            prefix += tokenizer.id_to_bytes[tid]
+            checked += 1
+        assert gc.token_mask(s)[EOS_ID], f"EOS must be allowed after {s!r}"
+    assert checked > 15
+
+
+def test_specials_never_allowed(grammar_bundle):
+    g, tab, store, gc = grammar_bundle("json")
+    m = gc.token_mask(b"")
+    assert not m[0] and not m[2]  # PAD, BOS
+    assert not m[EOS_ID]          # empty string is not valid JSON
+
+
+def test_store_rows_layout(grammar_bundle, tokenizer):
+    g, tab, store, gc = grammar_bundle("calc")
+    assert store.packed.shape[0] == g.total_dfa_states * (len(g.terminal_names) + 1)
+    assert store.packed.dtype == np.uint32
+    assert store.packed.shape[1] * 32 >= tokenizer.vocab_size
+
+
+def test_eos_only_when_complete(grammar_bundle):
+    _, _, _, gc = grammar_bundle("calc")
+    assert gc.step_rows(b"1+2").eos_allowed
+    assert not gc.step_rows(b"1+").eos_allowed
+    assert not gc.step_rows(b"math_sqrt(3").eos_allowed
+    assert gc.step_rows(b"math_sqrt(3)").eos_allowed

@@ -1,0 +1,64 @@
+"""Regex -> DFA engine vs Python's `re` (property-based)."""
+import re
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.regex import compile_literal, compile_regex
+
+PATTERNS = [
+    r"[0-9]+",
+    r"[0-9]+\.[0-9]+",
+    r"[a-zA-Z_]\w*",
+    r'"[^"]*"',
+    r"(a|bc)*d",
+    r"0x[0-9a-fA-F]+",
+    r"a{2,4}b?",
+    r"-?\d+(\.\d+)?([eE][-+]?\d+)?",
+    r"'[^'\n]*'",
+    r"(foo|bar|baz)+",
+    r"[^a-z]+",
+]
+
+
+@pytest.mark.parametrize("pat", PATTERNS)
+@settings(max_examples=200, deadline=None)
+@given(s=st.text(alphabet="abcdefxyz0123456789.\"'-+eE_ \n", max_size=10))
+def test_matches_python_re(pat, s):
+    dfa = compile_regex(pat)
+    got = dfa.accepts(s.encode())
+    want = re.fullmatch(pat, s) is not None
+    assert got == want, (pat, s)
+
+
+def test_case_insensitive_literal():
+    d = compile_literal("SELECT", ignore_case=True)
+    assert d.accepts(b"select") and d.accepts(b"SeLeCt")
+    assert not d.accepts(b"selec") and not d.accepts(b"selects")
+
+
+def test_live_states():
+    d = compile_regex(r"[0-9]+\.[0-9]+")
+    q = d.walk(d.start, b"12.")
+    assert d.is_live(q) and not d.finals[q]
+    q2 = d.walk(d.start, b"12.5")
+    assert d.finals[q2]
+    q3 = d.walk(d.start, b"12.5x")
+    assert not d.is_live(q3)
+
+
+def test_hex_escape():
+    d = compile_regex(r"[^\x00-\x1f]+")
+    assert d.accepts(b"abc ")
+    assert not d.accepts(b"a\x01b")
+
+
+def test_minimized_transition_table_shape():
+    d = compile_regex(r"(a|b)*abb")
+    assert d.trans.shape[1] == 256
+    assert d.trans.dtype == np.int32
+    # dead sink exists and self-loops
+    dead = [q for q in range(d.num_states) if not d.live[q]]
+    for q in dead:
+        assert set(d.trans[q].tolist()) <= set(dead)
