@@ -1,0 +1,14 @@
+# Developer entrypoints. PYTHONPATH=src is the repo's import convention.
+
+PY ?= python
+
+.PHONY: test bench docs-check
+
+test:              ## tier-1 test suite (same command CI runs)
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench:             ## paper-table + engine benchmarks (CSV to stdout)
+	PYTHONPATH=src $(PY) benchmarks/run.py
+
+docs-check:        ## fail if src/repro packages are missing from README's module map
+	$(PY) scripts/docs_check.py

@@ -8,6 +8,7 @@ import sys
 import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:

@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""Docs hygiene gate (`make docs-check`).
+
+Fails if any package under src/repro/ is missing from README.md's module
+map, or if the core doc files are absent — so documentation cannot
+silently rot as the codebase grows.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src", "repro")
+REQUIRED_DOCS = ("README.md", os.path.join("docs", "architecture.md"),
+                 os.path.join("benchmarks", "README.md"))
+
+
+def repro_packages() -> list[str]:
+    """Every directory under src/repro containing python code."""
+    out = []
+    for name in sorted(os.listdir(SRC)):
+        path = os.path.join(SRC, name)
+        if not os.path.isdir(path):
+            continue
+        if any(f.endswith(".py") for f in os.listdir(path)):
+            out.append(name)
+    return out
+
+
+def main() -> int:
+    bad = 0
+    for doc in REQUIRED_DOCS:
+        if not os.path.exists(os.path.join(ROOT, doc)):
+            print(f"docs-check: MISSING {doc}")
+            bad += 1
+    readme_path = os.path.join(ROOT, "README.md")
+    readme = open(readme_path).read() if os.path.exists(readme_path) else ""
+    for pkg in repro_packages():
+        # a module-map mention is a backquoted package name
+        if f"`{pkg}" not in readme:
+            print(f"docs-check: package src/repro/{pkg} not mentioned in "
+                  f"README.md module map")
+            bad += 1
+    if bad:
+        print(f"docs-check: FAILED ({bad} problem(s))")
+        return 1
+    print(f"docs-check: OK ({len(repro_packages())} packages documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,6 +25,11 @@ from .parser import IncrementalParser, ParseError
 from .tokenizer import ByteTokenizer, EOS_ID
 
 
+# uniform accept-sequence cap: the batched engine's [B, A] row matrix uses
+# one A for every slot, so the default lives here rather than per-call
+MAX_ACCEPT = 48
+
+
 @dataclass
 class StepMask:
     """Host-side result for one sequence at one decoding step."""
@@ -37,7 +42,7 @@ class GrammarConstraint:
     """Per-sequence constrained-decoding state (owns an incremental parser)."""
 
     def __init__(self, grammar: Grammar, table: LRTable, store: MaskStore,
-                 tokenizer: ByteTokenizer, max_accept: int = 48):
+                 tokenizer: ByteTokenizer, max_accept: int = MAX_ACCEPT):
         self.grammar = grammar
         self.store = store
         self.tokenizer = tokenizer
@@ -75,6 +80,40 @@ class GrammarConstraint:
         arr[:n] = rows[:n]
         return StepMask(rows=arr, eos_allowed=res.eos_allowed,
                         num_sequences=len(res.accept_sequences))
+
+    # ---- batched host side of Algorithm 2 (one row matrix per step) -----
+
+    @staticmethod
+    def step_rows_batch(constraints, texts, max_accept: int = MAX_ACCEPT,
+                        row_offsets=None):
+        """Fill the batched engine's per-step mask inputs in one pass.
+
+        constraints: length-B list of GrammarConstraint or None (None =
+        unconstrained slot -> all-pad rows, eos False). texts: length-B
+        list of partial outputs (bytes). row_offsets: optional [B] int
+        offsets shifting each slot's row ids into a store concatenated
+        across grammars (the engine keeps one device array for all
+        grammars; a slot's rows index its grammar's block).
+
+        Returns (rows [B, A] int32 with -1 pad, eos_allowed [B] bool,
+        num_sequences [B] int32).
+        """
+        B = len(constraints)
+        rows = np.full((B, max_accept), -1, dtype=np.int32)
+        eos = np.zeros(B, dtype=bool)
+        nseq = np.zeros(B, dtype=np.int32)
+        for b, gc in enumerate(constraints):
+            if gc is None:
+                continue
+            sm = gc.step_rows(texts[b])
+            n = min(max_accept, sm.rows.shape[0])
+            r = sm.rows[:n]
+            if row_offsets is not None:
+                r = np.where(r >= 0, r + int(row_offsets[b]), r)
+            rows[b, :n] = r
+            eos[b] = sm.eos_allowed
+            nseq[b] = sm.num_sequences
+        return rows, eos, nseq
 
     # ---- host reference mask (numpy; the device path lives in kernels/) --
 

@@ -67,6 +67,43 @@ def sample(logits: jnp.ndarray, key: jax.Array, temperature: float = 1.0,
     return jax.random.categorical(key, logits, axis=-1)
 
 
+def select_batch(logits: jnp.ndarray, keys: jnp.ndarray,
+                 greedy_flags: jnp.ndarray, temperature: jnp.ndarray,
+                 top_k: jnp.ndarray, top_p: jnp.ndarray) -> jnp.ndarray:
+    """Per-row token selection over a whole decode batch in one fused call.
+
+    The batched engine's device-side selector: each slot carries its own
+    decode config, vectorized as arrays (the per-request generality of
+    `DecodeConfig.select`, without B separate device calls):
+
+      logits       [B, V]  (already grammar-masked where applicable)
+      keys         [B, 2]  uint32 PRNG keys (one stream per slot)
+      greedy_flags [B]     bool — row ignores sampling params, takes argmax
+      temperature  [B]     f32
+      top_k        [B]     int32, <= 0 disables
+      top_p        [B]     f32, >= 1.0 disables
+
+    Returns [B] int32 sampled ids.
+    """
+    B, V = logits.shape
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k: demote everything below each row's k-th largest
+    kidx = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V) - 1
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    kth = jnp.take_along_axis(sorted_desc, kidx[:, None], axis=-1)
+    scaled = jnp.where(scaled < kth, NEG_INF, scaled)
+    # top-p (nucleus) over the top-k-filtered rows; p >= 1 keeps everything
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    cum = jnp.cumsum(jax.nn.softmax(sorted_desc, axis=-1), axis=-1)
+    p = jnp.where(top_p < 1.0, top_p, 2.0)[:, None]
+    cutoff_idx = jnp.minimum(jnp.sum(cum < p, axis=-1, keepdims=True), V - 1)
+    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx, axis=-1)
+    scaled = jnp.where(scaled < cutoff, NEG_INF, scaled)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(greedy_flags, jnp.argmax(logits, axis=-1),
+                     sampled).astype(jnp.int32)
+
+
 @dataclass
 class DecodeConfig:
     method: str = "greedy"            # greedy | sample
@@ -83,6 +120,19 @@ class DecodeConfig:
             return sample(logits, key, self.temperature, self.top_k,
                           self.top_p)
         raise ValueError(self.method)
+
+    @staticmethod
+    def batch_arrays(configs: list["DecodeConfig"]):
+        """Stack per-slot configs into `select_batch` parameter arrays
+        (greedy [B] bool, temperature [B] f32, top_k [B] i32, top_p [B] f32)."""
+        for c in configs:
+            if c.method not in ("greedy", "sample"):
+                raise ValueError(c.method)
+        return (np.array([c.method == "greedy" for c in configs], bool),
+                np.array([c.temperature for c in configs], np.float32),
+                np.array([c.top_k or 0 for c in configs], np.int32),
+                np.array([1.0 if c.top_p is None else c.top_p
+                          for c in configs], np.float32))
 
 
 # ------------------------- host-level beam search --------------------------

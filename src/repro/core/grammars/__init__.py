@@ -1,8 +1,9 @@
 """Builtin grammars (paper §4.7: "shipped with several built-in grammars").
 
 `load_grammar(name)` compiles (and memoizes) the grammar + LR table.
-Users add grammars by dropping `<name>.lark` files here or calling
-`Grammar(text)` directly.
+The builtin definitions are embedded in `builtin_defs.py` (no data files
+required); users add or override grammars by dropping `<name>.lark` files
+here or calling `Grammar(text)` directly.
 """
 from __future__ import annotations
 
@@ -10,6 +11,7 @@ import os
 
 from ..grammar import Grammar
 from ..lr import build_lr_table
+from .builtin_defs import EMBEDDED
 
 _DIR = os.path.dirname(__file__)
 _CACHE: dict[tuple[str, bool], tuple] = {}
@@ -19,10 +21,12 @@ BUILTIN = ("json", "calc", "sql", "minilang")
 
 def grammar_text(name: str) -> str:
     path = os.path.join(_DIR, f"{name}.lark")
-    if not os.path.exists(path):
-        raise FileNotFoundError(f"no builtin grammar {name!r}; have {BUILTIN}")
-    with open(path) as f:
-        return f.read()
+    if os.path.exists(path):
+        with open(path) as f:
+            return f.read()
+    if name in EMBEDDED:
+        return EMBEDDED[name]
+    raise FileNotFoundError(f"no builtin grammar {name!r}; have {BUILTIN}")
 
 
 def load_grammar(name: str, lalr: bool = True):

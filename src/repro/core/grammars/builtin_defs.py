@@ -1,0 +1,97 @@
+"""Embedded builtin grammar definitions (paper §4.7).
+
+These are the source of truth for the builtin grammars; `load_grammar`
+falls back to them when no `<name>.lark` override file is present in this
+package directory, so the repo needs no checked-in data files and the
+test-suite / examples / benchmarks work from a bare checkout. Dropping a
+`<name>.lark` file next to this module still overrides (or extends) the
+builtins — that remains the user extension path.
+
+Syntax is the Lark subset documented in `repro.core.grammar`.
+"""
+from __future__ import annotations
+
+JSON = r"""
+// RFC-8259-shaped JSON (byte-level strings, no unicode validation).
+start: value
+value: object | array | STRING | NUMBER | "true" | "false" | "null"
+object: "{" [pair ("," pair)*] "}"
+pair: STRING ":" value
+array: "[" [value ("," value)*] "]"
+
+STRING: /"(\\.|[^"\\])*"/
+NUMBER: /-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?/
+WS: /[ \t\r\n]+/
+%ignore WS
+"""
+
+CALC = r"""
+// Arithmetic with a few math_* builtins. Deliberately has NO identifier
+// terminal: unknown bytes (e.g. '@') are immediate lex errors, and
+// "math_sqrt" is a literal keyword token (__MATH_SQRT).
+start: expr
+expr: term | expr "+" term | expr "-" term
+term: factor | term "*" factor | term "/" factor
+factor: atom | "-" factor
+atom: INT | FLOAT | func | "(" expr ")"
+func: ("math_sqrt" | "math_sin" | "math_cos" | "math_exp") "(" expr ")"
+
+INT: /[0-9]+/
+FLOAT: /[0-9]+\.[0-9]+([eE][+-]?[0-9]+)?/
+WS: /[ \t\n]+/
+%ignore WS
+"""
+
+SQL = r"""
+// A SELECT-only SQL subset (uppercase keywords, lowercase identifiers —
+// the case split keeps keywords and NAME disjoint in the lexer).
+start: query
+query: "SELECT" select_list "FROM" NAME [where_clause] [order_clause] [limit_clause] ";"
+select_list: "*" | column ("," column)*
+column: agg | NAME
+agg: ("COUNT" | "SUM" | "AVG" | "MIN" | "MAX") "(" agg_arg ")"
+agg_arg: "*" | NAME
+where_clause: "WHERE" cond
+cond: pred (("AND" | "OR") pred)*
+pred: NAME cmp_op value
+cmp_op: "=" | "<" | ">" | "<=" | ">=" | "!="
+value: NUMBER | STRING | NAME
+order_clause: "ORDER" "BY" NAME ["ASC" | "DESC"]
+limit_clause: "LIMIT" NUMBER
+
+NAME: /[a-z_][a-z0-9_]*/
+NUMBER: /-?[0-9]+(\.[0-9]+)?/
+STRING: /'[^'\n]*'/
+WS: /[ \t\n]+/
+%ignore WS
+"""
+
+MINILANG = r"""
+// The GPL stand-in: a tiny imperative language with braced blocks,
+// keywords that lex-overlap the NAME terminal (keyword-vs-identifier
+// maximal munch), and multi-byte operators ("<=" etc.).
+start: stmt stmt*
+stmt: "let" NAME "=" expr ";"
+    | NAME "=" expr ";"
+    | "if" "(" expr ")" block ["else" block]
+    | "while" "(" expr ")" block
+    | "return" expr ";"
+    | "print" "(" expr ")" ";"
+block: "{" stmt* "}"
+expr: sum [("<" | ">" | "<=" | ">=" | "==" | "!=") sum]
+sum: prod (("+" | "-") prod)*
+prod: atom (("*" | "/") atom)*
+atom: INT | NAME | "(" expr ")"
+
+NAME: /[a-z_][a-z0-9_]*/
+INT: /[0-9]+/
+WS: /[ \t\n]+/
+%ignore WS
+"""
+
+EMBEDDED: dict[str, str] = {
+    "json": JSON,
+    "calc": CALC,
+    "sql": SQL,
+    "minilang": MINILANG,
+}

@@ -137,6 +137,12 @@ class GrammarSampler:
         for s in p.rhs:
             self._expand(s, budget - 1, out)
 
+    def sample_batch(self, n: int, budget: int = 24,
+                     max_bytes: int | None = None) -> list[bytes]:
+        """n syntactically valid strings (benchmark corpora / property
+        tests / synthetic-data batches for the training pipeline)."""
+        return [self.sample(budget, max_bytes) for _ in range(n)]
+
     def sample(self, budget: int = 24, max_bytes: int | None = None) -> bytes:
         """One syntactically valid string; pieces are separated by a space
         whenever gluing them would merge two lexical tokens. `max_bytes`

@@ -102,7 +102,10 @@ def _op_name(line: str):
 
 
 _DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=")
-_DOT_OPERANDS_RE = re.compile(r"\bdot\(%([\w.\-]+),")
+# lhs operand of a dot; newer XLA prints the operand type inline:
+#   dot(%lhs, ...)   or   dot(f32[256,256]{1,0} %lhs, ...)
+_DOT_OPERANDS_RE = re.compile(
+    r"\bdot\((?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?\s+)?%([\w.\-]+),")
 
 
 def _symtab(lines):

@@ -27,6 +27,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 
 def _kernel(rows_ref,            # scalar-prefetch [B, A] int32
             eos_ref,             # scalar-prefetch [B] int32
@@ -97,7 +101,7 @@ def masked_logits(logits, store, rows, eos_allowed, *, eos_id: int = 1,
         ),
         out_shape=jax.ShapeDtypeStruct((B, V), logits.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(rows.astype(jnp.int32), eos_allowed.astype(jnp.int32), logits, store)
     return out

@@ -3,26 +3,35 @@
 `apply_grammar_mask` dispatches to the Pallas kernel (TPU target;
 interpret=True executes the kernel body on CPU for validation) or the
 pure-jnp reference — selected by `backend`.
+
+`constrained` [B] bool (optional) lets one fused call serve a mixed batch:
+rows where it is False pass through unmasked (the batched engine keeps
+unconstrained requests in the same decode pool as constrained ones).
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from .kernel import masked_logits
 from .ref import masked_logits_ref
 
 
 def apply_grammar_mask(logits, store, rows, eos_allowed, *, eos_id: int = 1,
-                       backend: str = "auto", block_v: int = 4096):
+                       backend: str = "auto", block_v: int = 4096,
+                       constrained=None):
     """backend: 'pallas' | 'jnp' | 'auto' (pallas-interpret off-TPU)."""
     if backend == "jnp":
         return masked_logits_ref(logits, store, rows, eos_allowed,
-                                 eos_id=eos_id)
+                                 eos_id=eos_id, constrained=constrained)
     interpret = jax.default_backend() != "tpu"
     if backend == "auto" and interpret and logits.shape[-1] > 16384:
         # interpret-mode is slow for big vocabs; use the oracle off-TPU
         return masked_logits_ref(logits, store, rows, eos_allowed,
-                                 eos_id=eos_id)
-    return masked_logits(logits, store, rows, eos_allowed, eos_id=eos_id,
-                         block_v=min(block_v, logits.shape[-1]),
-                         interpret=interpret)
+                                 eos_id=eos_id, constrained=constrained)
+    out = masked_logits(logits, store, rows, eos_allowed, eos_id=eos_id,
+                        block_v=min(block_v, logits.shape[-1]),
+                        interpret=interpret)
+    if constrained is not None:
+        out = jnp.where(constrained[:, None], out, logits)
+    return out

@@ -14,9 +14,14 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def masked_logits_ref(logits, store, rows, eos_allowed, eos_id: int = 1):
+def masked_logits_ref(logits, store, rows, eos_allowed, eos_id: int = 1,
+                      constrained=None):
     """logits [B,V], store [R,W] uint32, rows [B,A] int32,
-    eos_allowed [B] bool -> masked logits [B,V]."""
+    eos_allowed [B] bool -> masked logits [B,V].
+
+    `constrained` [B] bool (optional): rows where it is False pass through
+    unmasked — the batched engine mixes constrained and unconstrained
+    requests in one fused call."""
     B, V = logits.shape
     safe = jnp.maximum(rows, 0)
     gathered = store[safe]                                   # [B,A,W]
@@ -27,4 +32,6 @@ def masked_logits_ref(logits, store, rows, eos_allowed, eos_id: int = 1):
         jnp.uint32(1)
     mask = bits.reshape(B, -1)[:, :V].astype(bool)
     mask = mask.at[:, eos_id].set(mask[:, eos_id] | eos_allowed)
+    if constrained is not None:
+        mask = mask | ~constrained[:, None]
     return jnp.where(mask, logits, jnp.asarray(NEG_INF, logits.dtype))

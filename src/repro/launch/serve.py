@@ -2,7 +2,12 @@
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --grammar json -n 4 \
-      --max-new 80 --temperature 0.8 [--opportunistic] [--checkpoint ckpt]
+      --max-new 80 --temperature 0.8 --slots 4 \
+      [--sequential] [--opportunistic] [--checkpoint ckpt]
+
+`--slots B` sets the width of the continuous-batching decode pool (one
+[B, V] decode + one fused mask call per step); `--sequential` uses the
+round-robin one-request-per-device-call baseline instead.
 """
 from __future__ import annotations
 
@@ -22,7 +27,7 @@ from repro.serving.engine import Engine, Request
 
 def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
                  max_len=512, opportunistic=False, checkpoint=None,
-                 seed=0):
+                 seed=0, slots=4):
     cfg = get_config(arch)
     if vocab:
         from dataclasses import replace
@@ -39,7 +44,7 @@ def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
         params, step, _ = load_checkpoint(checkpoint, params)
         print(f"loaded checkpoint at step {step}")
     return Engine(model, params, tok, bundles, max_len=max_len,
-                  opportunistic=opportunistic), bundles, tok
+                  opportunistic=opportunistic, slots=slots), bundles, tok
 
 
 def main(argv=None):
@@ -53,24 +58,31 @@ def main(argv=None):
     ap.add_argument("--opportunistic", action="store_true")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--prompt", default="Q: produce output. A:")
+    ap.add_argument("-B", "--slots", type=int, default=4,
+                    help="continuous-batching decode pool width")
+    ap.add_argument("--sequential", action="store_true",
+                    help="round-robin baseline (one request per call)")
     args = ap.parse_args(argv)
 
     engine, bundles, tok = build_engine(
         args.arch, grammars=(args.grammar,),
-        opportunistic=args.opportunistic, checkpoint=args.checkpoint)
+        opportunistic=args.opportunistic, checkpoint=args.checkpoint,
+        slots=args.slots)
     dc = DecodeConfig(method="greedy" if args.greedy else "sample",
                       temperature=args.temperature)
     reqs = [Request(rid=i, prompt=args.prompt.encode(),
                     grammar=args.grammar, max_new_tokens=args.max_new,
                     decode=dc, seed=i) for i in range(args.num_requests)]
-    states, stats = engine.generate(reqs, verbose=True)
+    run = engine.generate_sequential if args.sequential else engine.generate
+    states, stats = run(reqs, verbose=True)
 
     g, tab, _ = bundles[args.grammar]
     p = IncrementalParser(g, tab)
     complete = [s for s in states if s.finish_reason == "eos"]
     valid = sum(p.recognize(s.generated) for s in complete)
-    print(f"\n{stats.tokens} tokens @ {stats.tokens_per_sec:.1f} tok/s | "
-          f"mask {stats.mask_time:.2f}s/{stats.mask_computations} | "
+    print(f"\n{stats.tokens} tokens @ {stats.tokens_per_sec:.1f} tok/s "
+          f"({stats.decode_steps} decode steps x {stats.batch_slots} slots)"
+          f" | mask {stats.mask_time:.2f}s/{stats.mask_computations} | "
           f"opportunistic hits {stats.opportunistic_hits}")
     print(f"complete: {len(complete)}/{len(states)}, "
           f"valid among complete: {valid}/{len(complete)}")

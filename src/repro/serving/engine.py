@@ -1,23 +1,38 @@
 """Grammar-constrained serving engine (paper Algorithm 3 as a runtime).
 
-Responsibilities:
-  * request queue + round-robin continuous stepping,
-  * per-request incremental parser / GrammarConstraint state (host side),
-  * device decode steps with KV/SSM caches,
-  * masked sampling via the masked_logits kernel path,
-  * the paper's *opportunistic masking* fast path (validate the model's
-    unconstrained proposal before paying for the mask — §5 Baselines),
-  * an exactness wrapper: because the α≤1 mask store over-approximates
-    (sound, not complete — paper §4.4), sampled tokens are verified with
-    the precise parser oracle and rejected/resampled, so emitted text
-    provably stays in L_p(G) and terminates only when in L(G).
+The engine is built around **continuous batching** over a fixed pool of
+`B = slots` decode slots:
 
-The engine is single-host (CPU demo substrate); the batched device path
-used on real meshes is exercised by launch/serve.py and the dry-run.
+  * one jitted `[B, V]` decode step advances every active request at once
+    (decode caches are allocated `[.., B, ..]` up front; per-request
+    prefill results are inserted into their slot on admission),
+  * the host side of Algorithm 2 fills a `[B, A]` mask-row matrix + `[B]`
+    eos vector for all constrained slots in one pass
+    (`GrammarConstraint.step_rows_batch`),
+  * a single fused mask+sample device call applies the packed mask-store
+    rows (`repro.kernels.masked_logits`) and draws every slot's next token
+    with per-request greedy/temperature/top-k/top-p (`select_batch`) —
+    only the `[B]` sampled ids come back to the host, never `[B, V]`,
+  * the paper's *opportunistic masking* fast path (§5 Baselines) validates
+    the whole batch's unconstrained proposals first and computes mask rows
+    only for the slots whose proposal was rejected,
+  * the exactness wrapper survives batching: because the α≤1 mask store
+    over-approximates (sound, not complete — paper §4.4), sampled ids are
+    verified against the precise parser oracle; invalid picks are demoted
+    and the affected rows resampled on device, so emitted text provably
+    stays in L_p(G) and terminates only when in L(G),
+  * finished requests free their slot and the next queued request is
+    admitted immediately (no round-robin sweep), so the pool stays full
+    under load.
+
+`generate_sequential` keeps the original one-request-at-a-time stepping
+path for comparison benchmarks (benchmarks/bench_tables.py::
+batched_engine_throughput) and as an oracle for the batched scheduler.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -25,9 +40,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.constrain import GrammarConstraint
-from repro.core.decoding import DecodeConfig, NEG_INF
-from repro.core.tokenizer import ByteTokenizer, EOS_ID
+from repro.core.constrain import GrammarConstraint, MAX_ACCEPT
+from repro.core.decoding import DecodeConfig, NEG_INF, select_batch
+from repro.core.tokenizer import BOS_ID, ByteTokenizer, EOS_ID
 from repro.kernels.masked_logits.ops import apply_grammar_mask
 
 
@@ -44,7 +59,7 @@ class Request:
 @dataclass
 class RequestState:
     req: Request
-    caches: object = None
+    caches: object = None                   # sequential path only
     pos: int = 0
     generated: bytes = b""
     token_ids: list = field(default_factory=list)
@@ -56,6 +71,7 @@ class RequestState:
     mask_computations: int = 0
     opportunistic_hits: int = 0
     steps: int = 0
+    slot: int = -1
 
 
 @dataclass
@@ -66,6 +82,8 @@ class EngineStats:
     mask_time: float = 0.0
     mask_computations: int = 0
     opportunistic_hits: int = 0
+    decode_steps: int = 0                   # batched [B,V] device steps
+    batch_slots: int = 0
 
     @property
     def tokens_per_sec(self):
@@ -75,8 +93,10 @@ class EngineStats:
 class Engine:
     def __init__(self, model, params, tokenizer: ByteTokenizer,
                  grammar_bundles: dict, max_len: int = 512,
-                 opportunistic: bool = False, mask_backend: str = "jnp"):
-        """grammar_bundles: name -> (grammar, table, store)."""
+                 opportunistic: bool = False, mask_backend: str = "jnp",
+                 slots: int = 4):
+        """grammar_bundles: name -> (grammar, table, store).
+        slots: decode-pool width B of the batched scheduler."""
         self.model = model
         self.params = params
         self.tok = tokenizer
@@ -84,22 +104,332 @@ class Engine:
         self.max_len = max_len
         self.opportunistic = opportunistic
         self.mask_backend = mask_backend
+        self.slots = max(1, int(slots))
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=max_len))
         self._decode = jax.jit(model.decode_step)
-        self._store_dev = {name: jnp.asarray(b[2].packed)
-                           for name, b in grammar_bundles.items()}
+        # one concatenated device store for all grammars: a request's rows
+        # index its grammar's block via the per-grammar row offset (shared
+        # by the batched and sequential paths — the store lives on device
+        # exactly once)
+        self._row_offset: dict[str, int] = {}
+        parts, off = [], 0
+        for name, b in grammar_bundles.items():
+            self._row_offset[name] = off
+            parts.append(b[2].packed)
+            off += b[2].packed.shape[0]
+        words = (tokenizer.vocab_size + 31) // 32
+        cat = (np.concatenate(parts, axis=0) if parts
+               else np.zeros((1, words), np.uint32))
+        self._store_cat = jnp.asarray(cat)
+        self._build_batched_fns()
+
+    def _build_batched_fns(self):
+        backend = self.mask_backend
+
+        def mask_sample(logits, store, rows, eos, constrained,
+                        greedy, temp, top_k, top_p, keys):
+            masked = apply_grammar_mask(logits, store, rows, eos,
+                                        backend=backend,
+                                        constrained=constrained)
+            ids = select_batch(masked, keys, greedy, temp, top_k, top_p)
+            ok = jnp.any(masked > NEG_INF / 2, axis=-1)
+            return masked, ids, ok
+
+        def resample(masked, ban, redo, greedy, temp, top_k, top_p, keys):
+            V = masked.shape[-1]
+            hit = (jnp.arange(V)[None, :] == ban[:, None]) & redo[:, None]
+            masked = jnp.where(hit, jnp.asarray(NEG_INF, masked.dtype),
+                               masked)
+            ids = select_batch(masked, keys, greedy, temp, top_k, top_p)
+            ok = jnp.any(masked > NEG_INF / 2, axis=-1)
+            return masked, ids, ok
+
+        def insert(full, one, b):
+            return jax.tree.map(
+                lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                    f, o.astype(f.dtype), b, axis=1), full, one)
+
+        self._mask_sample = jax.jit(mask_sample)
+        self._resample = jax.jit(resample)
+        self._sample_plain = jax.jit(select_batch)
+        self._insert_caches = jax.jit(insert)
 
     # ------------------------------ lifecycle -----------------------------
 
-    def _start(self, req: Request) -> RequestState:
-        st = RequestState(req=req)
-        if req.grammar is not None:
-            g, tab, store = self.bundles[req.grammar]
-            st.constraint = GrammarConstraint(g, tab, store, self.tok)
+    def _make_constraint(self, req: Request) -> Optional[GrammarConstraint]:
+        if req.grammar is None:
+            return None
+        g, tab, store = self.bundles[req.grammar]
+        return GrammarConstraint(g, tab, store, self.tok)
+
+    def _prompt_ids(self, req: Request) -> list[int]:
         ids = self.tok.encode(req.prompt) if req.prompt else []
         if not ids:
-            ids = [2]  # BOS
+            ids = [BOS_ID]
+        return ids
+
+    def _commit(self, st: RequestState, token: int):
+        st.token_ids.append(token)
+        st.pos += 1
+        if token == EOS_ID:
+            st.done = True
+            st.finish_reason = "eos"
+            return
+        st.generated += self.tok.id_to_bytes[token]
+        if st.steps >= st.req.max_new_tokens:
+            st.done = True
+            st.finish_reason = "length"
+        if st.pos >= self.max_len - 1:
+            st.done = True
+            st.finish_reason = "max_len"
+
+    # ============================ batched path ============================
+
+    def _step_keys(self, seeds: np.ndarray, step: int,
+                   attempt: int) -> np.ndarray:
+        """[B, 2] uint32 threefry key data: one counter-mode stream per
+        slot, advanced by (step, attempt). Greedy rows ignore keys."""
+        k = np.empty((seeds.shape[0], 2), np.uint32)
+        k[:, 0] = seeds
+        k[:, 1] = np.uint32((step << 4) | (attempt & 0xF))
+        return k
+
+    def _fallback_exact(self, st: RequestState, row: np.ndarray,
+                        attempt_salt: int) -> Optional[int]:
+        """Rare slow path: the sampled ids kept failing the oracle (or the
+        mask emptied after demotions). Exact-filter the remaining allowed
+        set (|allowed| oracle calls) and draw host-side, so the step never
+        dead-ends while a valid continuation exists. top-k/top-p are not
+        re-applied here — this path fires when the mask kept only a
+        handful of candidates anyway."""
+        gc = st.constraint
+        allowed = np.where(row > NEG_INF / 2)[0]
+        valid = [int(t) for t in allowed
+                 if t == EOS_ID or gc.is_valid_extension(st.generated,
+                                                         int(t))]
+        if not valid:
+            return None
+        sub = row[valid].astype(np.float64)
+        if st.req.decode.method == "greedy":
+            return valid[int(np.argmax(sub))]
+        temp = max(st.req.decode.temperature, 1e-6)
+        p = np.exp((sub - sub.max()) / temp)
+        p /= p.sum()
+        rng = np.random.default_rng(
+            (st.req.seed * 1000003 + st.steps * 31 + attempt_salt)
+            & 0xFFFFFFFF)
+        return int(rng.choice(valid, p=p))
+
+    def generate(self, requests: list[Request], verbose: bool = False):
+        """Continuous batching over a fixed pool of `self.slots` slots.
+
+        Per engine step: ONE [B, V] decode for every active slot, ONE
+        fused mask+sample call (constrained and unconstrained slots mixed
+        via the `constrained` flag), and only [B]-sized transfers back to
+        the host. Finished slots are refilled from the queue immediately.
+        """
+        t0 = time.time()
+        B = self.slots
+        queue = deque(requests)
+        all_states: list[RequestState] = []
+        caches = self.model.init_decode_caches(B, self.max_len)
+        cur_tok = np.zeros(B, np.int32)
+        feed_pos = np.zeros(B, np.int32)
+        slot_state: list[Optional[RequestState]] = [None] * B
+        seeds = np.zeros(B, np.uint32)
+        constrained = np.zeros(B, bool)
+        greedy = np.ones(B, bool)
+        temp = np.ones(B, np.float32)
+        top_k = np.zeros(B, np.int32)
+        top_p = np.ones(B, np.float32)
+        step = 0
+        decode_steps = 0
+        mask_time = 0.0
+        mask_computations = 0
+        opportunistic_hits = 0
+
+        def admit(b: int):
+            nonlocal caches
+            req = queue.popleft()
+            st = RequestState(req=req, slot=b)
+            st.constraint = self._make_constraint(req)
+            ids = self._prompt_ids(req)
+            if len(ids) == 1:
+                # prefill needs >= 1 token before the decode loop takes
+                # over; re-feeding the last prompt token would double-step
+                # recurrent caches, so prepend BOS instead
+                ids = [BOS_ID] + ids
+            prompt = jnp.asarray([ids[:-1]], jnp.int32)
+            _, pc = self._prefill(self.params, {"tokens": prompt})
+            caches = self._insert_caches(caches, pc, jnp.int32(b))
+            st.token_ids = list(ids)
+            st.pos = len(ids)
+            slot_state[b] = st
+            cur_tok[b] = ids[-1]
+            feed_pos[b] = len(ids) - 1
+            seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
+            constrained[b] = st.constraint is not None
+            g, t, k, p = DecodeConfig.batch_arrays([req.decode])
+            greedy[b], temp[b], top_k[b], top_p[b] = g[0], t[0], k[0], p[0]
+            all_states.append(st)
+
+        def finish(b: int):
+            st = slot_state[b]
+            slot_state[b] = None
+            constrained[b] = False
+            cur_tok[b] = 0
+            feed_pos[b] = 0
+            if verbose:
+                print(f"[req {st.req.rid}] {st.finish_reason}: "
+                      f"{st.generated[:70]!r}")
+
+        while queue or any(s is not None for s in slot_state):
+            for b in range(B):
+                if slot_state[b] is None and queue:
+                    admit(b)
+            active = [b for b in range(B) if slot_state[b] is not None]
+            step += 1
+
+            # ---- ONE [B, V] decode step for the whole pool --------------
+            logits, caches = self._decode(
+                self.params, caches, jnp.asarray(cur_tok),
+                jnp.asarray(feed_pos))
+            decode_steps += 1
+            for b in active:
+                slot_state[b].steps += 1
+            committed: dict[int, int] = {}
+            pending = set(active)
+
+            # ---- opportunistic fast path (whole batch at once) ----------
+            if self.opportunistic and any(constrained[b] for b in active):
+                keys = self._step_keys(seeds, step, 0)
+                prop = np.asarray(self._sample_plain(
+                    logits, jnp.asarray(keys), jnp.asarray(greedy),
+                    jnp.asarray(temp), jnp.asarray(top_k),
+                    jnp.asarray(top_p)))
+                for b in list(pending):
+                    st = slot_state[b]
+                    t = int(prop[b])
+                    if st.constraint is None:
+                        committed[b] = t
+                        pending.discard(b)
+                    elif st.constraint.is_valid_extension(st.generated, t):
+                        st.opportunistic_hits += 1
+                        opportunistic_hits += 1
+                        committed[b] = t
+                        pending.discard(b)
+
+            # ---- fused mask + batched sample for the rest ---------------
+            if pending:
+                t_mask = time.time()
+                cons = [slot_state[b].constraint
+                        if (b in pending and slot_state[b] is not None)
+                        else None for b in range(B)]
+                texts = [slot_state[b].generated if slot_state[b] else b""
+                         for b in range(B)]
+                offs = np.array(
+                    [self._row_offset.get(slot_state[b].req.grammar, 0)
+                     if slot_state[b] is not None else 0
+                     for b in range(B)], np.int64)
+                rows, eos, _ = GrammarConstraint.step_rows_batch(
+                    cons, texts, max_accept=MAX_ACCEPT, row_offsets=offs)
+                need_mask = np.array([c is not None for c in cons], bool)
+                keys = self._step_keys(seeds, step, 1)
+                masked, ids, ok = self._mask_sample(
+                    logits, self._store_cat, jnp.asarray(rows),
+                    jnp.asarray(eos), jnp.asarray(need_mask),
+                    jnp.asarray(greedy), jnp.asarray(temp),
+                    jnp.asarray(top_k), jnp.asarray(top_p),
+                    jnp.asarray(keys))
+                ids_h, ok_h = np.asarray(ids), np.asarray(ok)
+                n_masked = int(need_mask.sum())
+                mask_computations += n_masked
+                elapsed = time.time() - t_mask
+                mask_time += elapsed
+                for b in np.where(need_mask)[0]:
+                    slot_state[b].mask_computations += 1
+                    slot_state[b].mask_time += elapsed / max(n_masked, 1)
+
+                # rejection wrapper: the α<=1 mask is sound but over-
+                # approximate; verify with the exact oracle, demote invalid
+                # picks on device, resample only the affected rows. Only
+                # [B] ids/flags ever cross back to the host here.
+                for attempt in range(2, 6):
+                    redo = np.zeros(B, bool)
+                    ban = np.zeros(B, np.int32)
+                    for b in sorted(pending):
+                        st = slot_state[b]
+                        if st.constraint is None:
+                            committed[b] = int(ids_h[b])
+                            pending.discard(b)
+                            continue
+                        if not ok_h[b]:
+                            continue        # mask exhausted -> fallback
+                        t = int(ids_h[b])
+                        if t == EOS_ID or st.constraint.is_valid_extension(
+                                st.generated, t):
+                            committed[b] = t
+                            pending.discard(b)
+                        else:
+                            redo[b] = True
+                            ban[b] = t
+                    if not redo.any():
+                        break
+                    keys = self._step_keys(seeds, step, attempt)
+                    masked, ids, ok = self._resample(
+                        masked, jnp.asarray(ban), jnp.asarray(redo),
+                        jnp.asarray(greedy), jnp.asarray(temp),
+                        jnp.asarray(top_k), jnp.asarray(top_p),
+                        jnp.asarray(keys))
+                    ids_h, ok_h = np.asarray(ids), np.asarray(ok)
+
+                # exact-filter fallback for slots that never validated
+                for b in sorted(pending):
+                    st = slot_state[b]
+                    nxt = self._fallback_exact(
+                        st, np.asarray(masked[b]), step)
+                    if nxt is None:
+                        # nothing valid (should not happen for C_k in
+                        # L_p(G)) — stop this request
+                        st.done = True
+                        st.finish_reason = "mask_exhausted"
+                    else:
+                        committed[b] = nxt
+                    pending.discard(b)
+
+            # ---- commit + immediate slot replacement --------------------
+            for b, t in committed.items():
+                st = slot_state[b]
+                self._commit(st, t)
+                cur_tok[b] = t
+                feed_pos[b] = st.pos - 1
+            for b in active:
+                st = slot_state[b]
+                if st is not None and st.done:
+                    finish(b)
+
+        stats = EngineStats(
+            requests=len(all_states),
+            tokens=sum(s.steps for s in all_states),
+            wall=time.time() - t0,
+            mask_time=mask_time,
+            mask_computations=mask_computations,
+            opportunistic_hits=opportunistic_hits,
+            decode_steps=decode_steps,
+            batch_slots=B,
+        )
+        return all_states, stats
+
+    # =========================== sequential path ==========================
+    # The original one-request-at-a-time engine (paper Algorithm 3,
+    # round-robin). Kept as the baseline the batched scheduler is
+    # benchmarked against, and as a behavioral oracle in tests.
+
+    def _start(self, req: Request) -> RequestState:
+        st = RequestState(req=req)
+        st.constraint = self._make_constraint(req)
+        ids = self._prompt_ids(req)
         tokens = jnp.asarray([ids], jnp.int32)
         logits, caches = self._prefill(self.params, {"tokens": tokens})
         st.caches = caches
@@ -117,8 +447,6 @@ class Engine:
         pos = jnp.asarray([st.pos - 1], jnp.int32)
         lg, st.caches = self._decode(self.params, st.caches, tok, pos)
         return lg  # [1, V] device array
-
-    # --------------------------- one decode step --------------------------
 
     def _select(self, st: RequestState, logits, key) -> int:
         return int(st.req.decode.select(logits, key)[0])
@@ -145,18 +473,16 @@ class Engine:
 
         t0 = time.time()
         sm = gc.step_rows(text)
-        rows = jnp.asarray(sm.rows[None, :])
+        off = self._row_offset[req.grammar]
+        rows = jnp.asarray(np.where(sm.rows >= 0, sm.rows + off,
+                                    sm.rows)[None, :])
         eos = jnp.asarray([sm.eos_allowed])
-        masked = apply_grammar_mask(logits, self._store_dev[req.grammar],
+        masked = apply_grammar_mask(logits, self._store_cat,
                                     rows, eos, backend=self.mask_backend)
         st.mask_time += time.time() - t0
         st.mask_computations += 1
 
-        # rejection wrapper: the α<=1 mask is sound but over-approximate;
-        # verify with the exact oracle, demote invalid picks, resample. If a
-        # few samples fail, fall back to exact-filtering the allowed set
-        # (cheap: |allowed| oracle calls) so the step never dead-ends while
-        # a valid continuation exists.
+        # rejection wrapper (see generate() for the batched variant)
         masked = np.asarray(masked, np.float32)
         for attempt in range(4):
             key, sub = jax.random.split(key)
@@ -181,25 +507,9 @@ class Engine:
         st.done = True
         st.finish_reason = "mask_exhausted"
 
-    def _commit(self, st: RequestState, token: int):
-        st.token_ids.append(token)
-        st.pos += 1
-        if token == EOS_ID:
-            st.done = True
-            st.finish_reason = "eos"
-            return
-        st.generated += self.tok.id_to_bytes[token]
-        if st.steps >= st.req.max_new_tokens:
-            st.done = True
-            st.finish_reason = "length"
-        if st.pos >= self.max_len - 1:
-            st.done = True
-            st.finish_reason = "max_len"
-
-    # ------------------------------- serve --------------------------------
-
-    def generate(self, requests: list[Request], verbose: bool = False):
-        """Round-robin continuous stepping over all requests."""
+    def generate_sequential(self, requests: list[Request],
+                            verbose: bool = False):
+        """Round-robin continuous stepping, one request per device call."""
         t0 = time.time()
         states = [self._start(r) for r in requests]
         keys = {r.rid: jax.random.PRNGKey(r.seed) for r in requests}
@@ -220,5 +530,7 @@ class Engine:
             mask_time=sum(s.mask_time for s in states),
             mask_computations=sum(s.mask_computations for s in states),
             opportunistic_hits=sum(s.opportunistic_hits for s in states),
+            decode_steps=sum(s.steps for s in states),
+            batch_slots=1,
         )
         return states, stats

@@ -1,0 +1,62 @@
+"""Graceful degradation when `hypothesis` is not installed.
+
+Test modules import `given / settings / strategies` from here via a
+try/except around the real hypothesis import. When hypothesis is present
+this module is unused. When it is absent, `@given` tests are collected
+but skip at runtime (with a clear reason), while every non-property test
+in the same module still runs — `pytest.importorskip` at module level
+would throw those away too.
+
+`st` is an "accept-anything" strategy shim so module-level strategy
+definitions (e.g. recursive JSON value strategies) still evaluate.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+class _AnyStrategy:
+    """Absorbs any strategy-building expression and returns itself."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+    def __or__(self, other):
+        return self
+
+    def __ror__(self, other):
+        return self
+
+
+st = _AnyStrategy()
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*gargs, **gkwargs):
+    """Like hypothesis.given, the wrapper's signature drops the
+    strategy-filled parameters (positional strategies fill from the right)
+    so fixtures and @pytest.mark.parametrize args still resolve."""
+    def deco(fn):
+        import inspect
+
+        params = list(inspect.signature(fn).parameters.values())
+        if gargs:
+            params = params[:-len(gargs)] if len(gargs) <= len(params) else []
+        params = [p for p in params if p.name not in gkwargs]
+
+        def skipper(*args, **kwargs):
+            pytest.skip("hypothesis not installed; property test skipped")
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        skipper.__module__ = fn.__module__
+        skipper.__signature__ = inspect.Signature(params)
+        return skipper
+    return deco

@@ -5,6 +5,9 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too, so `from tests....` imports (conftest, _hypothesis_stub)
+# resolve under a bare `pytest` invocation as well as `python -m pytest`
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import pytest
 

@@ -3,7 +3,10 @@ import json as pyjson
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade gracefully: only @given tests skip
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.core.grammars import BUILTIN, load_grammar
 from repro.core.lexer import LexError, lex_partial

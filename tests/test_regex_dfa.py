@@ -3,7 +3,10 @@ import re
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade gracefully: only @given tests skip
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.core.regex import compile_literal, compile_regex
 
