@@ -1,4 +1,4 @@
-"""Batched serving across FOUR grammars at once: each request carries its
+"""Batched serving across all builtin grammars at once: each request carries
 own grammar; the engine keeps per-request incremental parser state and
 shares the model — the compound-AI-system scenario from the paper's
 introduction (JSON for tools, SQL for a database, a DSL for a calculator,
@@ -41,6 +41,7 @@ def main():
         "sql": b"Query the singers table:",
         "calc": b"Compute the area:",
         "minilang": b"Write a helper:",
+        "jsonmsg": b"Emit records:",
     }
     reqs = []
     for i, (gname, prompt) in enumerate(sorted(prompts.items()) * 2):

@@ -115,6 +115,48 @@ class GrammarConstraint:
             nseq[b] = sm.num_sequences
         return rows, eos, nseq
 
+    # ---- forced-continuation query (speculation / jump-forward) ---------
+
+    def forced_step(self, partial_output: bytes):
+        """Classify this step's mask for the jump-forward analyzer.
+
+        Returns (kind, token, step_mask):
+          ("token", t, sm) — exactly one token survives the mask union,
+                         EOS is not allowed, and t passes the exact
+                         oracle: the grammar (as seen through this step's
+                         capped row set — the same rows the engine masks
+                         with) forces t, so it can be emitted without a
+                         model call.
+          ("eos", None, sm)  — mask empty but C_k ∈ L(G): EOS is forced.
+          ("dead", None, sm) — mask empty and EOS disallowed (the
+                         engine's mask_exhausted outcome).
+          ("free", None, sm) — more than one candidate; the model must
+                         choose. The returned StepMask is this step's row
+                         set, so the caller can mask without recomputing.
+
+        Fast path: the union can only collapse to <= 1 token if every
+        member row allows <= 1, so a precomputed per-row popcount gather
+        decides "free" without touching the packed words.
+        """
+        sm = self.step_rows(partial_output)
+        valid = sm.rows[sm.rows >= 0]
+        if valid.size and int(self.store.row_popcounts()[valid].max()) > 1:
+            return ("free", None, sm)
+        packed = self.store.union_rows(sm.rows)     # one union feeds both
+        n = self.store.popcount_packed(packed)
+        if n == 0:
+            return (("eos", None, sm) if sm.eos_allowed
+                    else ("dead", None, sm))
+        if n == 1 and not sm.eos_allowed:
+            t = self.store.sole_from_packed(packed)
+            if t is not None and self.is_valid_extension(partial_output, t):
+                return ("token", t, sm)
+            # sole candidate is a mask over-approximation the oracle
+            # rejects: the exact allowed set is empty (matches the plain
+            # engine's demote -> exhausted path)
+            return ("dead", None, sm)
+        return ("free", None, sm)
+
     # ---- host reference mask (numpy; the device path lives in kernels/) --
 
     def token_mask(self, partial_output: bytes) -> np.ndarray:
@@ -143,8 +185,10 @@ class GrammarConstraint:
         if not tb:
             return False
         try:
-            res = self.parser.partial_parse(partial_output + tb,
-                                            incremental=False)
+            # incremental: the prefix-stack cache makes the hypothetical
+            # extension O(delta); a rejected hypothesis merely truncates
+            # the cache back on the next prefix-diverging call
+            res = self.parser.partial_parse(partial_output + tb)
         except (ParseError, LexError):
             return False
         if not res.remainder:

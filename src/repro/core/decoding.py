@@ -104,6 +104,25 @@ def select_batch(logits: jnp.ndarray, keys: jnp.ndarray,
                      sampled).astype(jnp.int32)
 
 
+def select_span(logits: jnp.ndarray, keys: jnp.ndarray,
+                greedy_flags: jnp.ndarray, temperature: jnp.ndarray,
+                top_k: jnp.ndarray, top_p: jnp.ndarray) -> jnp.ndarray:
+    """Span form of `select_batch` for speculative verification.
+
+    logits [B, S, V] (already grammar-masked per position), keys
+    [B, S, 2] — one PRNG stream per (slot, span position); the per-slot
+    decode configs broadcast across the span. Returns [B, S] int32: a
+    selection at EVERY span position, so the draft-accept test is a
+    single host-side comparison against the proposed tokens.
+    """
+    B, S, V = logits.shape
+    rep = lambda a: jnp.repeat(a, S, axis=0)
+    ids = select_batch(logits.reshape(B * S, V), keys.reshape(B * S, 2),
+                       rep(greedy_flags), rep(temperature), rep(top_k),
+                       rep(top_p))
+    return ids.reshape(B, S)
+
+
 @dataclass
 class DecodeConfig:
     method: str = "greedy"            # greedy | sample

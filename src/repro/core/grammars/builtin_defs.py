@@ -89,9 +89,28 @@ WS: /[ \t\n]+/
 %ignore WS
 """
 
+JSONMSG = r"""
+// Schema-constrained COMPACT JSON records (tool-call / extraction
+// shaped, machine-canonical: no whitespace): the object keys are
+// grammar literals and the leaf terminals are bounded, so large runs of
+// the output are grammar-DETERMINED — the workload where jump-forward
+// speculation shines (braces, quotes, keys, separators all forced; only
+// ids/ops/args are model choices).
+start: "[" record ("," record)* "]"
+record: "{" KID ":" NUMBER "," KOP ":" OP "," KARGS ":" "[" [ARG ("," ARG)*] "]" "}"
+
+KID.2: /"id"/
+KOP.2: /"op"/
+KARGS.2: /"args"/
+OP.2: /"(get|set|del|add|list|ping)"/
+ARG: /"[a-z0-9_]{1,8}"/
+NUMBER: /[0-9]{1,4}/
+"""
+
 EMBEDDED: dict[str, str] = {
     "json": JSON,
     "calc": CALC,
     "sql": SQL,
     "minilang": MINILANG,
+    "jsonmsg": JSONMSG,
 }

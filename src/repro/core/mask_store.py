@@ -44,6 +44,8 @@ class MaskStore:
         self.meta = meta
         self.num_terminals = len(grammar.terminal_names)
         self.row_stride = self.num_terminals + 1
+        self._row_pc = None             # lazy per-row popcounts (spec path)
+        self._fb = None                 # lazy first-byte -> vocab bitmask
 
     # ---- row addressing ----
     def global_state(self, terminal: str, q: int) -> int:
@@ -69,6 +71,74 @@ class MaskStore:
         bits = np.unpackbits(packed_row.view(np.uint8), bitorder="little")
         return bits[: self.tokenizer.vocab_size].astype(bool)
 
+    # ---- forced-continuation queries (speculation / jump-forward) ------
+    # The spec subsystem (repro.spec.jump) asks, per step, "how many
+    # tokens survive this step's mask union, and which one if exactly
+    # one?" — popcount + sole-survivor extraction on the packed rows,
+    # without ever materializing the [V] boolean mask.
+
+    def row_popcounts(self) -> np.ndarray:
+        """[rows] int32 allowed-token count per packed row (computed once,
+        lazily). The jump-forward analyzer uses it as a short-circuit:
+        the union of a row set can only collapse to <= 1 token if every
+        member row already allows <= 1, so per-step forced detection is a
+        gather + max instead of a mask union."""
+        if self._row_pc is None:
+            # 256-entry popcount LUT over the uint8 view: same result as
+            # unpackbits().sum() at 1/8 the transient memory (no [R, V]
+            # bit expansion next to the resident model)
+            lut = np.unpackbits(
+                np.arange(256, dtype=np.uint8)[:, None], axis=1
+            ).sum(axis=1, dtype=np.int32)
+            self._row_pc = lut[self.packed.view(np.uint8)].sum(
+                axis=1, dtype=np.int32)
+        return self._row_pc
+
+    @staticmethod
+    def popcount_packed(packed: np.ndarray) -> int:
+        """Allowed-token count of an already-unioned packed row. Padding
+        bits past vocab_size are zero by construction, so a plain bit
+        count over the packed words is exact."""
+        return int(np.unpackbits(packed.view(np.uint8)).sum())
+
+    @staticmethod
+    def sole_from_packed(packed: np.ndarray):
+        """Single allowed token id of an already-unioned packed row, or
+        None when the popcount is not exactly 1."""
+        nz = np.nonzero(packed)[0]
+        if nz.size != 1:
+            return None
+        word = int(packed[nz[0]])
+        if word & (word - 1):               # more than one bit in the word
+            return None
+        return int(nz[0]) * 32 + word.bit_length() - 1
+
+    def union_popcount(self, rows) -> int:
+        """Number of vocabulary tokens allowed by the OR of `rows`."""
+        return self.popcount_packed(self.union_rows(rows))
+
+    def allowed_first_bytes(self, packed_union: np.ndarray) -> np.ndarray:
+        """[256] bool: byte c is True iff some token allowed by the packed
+        union starts with c. When exactly one byte survives, EVERY valid
+        tokenization of the continuation begins with it — the byte is
+        grammar-FORCED even though several tokens (prefix-nested merges)
+        remain in the mask. The jump-forward analyzer chains this to
+        recover forced literal byte-strings that token-level popcount
+        misses. Lazy [256, words] first-byte bitmasks, one AND per query."""
+        if self._fb is None:
+            W = self.packed.shape[1]
+            fb = np.zeros((256, W), np.uint32)
+            for tid, b in enumerate(self.tokenizer.id_to_bytes):
+                if b and tid < self.tokenizer.vocab_size:
+                    fb[b[0], tid // 32] |= np.uint32(1 << (tid % 32))
+            self._fb = fb
+        return (self._fb & packed_union[None, :]).any(axis=1)
+
+    def sole_survivor(self, rows):
+        """If exactly one token survives the union of `rows`, return its
+        id; else None."""
+        return self.sole_from_packed(self.union_rows(rows))
+
     @property
     def num_rows(self):
         return self.packed.shape[0]
@@ -89,9 +159,11 @@ def _fingerprint(grammar: Grammar, tok: ByteTokenizer) -> str:
         h.update(grammar.terminals[t].dfa.trans.tobytes())
         h.update(grammar.terminals[t].dfa.finals.tobytes())
     h.update(str(tok.vocab_size).encode())
-    for b in tok.id_to_bytes[:64]:
+    # hash EVERY token, length-prefixed: two vocabs sharing a prefix and
+    # total byte length must not collide onto the same cached store
+    for b in tok.id_to_bytes:
+        h.update(len(b).to_bytes(4, "little"))
         h.update(b)
-    h.update(str(sum(map(len, tok.id_to_bytes))).encode())
     return h.hexdigest()[:16]
 
 
@@ -218,6 +290,16 @@ def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,
               f"{meta['build_seconds']:.1f}s")
     if cache_dir:
         os.makedirs(cache_dir, exist_ok=True)
-        np.savez_compressed(path, packed=packed)
+        # atomic publish: write to a private temp file, then os.replace —
+        # concurrent builders race benignly and readers never see a torn
+        # .npz
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez_compressed(f, packed=packed)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
         meta["path"] = path
     return MaskStore(grammar, tokenizer, packed, meta)

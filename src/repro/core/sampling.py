@@ -180,6 +180,12 @@ class GrammarSampler:
             sig_spaced = self._lex_sig(tail + b" " + piece)
             if sig_glued is not None and sig_glued == sig_spaced:
                 out += piece
+            elif sig_spaced is None:
+                # whitespace is not lexable in this grammar (compact
+                # formats like jsonmsg): direct glue is the only option —
+                # such grammars must delimit adjacent terminals
+                # punctuationally, which the boundary re-lex confirms
+                out += piece
             else:
                 out += b" " + piece
         return bytes(out)

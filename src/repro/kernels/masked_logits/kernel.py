@@ -67,6 +67,92 @@ def _kernel(rows_ref,            # scalar-prefetch [B, A] int32
                                   jnp.asarray(NEG_INF, lg.dtype))
 
 
+def _kernel_span(rows_ref,           # scalar-prefetch [B, K, A] int32
+                 eos_ref,            # scalar-prefetch [B, K] int32
+                 logits_ref,         # [1, 1, BV]
+                 store_ref,          # [1, BW] uint32 (row via index_map)
+                 out_ref,            # [1, 1, BV]
+                 acc_ref,            # scratch [1, BW] uint32
+                 *, eos_id: int, num_accept: int, block_v: int):
+    """Speculation variant: one grid step per (slot b, span position k,
+    vocab block, accept row). Same packed-union-in-VMEM scheme as
+    `_kernel`, with the extra span axis so a draft-verify pass masks all
+    K positions of every slot in one launch."""
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    vblk = pl.program_id(2)
+    a = pl.program_id(3)
+
+    @pl.when(a == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rid = rows_ref[b, k, a]
+    word = jnp.where(rid >= 0, store_ref[...], jnp.uint32(0))
+    acc_ref[...] |= word
+
+    @pl.when(a == num_accept - 1)
+    def _finish():
+        words = acc_ref[0, :]
+        idx = jax.lax.broadcasted_iota(jnp.int32, (block_v,), 0)
+        wsel = words[idx // 32]
+        bit = (wsel >> (idx % 32).astype(jnp.uint32)) & jnp.uint32(1)
+        allow = bit == jnp.uint32(1)
+        gpos = vblk * block_v + idx
+        allow |= (gpos == eos_id) & (eos_ref[b, k] > 0)
+        lg = logits_ref[0, 0, :]
+        out_ref[0, 0, :] = jnp.where(allow, lg,
+                                     jnp.asarray(NEG_INF, lg.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("eos_id", "block_v",
+                                             "interpret"))
+def masked_logits_span(logits, store, rows, eos_allowed, *, eos_id: int = 1,
+                       block_v: int = 4096, interpret: bool = True):
+    """logits [B,K,V], store [R,W] uint32, rows [B,K,A] int32,
+    eos_allowed [B,K] bool -> [B,K,V] masked logits.
+
+    The [B,K,V] span form of `masked_logits` used by grammar-aware
+    speculative decoding: position k of slot b carries its own mask-row
+    set (the hypothetical prefix after accepting k draft tokens), and the
+    whole draft window is masked in one fused device call."""
+    B, K, V = logits.shape
+    R, W = store.shape
+    A = rows.shape[2]
+    block_v = min(block_v, V)
+    assert V % block_v == 0 and block_v % 32 == 0, (V, block_v)
+    bw = block_v // 32
+    nv = V // block_v
+
+    grid = (B, K, nv, A)
+    kernel = functools.partial(_kernel_span, eos_id=eos_id, num_accept=A,
+                               block_v=block_v)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, block_v),
+                             lambda b, k, v, a, rows, eos: (b, k, v)),
+                pl.BlockSpec(
+                    (1, bw),
+                    lambda b, k, v, a, rows, eos: (
+                        jnp.maximum(rows[b, k, a], 0), v)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_v),
+                                   lambda b, k, v, a, rows, eos: (b, k, v)),
+            scratch_shapes=[pltpu.VMEM((1, bw), jnp.uint32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, V), logits.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(rows.astype(jnp.int32), eos_allowed.astype(jnp.int32), logits, store)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("eos_id", "block_v",
                                              "interpret"))
 def masked_logits(logits, store, rows, eos_allowed, *, eos_id: int = 1,

@@ -13,8 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import masked_logits
-from .ref import masked_logits_ref
+from .kernel import masked_logits, masked_logits_span
+from .ref import masked_logits_ref, masked_logits_span_ref
 
 
 def apply_grammar_mask(logits, store, rows, eos_allowed, *, eos_id: int = 1,
@@ -34,4 +34,27 @@ def apply_grammar_mask(logits, store, rows, eos_allowed, *, eos_id: int = 1,
                         interpret=interpret)
     if constrained is not None:
         out = jnp.where(constrained[:, None], out, logits)
+    return out
+
+
+def apply_grammar_mask_span(logits, store, rows, eos_allowed, *,
+                            eos_id: int = 1, backend: str = "auto",
+                            block_v: int = 4096, constrained=None):
+    """Span ([B,K,V]) form of `apply_grammar_mask` for grammar-aware
+    speculative decoding: every draft position carries its own mask-row
+    set, so mask + accept-test run fused on device over the whole draft
+    window. `constrained` [B,K] bool marks positions that actually carry
+    a grammar mask (padding / unconstrained positions pass through)."""
+    if backend == "jnp":
+        return masked_logits_span_ref(logits, store, rows, eos_allowed,
+                                      eos_id=eos_id, constrained=constrained)
+    interpret = jax.default_backend() != "tpu"
+    if backend == "auto" and interpret and logits.shape[-1] > 16384:
+        return masked_logits_span_ref(logits, store, rows, eos_allowed,
+                                      eos_id=eos_id, constrained=constrained)
+    out = masked_logits_span(logits, store, rows, eos_allowed, eos_id=eos_id,
+                             block_v=min(block_v, logits.shape[-1]),
+                             interpret=interpret)
+    if constrained is not None:
+        out = jnp.where(constrained[:, :, None], out, logits)
     return out

@@ -35,3 +35,18 @@ def masked_logits_ref(logits, store, rows, eos_allowed, eos_id: int = 1,
     if constrained is not None:
         mask = mask | ~constrained[:, None]
     return jnp.where(mask, logits, jnp.asarray(NEG_INF, logits.dtype))
+
+
+def masked_logits_span_ref(logits, store, rows, eos_allowed, eos_id: int = 1,
+                           constrained=None):
+    """[B,K,V] span form (draft-verify speculation): position k of slot b
+    has its own row set / eos flag / constrained flag. Delegates to the
+    [B,V] reference on the flattened (b, k) axis so the two paths stay
+    numerically identical by construction."""
+    B, K, V = logits.shape
+    out = masked_logits_ref(
+        logits.reshape(B * K, V), store, rows.reshape(B * K, -1),
+        eos_allowed.reshape(B * K), eos_id=eos_id,
+        constrained=None if constrained is None
+        else constrained.reshape(B * K))
+    return out.reshape(B, K, V)

@@ -3,11 +3,18 @@
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --grammar json -n 4 \
       --max-new 80 --temperature 0.8 --slots 4 \
-      [--sequential] [--opportunistic] [--checkpoint ckpt]
+      [--sequential] [--opportunistic] [--checkpoint ckpt] \
+      [--speculative] [--literal-jump] [--draft-k K] [--max-jump J]
 
 `--slots B` sets the width of the continuous-batching decode pool (one
 [B, V] decode + one fused mask call per step); `--sequential` uses the
 round-robin one-request-per-device-call baseline instead.
+
+`--speculative` enables grammar-aware speculative decoding (jump-forward
+forced continuations + draft-verify spans; see docs/speculation.md);
+`--literal-jump` additionally jumps grammar-forced byte literals,
+re-tokenized canonically (longer jumps, byte-identical grammar
+guarantees, token stream may differ from the plain engine's).
 """
 from __future__ import annotations
 
@@ -62,6 +69,18 @@ def main(argv=None):
                     help="continuous-batching decode pool width")
     ap.add_argument("--sequential", action="store_true",
                     help="round-robin baseline (one request per call)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="grammar-aware speculative decoding "
+                         "(jump-forward + draft-verify)")
+    ap.add_argument("--literal-jump", action="store_true",
+                    help="jump grammar-forced byte literals, canonically "
+                         "re-tokenized (longer jumps)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens per slot per speculative step")
+    ap.add_argument("--max-jump", type=int, default=16,
+                    help="max forced tokens committed per jump")
+    ap.add_argument("--proposer", default="sam", choices=("sam", "ngram"),
+                    help="draft proposer (suffix automaton | n-gram)")
     args = ap.parse_args(argv)
 
     engine, bundles, tok = build_engine(
@@ -73,8 +92,17 @@ def main(argv=None):
     reqs = [Request(rid=i, prompt=args.prompt.encode(),
                     grammar=args.grammar, max_new_tokens=args.max_new,
                     decode=dc, seed=i) for i in range(args.num_requests)]
-    run = engine.generate_sequential if args.sequential else engine.generate
-    states, stats = run(reqs, verbose=True)
+    if args.speculative:
+        from repro.spec import SpecConfig
+        spec = SpecConfig(literal_jump=args.literal_jump,
+                          draft_k=args.draft_k, max_jump=args.max_jump,
+                          proposer=args.proposer)
+        states, stats = engine.generate_speculative(reqs, spec=spec,
+                                                    verbose=True)
+    else:
+        run = (engine.generate_sequential if args.sequential
+               else engine.generate)
+        states, stats = run(reqs, verbose=True)
 
     g, tab, _ = bundles[args.grammar]
     p = IncrementalParser(g, tab)
@@ -84,6 +112,11 @@ def main(argv=None):
           f"({stats.decode_steps} decode steps x {stats.batch_slots} slots)"
           f" | mask {stats.mask_time:.2f}s/{stats.mask_computations} | "
           f"opportunistic hits {stats.opportunistic_hits}")
+    if args.speculative:
+        print(f"speculation: jump {stats.jump_tokens} tokens "
+              f"({stats.jump_fraction:.0%} of output), drafts "
+              f"{stats.draft_accepted}/{stats.draft_proposed} accepted "
+              f"({stats.acceptance_rate:.0%}), plan {stats.plan_time:.2f}s")
     print(f"complete: {len(complete)}/{len(states)}, "
           f"valid among complete: {valid}/{len(complete)}")
 

@@ -90,43 +90,64 @@ def _self_attention_prefill(p, x, cfg, ctx):
 
 
 def _self_attention_decode(p, x, cache, cfg, ctx):
-    """x [B,1,D]; ctx['pos'] is a scalar or [B] int32 vector of absolute
-    positions (per-request positions in the serving engine)."""
-    B = x.shape[0]
+    """x [B,S,D] (S = 1 plain decode; S > 1 a speculative span);
+    ctx['pos'] is a scalar or [B] int32 vector of absolute START
+    positions (per-request positions in the serving engine) — span
+    query i sits at absolute position pos + i.
+
+    ctx['feed_mask'] [B,S] bool (optional) gates cache WRITES per span
+    position: padding positions of a ragged span attend (their outputs
+    are discarded by the caller) but never write, so rejected-draft /
+    padding state can't leak into the cache. Writes from real positions
+    at speculative offsets are naturally rolled back by the absolute-
+    position masking rule (kv_pos <= q_pos) plus overwrite-on-reuse."""
+    B, S, D = x.shape
     pos = jnp.broadcast_to(jnp.asarray(ctx["pos"], jnp.int32), (B,))
+    qpos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # [B,S]
     q, k, v = qkv_proj(p, x, cfg)
-    q = apply_rope(q, pos[:, None], cfg.rope_theta)
-    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    q = apply_rope(q, qpos, cfg.rope_theta)
+    k = apply_rope(k, qpos, cfg.rope_theta)
     L = cache["k"].shape[1]
-    slot = pos % L                                            # [B]
+    slot = qpos % L                                           # [B, S]
     # where-blend instead of scatter: GSPMD partitions a batched scatter
     # on a sharded cache via an f32-upcast rewrite (observed 10.7 GB of
     # f32 cache copies on the VLM decode); the select is shard-agnostic.
-    hit = (jnp.arange(L)[None, :] == slot[:, None])           # [B, L]
-    kc = jnp.where(hit[:, :, None, None], k.astype(cache["k"].dtype),
-                   cache["k"])
-    vc = jnp.where(hit[:, :, None, None], v.astype(cache["v"].dtype),
-                   cache["v"])
-    kv_pos = jnp.where(hit, pos[:, None], cache["kv_pos"])
+    # Span positions occupy distinct slots (S <= L), so the one-hot
+    # blend over S is exact: each cache line receives at most one write.
+    hit = (jnp.arange(L)[None, None, :] == slot[:, :, None])  # [B, S, L]
+    feed = ctx.get("feed_mask")
+    if feed is not None:
+        hit &= feed[:, :, None]
+    any_hit = hit.any(axis=1)                                 # [B, L]
+    hsel = hit.astype(cache["k"].dtype)
+    kc_new = jnp.einsum("bsl,bskd->blkd", hsel,
+                        k.astype(cache["k"].dtype))
+    vc_new = jnp.einsum("bsl,bskd->blkd", hsel,
+                        v.astype(cache["v"].dtype))
+    kc = jnp.where(any_hit[:, :, None, None], kc_new, cache["k"])
+    vc = jnp.where(any_hit[:, :, None, None], vc_new, cache["v"])
+    pos_new = jnp.einsum("bsl,bs->bl", hit.astype(jnp.int32), qpos)
+    kv_pos = jnp.where(any_hit, pos_new, cache["kv_pos"])
 
-    # mask from absolute positions
+    # mask from absolute positions (per span query)
     w = _window_of(cfg, ctx)
-    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])          # [B, L]
+    valid = (kv_pos[:, None, :] >= 0) & \
+        (kv_pos[:, None, :] <= qpos[:, :, None])              # [B, S, L]
     if w:
-        valid &= kv_pos > (pos[:, None] - w)
+        valid &= kv_pos[:, None, :] > (qpos[:, :, None] - w)
     scale = 1.0 / (q.shape[-1] ** 0.5)
     K = kc.shape[2]
     G = cfg.num_heads // K
-    qg = (q * scale).reshape(B, 1, K, G, -1)
+    qg = (q * scale).reshape(B, S, K, G, -1)
     # bf16 operands + f32 accumulation: never materialize an f32 image of
     # the KV cache (it dominated decode HBM on the 100-layer VLM)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc,
                    preferred_element_type=jnp.float32)
-    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", pr.astype(vc.dtype), vc,
                    preferred_element_type=jnp.float32)
-    o = o.reshape(B, 1, cfg.num_heads, -1).astype(x.dtype)
+    o = o.reshape(B, S, cfg.num_heads, -1).astype(x.dtype)
     return attn_out(p, o), {"k": kc, "v": vc, "kv_pos": kv_pos}
 
 

@@ -246,13 +246,11 @@ class Model:
         return shard_hint(logits, "logits_bsv"), caches
 
     # ------------------------------ decode -------------------------------
-    def decode_step(self, params, caches, token, pos, batch_ctx=None):
-        """token [B] int32, pos [B] or scalar int32 -> (logits [B,V], caches)."""
+    def _decode_trunk(self, params, caches, tokens, ctx):
+        """Shared decode body: embed [B,S] tokens, run every layer group's
+        KIND_DECODE under lax.scan against the caches -> ([B,S,V], caches)."""
         cfg = self.cfg
-        ctx = self._base_ctx()
-        ctx.update(batch_ctx or {})
-        ctx["pos"] = pos
-        x = embed_tokens(params["embed_block"], token[:, None])
+        x = embed_tokens(params["embed_block"], tokens)
         new_caches = []
         for (pat, count), gp, gc in zip(layer_groups(cfg), params["groups"],
                                         caches):
@@ -266,8 +264,42 @@ class Model:
                 return x, tuple(ncs)
             x, ngc = jax.lax.scan(body, x, (gp, gc))
             new_caches.append(ngc)
-        logits = lm_logits(params["embed_block"], x, cfg)[:, 0]
-        return shard_hint(logits, "logits_bv"), new_caches
+        return lm_logits(params["embed_block"], x, cfg), new_caches
+
+    def decode_step(self, params, caches, token, pos, batch_ctx=None):
+        """token [B] int32, pos [B] or scalar int32 -> (logits [B,V], caches)."""
+        ctx = self._base_ctx()
+        ctx.update(batch_ctx or {})
+        ctx["pos"] = pos
+        logits, new_caches = self._decode_trunk(params, caches,
+                                                token[:, None], ctx)
+        return shard_hint(logits[:, 0], "logits_bv"), new_caches
+
+    @property
+    def supports_span_decode(self) -> bool:
+        """True iff every decode layer kind is position-addressed (KV
+        cache keyed by absolute position), so a multi-token span can be
+        fed in one call and rejected speculative writes roll back via the
+        kv_pos <= q_pos masking rule. Recurrent kinds (rec/ssm) carry
+        unaddressed state and cannot rewind; cross/dec need side inputs."""
+        return all(kind in ("attn", "moe")
+                   for pat, _ in layer_groups(self.cfg) for kind in pat)
+
+    def decode_span(self, params, caches, tokens, pos, feed_mask=None,
+                    batch_ctx=None):
+        """Speculative span decode: tokens [B,S] at absolute positions
+        pos[b] + i -> (logits [B,S,V], caches). One fused device call
+        scores a whole draft window (jump-forward feed + draft-verify),
+        replacing S sequential decode_step round-trips. feed_mask [B,S]
+        bool gates per-position cache writes for ragged spans (see
+        layers._self_attention_decode). Requires supports_span_decode."""
+        ctx = self._base_ctx()
+        ctx.update(batch_ctx or {})
+        ctx["pos"] = pos
+        if feed_mask is not None:
+            ctx["feed_mask"] = feed_mask
+        logits, new_caches = self._decode_trunk(params, caches, tokens, ctx)
+        return shard_hint(logits, "logits_bsv"), new_caches
 
 
     # ------------------------- cache construction ------------------------

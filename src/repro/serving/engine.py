@@ -41,9 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.constrain import GrammarConstraint, MAX_ACCEPT
-from repro.core.decoding import DecodeConfig, NEG_INF, select_batch
+from repro.core.decoding import (DecodeConfig, NEG_INF, select_batch,
+                                 select_span)
 from repro.core.tokenizer import BOS_ID, ByteTokenizer, EOS_ID
-from repro.kernels.masked_logits.ops import apply_grammar_mask
+from repro.kernels.masked_logits.ops import (apply_grammar_mask,
+                                             apply_grammar_mask_span)
+from repro.spec.scheduler import (SPAN_BUCKETS, SlotPhase, SpecConfig,
+                                  SpecScheduler)
 
 
 @dataclass
@@ -72,6 +76,11 @@ class RequestState:
     opportunistic_hits: int = 0
     steps: int = 0
     slot: int = -1
+    # --- speculation (generate_speculative) ---
+    phase: str = SlotPhase.DECODING.value   # jumping/drafting/verifying/…
+    jump_tokens: int = 0                    # grammar-forced, zero model calls
+    draft_proposed: int = 0
+    draft_accepted: int = 0
 
 
 @dataclass
@@ -84,10 +93,23 @@ class EngineStats:
     opportunistic_hits: int = 0
     decode_steps: int = 0                   # batched [B,V] device steps
     batch_slots: int = 0
+    # --- speculation (generate_speculative) ---
+    jump_tokens: int = 0                    # emitted with zero model calls
+    draft_proposed: int = 0
+    draft_accepted: int = 0
+    plan_time: float = 0.0                  # host planning (jump + draft)
 
     @property
     def tokens_per_sec(self):
         return self.tokens / max(self.wall, 1e-9)
+
+    @property
+    def jump_fraction(self):
+        return self.jump_tokens / max(self.tokens, 1)
+
+    @property
+    def acceptance_rate(self):
+        return self.draft_accepted / max(self.draft_proposed, 1)
 
 
 class Engine:
@@ -150,10 +172,27 @@ class Engine:
                 lambda f, o: jax.lax.dynamic_update_slice_in_dim(
                     f, o.astype(f.dtype), b, axis=1), full, one)
 
+        def span_mask_select(logits, store, rows, eos, constrained,
+                             greedy, temp, top_k, top_p, keys):
+            """Fused speculation pass: grammar-mask a [B, S, V] span and
+            select a token at every position (constrained positions via
+            the packed store rows, padding/unconstrained pass through).
+            The accept test is a host-side == against the [B, S] ids."""
+            masked = apply_grammar_mask_span(logits, store, rows, eos,
+                                             backend=backend,
+                                             constrained=constrained)
+            ids = select_span(masked, keys, greedy, temp, top_k, top_p)
+            ok = jnp.any(masked > NEG_INF / 2, axis=-1)
+            return masked, ids, ok
+
         self._mask_sample = jax.jit(mask_sample)
         self._resample = jax.jit(resample)
         self._sample_plain = jax.jit(select_batch)
         self._insert_caches = jax.jit(insert)
+        self._span_mask_select = jax.jit(span_mask_select)
+        self._span_decode = jax.jit(
+            lambda p, c, toks, pos, fm: self.model.decode_span(
+                p, c, toks, pos, feed_mask=fm))
 
     # ------------------------------ lifecycle -----------------------------
 
@@ -162,6 +201,25 @@ class Engine:
             return None
         g, tab, store = self.bundles[req.grammar]
         return GrammarConstraint(g, tab, store, self.tok)
+
+    def _admit_common(self, req: Request, b: int, caches):
+        """Shared slot admission: build request state, prefill the
+        prompt, insert its caches into slot b. Returns (state, caches);
+        per-loop array updates stay with the caller."""
+        st = RequestState(req=req, slot=b)
+        st.constraint = self._make_constraint(req)
+        ids = self._prompt_ids(req)
+        if len(ids) == 1:
+            # prefill needs >= 1 token before the decode loop takes
+            # over; re-feeding the last prompt token would double-step
+            # recurrent caches, so prepend BOS instead
+            ids = [BOS_ID] + ids
+        prompt = jnp.asarray([ids[:-1]], jnp.int32)
+        _, pc = self._prefill(self.params, {"tokens": prompt})
+        caches = self._insert_caches(caches, pc, jnp.int32(b))
+        st.token_ids = list(ids)
+        st.pos = len(ids)
+        return st, caches
 
     def _prompt_ids(self, req: Request) -> list[int]:
         ids = self.tok.encode(req.prompt) if req.prompt else []
@@ -252,22 +310,10 @@ class Engine:
         def admit(b: int):
             nonlocal caches
             req = queue.popleft()
-            st = RequestState(req=req, slot=b)
-            st.constraint = self._make_constraint(req)
-            ids = self._prompt_ids(req)
-            if len(ids) == 1:
-                # prefill needs >= 1 token before the decode loop takes
-                # over; re-feeding the last prompt token would double-step
-                # recurrent caches, so prepend BOS instead
-                ids = [BOS_ID] + ids
-            prompt = jnp.asarray([ids[:-1]], jnp.int32)
-            _, pc = self._prefill(self.params, {"tokens": prompt})
-            caches = self._insert_caches(caches, pc, jnp.int32(b))
-            st.token_ids = list(ids)
-            st.pos = len(ids)
+            st, caches = self._admit_common(req, b, caches)
             slot_state[b] = st
-            cur_tok[b] = ids[-1]
-            feed_pos[b] = len(ids) - 1
+            cur_tok[b] = st.token_ids[-1]
+            feed_pos[b] = st.pos - 1
             seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
             constrained[b] = st.constraint is not None
             g, t, k, p = DecodeConfig.batch_arrays([req.decode])
@@ -418,6 +464,311 @@ class Engine:
             opportunistic_hits=opportunistic_hits,
             decode_steps=decode_steps,
             batch_slots=B,
+        )
+        return all_states, stats
+
+    # ========================== speculative path ==========================
+    # Grammar-aware speculative decoding on top of the batched pool:
+    # jump-forward (grammar-forced tokens committed with zero model
+    # calls) + draft-verify (host proposer drafts, one fused [B, S, V]
+    # span decode + mask + select verifies the whole window). Greedy
+    # speculative decoding is token-for-token identical to generate():
+    # forced tokens are the masked argmax's only support point, accepted
+    # drafts equal the span selection the plain engine would have made,
+    # and the bonus/demote path replays the same deterministic order.
+
+    def _resolve_span_selection(self, st: RequestState, masked_dev, b: int,
+                                idx: int, proposed: int, row_ok: bool,
+                                salt: int) -> Optional[int]:
+        """Validate one span selection against the exact oracle, demoting
+        invalid picks in the same order as generate()'s device-side
+        rejection wrapper (4 demote rounds, then the exact-filter
+        fallback). Pulls the [V] masked row to the host only when the
+        first pick fails (rare)."""
+        gc = st.constraint
+        if gc is None:
+            return proposed
+        row = None
+        t = proposed
+        if row_ok:
+            for attempt in range(4):
+                if t == EOS_ID or gc.is_valid_extension(st.generated, t):
+                    return t
+                if row is None:
+                    row = np.asarray(masked_dev[b, idx], np.float32)
+                row[t] = NEG_INF
+                if not (row > NEG_INF / 2).any():
+                    break
+                if st.req.decode.method == "greedy":
+                    t = int(np.argmax(row))
+                else:
+                    # host-side redraw (temperature softmax over the
+                    # demoted row; sampling carries no equivalence
+                    # obligation — see docs/speculation.md)
+                    temp = max(st.req.decode.temperature, 1e-6)
+                    r = row.astype(np.float64)
+                    finite = r > NEG_INF / 2
+                    p = np.where(finite, np.exp((r - r[finite].max())
+                                                / temp), 0.0)
+                    p /= p.sum()
+                    rng = np.random.default_rng(
+                        (st.req.seed * 1000003 + st.steps * 31
+                         + salt * 7 + attempt) & 0xFFFFFFFF)
+                    t = int(rng.choice(len(r), p=p))
+        if row is None:
+            row = np.asarray(masked_dev[b, idx], np.float32)
+        return self._fallback_exact(st, row, salt)
+
+    @staticmethod
+    def _choose_span(desired: list) -> int:
+        """Pick the span bucket maximizing committed-tokens-per-compute:
+        a span of width S costs ~B*S model work, and serves min(d, S)
+        useful positions per slot. The +0.3 denominator models the fixed
+        per-step overhead, breaking ties toward wider spans."""
+        top = max(desired)
+        best, best_score = 1, -1.0
+        for S in SPAN_BUCKETS:
+            score = sum(min(d, S) for d in desired) / (S + 0.3)
+            if score > best_score:
+                best, best_score = S, score
+            if S >= top:
+                break
+        return best
+
+    def _span_keys(self, seeds: np.ndarray, S: int, step: int) -> np.ndarray:
+        """[B, S, 2] uint32 threefry key data: one counter-mode stream
+        per (slot, span position). Greedy rows ignore keys."""
+        B = seeds.shape[0]
+        k = np.empty((B, S, 2), np.uint32)
+        k[:, :, 0] = seeds[:, None]
+        k[:, :, 1] = (np.uint32((step << 6) & 0xFFFFFFFF)
+                      + np.arange(S, dtype=np.uint32)[None, :])
+        return k
+
+    def generate_speculative(self, requests: list[Request],
+                             spec: Optional[SpecConfig] = None,
+                             verbose: bool = False):
+        """Continuous batching with grammar-aware speculation.
+
+        Per engine step and per active slot: the scheduler first chases
+        grammar-FORCED tokens (jump-forward, committed host-side with no
+        model call), then drafts up to K oracle-vetted tokens from the
+        slot's own history. One fused span decode replays forced tokens
+        and scores drafts for every slot at once ([B, S, V], S bucketed),
+        one fused span mask+select turns that into per-position picks,
+        and the host accepts each slot's longest matching draft prefix
+        plus a bonus token. Slots with nothing to speculate ride the same
+        span at width 1 — identical cost to generate()'s step.
+        """
+        spec = spec or SpecConfig()
+        if not self.model.supports_span_decode:
+            raise ValueError(
+                "speculative decoding needs position-addressed decode "
+                "caches (attn/moe layer kinds); this arch has recurrent "
+                "or side-input state")
+        t0 = time.time()
+        B = self.slots
+        sched = SpecScheduler(spec, self.tok)
+        queue = deque(requests)
+        all_states: list[RequestState] = []
+        caches = self.model.init_decode_caches(B, self.max_len)
+        # the feed cursor: slot b's tokens at positions < feed_pos[b] are
+        # in the decode caches; token_ids[feed_pos[b]:pos] are committed
+        # but pending feed (cur-token + jump backlog)
+        feed_pos = np.zeros(B, np.int32)
+        slot_state: list[Optional[RequestState]] = [None] * B
+        seeds = np.zeros(B, np.uint32)
+        greedy = np.ones(B, bool)
+        temp = np.ones(B, np.float32)
+        top_k = np.zeros(B, np.int32)
+        top_p = np.ones(B, np.float32)
+        step = 0
+        decode_steps = 0
+        plan_time = 0.0
+        mask_time = 0.0
+        mask_computations = 0
+        jump_tokens = 0
+        draft_proposed = 0
+        draft_accepted = 0
+
+        def admit(b: int):
+            nonlocal caches
+            req = queue.popleft()
+            st, caches = self._admit_common(req, b, caches)
+            slot_state[b] = st
+            feed_pos[b] = st.pos - 1
+            seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
+            g, t, k, p = DecodeConfig.batch_arrays([req.decode])
+            greedy[b], temp[b], top_k[b], top_p[b] = g[0], t[0], k[0], p[0]
+            sched.on_admit(st)
+            all_states.append(st)
+
+        def finish(b: int):
+            st = slot_state[b]
+            slot_state[b] = None
+            feed_pos[b] = 0
+            sched.on_finish(st)
+            if verbose:
+                print(f"[req {st.req.rid}] {st.finish_reason}: "
+                      f"{st.generated[:70]!r}")
+
+        def commit_one(st: RequestState, token: int):
+            st.steps += 1
+            self._commit(st, token)
+
+        while queue or any(s is not None for s in slot_state):
+            for b in range(B):
+                if slot_state[b] is None and queue:
+                    admit(b)
+            active = [b for b in range(B) if slot_state[b] is not None]
+            step += 1
+
+            # ---- host planning: jump-forward commits + drafting ---------
+            # Jumped tokens commit immediately but drain through the span
+            # as per-slot BACKLOG (feed cursor trails the commit
+            # frontier), so a long jump never inflates the pool's span
+            # width on its own.
+            plans = {}
+            t_plan = time.time()
+            for b in active:
+                st = slot_state[b]
+                backlog = (st.pos - 1) - int(feed_pos[b])
+                pre = st.jump_tokens
+                plans[b] = sched.plan_slot(st, commit_one, self.max_len,
+                                           backlog=backlog)
+                jump_tokens += st.jump_tokens - pre
+                st.phase = plans[b].phase.value
+            plan_time += time.time() - t_plan
+            for b in active:
+                st = slot_state[b]
+                if st.done:      # finished mid-jump: nothing left to feed
+                    sched.on_commit(st, plans[b].jumped)
+                    finish(b)
+            live = [b for b in active if slot_state[b] is not None]
+            if not live:
+                continue
+
+            # ---- span width: maximize commits per unit of compute -------
+            # pend = committed-but-unfed tokens (current token + backlog);
+            # desired = pend + drafts. The bucket is chosen to maximize
+            # sum(min(desired, S)) / S so one deep slot cannot force the
+            # whole pool through a mostly-padding span.
+            pend_n = {b: slot_state[b].pos - int(feed_pos[b]) for b in live}
+            S = self._choose_span(
+                [pend_n[b] + len(plans[b].drafts) for b in live])
+            tokens = np.zeros((B, S), np.int32)
+            fmask = np.zeros((B, S), bool)
+            sel0 = {}        # b -> span index of first selection (-1 none)
+            for b in live:
+                st = slot_state[b]
+                pend = st.token_ids[int(feed_pos[b]): st.pos]
+                if len(pend) > S:          # backlog drain: feed only
+                    feed = pend[:S]
+                    sel0[b] = -1
+                    plans[b].drafts = []
+                else:
+                    plans[b].drafts = plans[b].drafts[: S - len(pend)]
+                    feed = pend + plans[b].drafts
+                    sel0[b] = len(pend) - 1
+                tokens[b, : len(feed)] = feed
+                fmask[b, : len(feed)] = True
+                if plans[b].drafts:
+                    st.phase = SlotPhase.VERIFYING.value
+            logits, caches = self._span_decode(
+                self.params, caches, jnp.asarray(tokens),
+                jnp.asarray(feed_pos), jnp.asarray(fmask))
+            decode_steps += 1
+
+            # ---- mask rows for every selection position -----------------
+            t_mask = time.time()
+            rows = np.full((B, S, MAX_ACCEPT), -1, np.int32)
+            eosm = np.zeros((B, S), bool)
+            consm = np.zeros((B, S), bool)
+            for b in live:
+                st = slot_state[b]
+                pl = plans[b]
+                if st.constraint is None or sel0[b] < 0:
+                    continue
+                off = self._row_offset[st.req.grammar]
+                text = st.generated
+                for i in range(len(pl.drafts) + 1):
+                    if i > 0:
+                        text = text + self.tok.id_to_bytes[pl.drafts[i - 1]]
+                    if i == 0 and pl.stop_mask is not None:
+                        sm = pl.stop_mask   # reuse the jump analyzer's mask
+                    else:
+                        sm = st.constraint.step_rows(text)
+                    f = sel0[b] + i
+                    rows[b, f] = np.where(sm.rows >= 0, sm.rows + off,
+                                          sm.rows)
+                    eosm[b, f] = sm.eos_allowed
+                    consm[b, f] = True
+                    st.mask_computations += 1
+                    mask_computations += 1
+            keys = self._span_keys(seeds, S, step)
+            masked, ids, ok = self._span_mask_select(
+                logits, self._store_cat, jnp.asarray(rows),
+                jnp.asarray(eosm), jnp.asarray(consm), jnp.asarray(greedy),
+                jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+                jnp.asarray(keys))
+            ids_h, ok_h = np.asarray(ids), np.asarray(ok)
+            mask_time += time.time() - t_mask
+
+            # ---- accept: longest valid draft prefix + bonus token -------
+            for b in live:
+                st = slot_state[b]
+                pl = plans[b]
+                if sel0[b] < 0:
+                    # pure backlog drain: advance the feed cursor; the
+                    # step's jump commits (nonempty only on the first
+                    # drain step) must still reach the proposer history
+                    sched.on_commit(st, pl.jumped)
+                    feed_pos[b] += S
+                    continue
+                idx = sel0[b]
+                committed = []
+                for d in pl.drafts:
+                    if st.done or int(ids_h[b, idx]) != d:
+                        break
+                    # d is oracle-vetted; selection == d is exactly what
+                    # the plain engine would have committed here
+                    commit_one(st, d)
+                    committed.append(d)
+                    idx += 1
+                st.draft_proposed += len(pl.drafts)
+                st.draft_accepted += len(committed)
+                draft_proposed += len(pl.drafts)
+                draft_accepted += len(committed)
+                sched.on_verify(st, len(pl.drafts), len(committed))
+                if not st.done:
+                    nxt = self._resolve_span_selection(
+                        st, masked, b, idx, int(ids_h[b, idx]),
+                        bool(ok_h[b, idx]), step)
+                    if nxt is None:
+                        st.done = True
+                        st.finish_reason = "mask_exhausted"
+                    else:
+                        commit_one(st, nxt)
+                        committed.append(nxt)
+                sched.on_commit(st, pl.jumped + committed)
+                if st.done:
+                    finish(b)
+                else:
+                    feed_pos[b] = st.pos - 1
+                    st.phase = SlotPhase.DECODING.value
+
+        stats = EngineStats(
+            requests=len(all_states),
+            tokens=sum(s.steps for s in all_states),
+            wall=time.time() - t0,
+            mask_time=mask_time,
+            mask_computations=mask_computations,
+            decode_steps=decode_steps,
+            batch_slots=B,
+            jump_tokens=jump_tokens,
+            draft_proposed=draft_proposed,
+            draft_accepted=draft_accepted,
+            plan_time=plan_time,
         )
         return all_states, stats
 

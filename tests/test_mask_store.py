@@ -115,3 +115,41 @@ def test_eos_only_when_complete(grammar_bundle):
     assert not gc.step_rows(b"1+").eos_allowed
     assert not gc.step_rows(b"math_sqrt(3").eos_allowed
     assert gc.step_rows(b"math_sqrt(3)").eos_allowed
+
+
+# ------------------- cache fingerprint + atomic write -------------------
+
+def test_fingerprint_covers_all_token_bytes(tokenizer):
+    """Two vocabs sharing the first 64 tokens AND total byte length must
+    not collide onto the same cached store (the old fingerprint hashed
+    only id_to_bytes[:64] + the total length)."""
+    from repro.core.grammars import load_grammar
+    from repro.core.mask_store import _fingerprint
+    from repro.core.tokenizer import ByteTokenizer
+    g, _ = load_grammar("calc")
+    a = ByteTokenizer(512)
+    b = ByteTokenizer(512)
+    # swap two late tokens' bytes: same prefix, same total length
+    i, j = 400, 401
+    assert a.id_to_bytes[i] != a.id_to_bytes[j]
+    b.id_to_bytes[i], b.id_to_bytes[j] = b.id_to_bytes[j], b.id_to_bytes[i]
+    assert _fingerprint(g, a) != _fingerprint(g, b)
+    assert _fingerprint(g, a) == _fingerprint(g, ByteTokenizer(512))
+
+
+def test_cache_roundtrip_atomic(tmp_path, tokenizer):
+    """The .npz cache is written via temp-file + os.replace: the final
+    path appears complete, no temp litter stays behind, and a reload hits
+    the cache with identical packed rows."""
+    import os
+    from repro.core.grammars import load_grammar
+    from repro.core.mask_store import build_mask_store
+    g, _ = load_grammar("calc")
+    store = build_mask_store(g, tokenizer, cache_dir=str(tmp_path))
+    assert not store.meta["cached"]
+    files = os.listdir(tmp_path)
+    assert len(files) == 1 and files[0].endswith(".npz")
+    assert not any(".tmp" in f for f in files)
+    store2 = build_mask_store(g, tokenizer, cache_dir=str(tmp_path))
+    assert store2.meta["cached"]
+    np.testing.assert_array_equal(store.packed, store2.packed)
