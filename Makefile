@@ -2,13 +2,16 @@
 
 PY ?= python
 
-.PHONY: test bench docs-check
+.PHONY: test bench bench-smoke docs-check
 
 test:              ## tier-1 test suite (same command CI runs)
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 bench:             ## paper-table + engine benchmarks (CSV to stdout)
 	PYTHONPATH=src $(PY) benchmarks/run.py
+
+bench-smoke:       ## seconds-scale paged-engine smoke run (CI gate)
+	PYTHONPATH=src $(PY) -m benchmarks.bench_smoke
 
 docs-check:        ## fail if src/repro packages are missing from README's module map
 	$(PY) scripts/docs_check.py

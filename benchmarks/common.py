@@ -12,11 +12,11 @@ import numpy as np
 
 
 def build_demo(grammars=("json",), vocab=2048, opportunistic=False,
-               seed=0, max_len=400, slots=4):
+               seed=0, max_len=400, slots=4, **engine_kw):
     from repro.launch.serve import build_engine
     return build_engine("syncode-demo", grammars=grammars, vocab=vocab,
                         opportunistic=opportunistic, seed=seed,
-                        max_len=max_len, slots=slots)
+                        max_len=max_len, slots=slots, **engine_kw)
 
 
 def timeit(fn, n=5, warmup=1):

@@ -1,0 +1,6 @@
+"""Shared Pallas TPU compat shims for the kernel packages."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

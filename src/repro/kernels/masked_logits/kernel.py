@@ -25,11 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from .._compat import CompilerParams as _CompilerParams
 
-# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
-    getattr(pltpu, "TPUCompilerParams")
+NEG_INF = -1e30
 
 
 def _kernel(rows_ref,            # scalar-prefetch [B, A] int32

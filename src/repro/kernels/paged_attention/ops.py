@@ -1,0 +1,37 @@
+"""Public op: page-table attention on device.
+
+`paged_attention` dispatches between the Pallas kernel (TPU target;
+interpret=True executes the kernel body on CPU for validation) and the
+pure-jnp gather-based reference — selected by `backend`, mirroring
+`repro.kernels.masked_logits.ops`.
+
+Both paths are bit-exact twins of the dense decode attention in
+`models/layers.py` (same einsum dtypes, mask constant and reduction
+axes), which is what lets the paged engine promise token-for-token
+identical output to the dense engine.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import paged_attention_decode, paged_attention_span
+from .ref import paged_attention_ref
+
+
+def paged_attention(q, k_pool, v_pool, page_table, pos, *,
+                    backend: str = "auto"):
+    """q [B,S,H,Dh] (roped, unscaled); k_pool/v_pool [P,ps,K,Dh];
+    page_table [B,nP] int32 (-1 = unmapped); pos [B] int32 absolute
+    start positions -> [B,S,H,Dh].
+
+    backend: 'pallas' | 'jnp' | 'auto'. 'auto' picks the kernel on TPU
+    and the jnp reference elsewhere (interpret-mode gathers are far
+    slower than XLA's native gather on CPU; the kernel stays covered by
+    the parity tests)."""
+    if backend == "jnp":
+        return paged_attention_ref(q, k_pool, v_pool, page_table, pos)
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "auto" and not on_tpu:
+        return paged_attention_ref(q, k_pool, v_pool, page_table, pos)
+    return paged_attention_span(q, k_pool, v_pool, page_table, pos,
+                                interpret=not on_tpu)

@@ -1,0 +1,62 @@
+"""Pure-jnp reference for paged attention: gather-then-attend.
+
+The reference reconstructs the dense cache view of a slot from its page
+table (`pool[page_table[b]]` → `[B, L, K, Dh]` with L = n_pages·ps) and
+then runs EXACTLY the einsum/softmax sequence of the dense decode path
+(`layers._self_attention_decode`) on it — same einsum specs, same mask
+constant, same dtypes — so paged attention is bit-identical to the dense
+engine's attention, and the Pallas kernel has an executable oracle.
+
+Position convention: the token stored at (page_table[b, j], o) sits at
+absolute position j·ps + o of slot b's logical sequence; validity needs
+no kv_pos array — entry l is attendable iff its page is mapped
+(page_table ≥ 0) and l ≤ q_pos (positions beyond the frontier hold
+stale/unwritten data and are masked, which is also what rolls back
+rejected speculative writes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, pos):
+    """q [B,S,H,Dh] (roped, unscaled); k_pool/v_pool [P,ps,K,Dh];
+    page_table [B,nP] int32 (-1 = unmapped); pos [B] int32 absolute start
+    positions (span query i of slot b sits at pos[b] + i).
+    Returns [B,S,H,Dh] in q.dtype. Full causal attention (no sliding
+    window — the paged engine is gated to window-free archs)."""
+    P, ps, K, Dh = k_pool.shape
+    B, S, H, _ = q.shape
+    nP = page_table.shape[1]
+    L = nP * ps
+    G = H // K
+
+    safe = jnp.maximum(page_table, 0)                        # [B, nP]
+    kc = k_pool[safe].reshape(B, L, K, Dh)
+    vc = v_pool[safe].reshape(B, L, K, Dh)
+
+    qpos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # [B,S]
+    idx = jnp.arange(L, dtype=jnp.int32)                     # absolute pos
+    mapped = jnp.repeat(page_table >= 0, ps, axis=1)         # [B, L]
+    valid = mapped[:, None, :] & \
+        (idx[None, None, :] <= qpos[:, :, None])             # [B, S, L]
+
+    # identical math to layers._self_attention_decode (bit-exact twin)
+    scale = 1.0 / (Dh ** 0.5)
+    qg = (q * scale).reshape(B, S, K, G, -1)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pr.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def paged_attention_decode_ref(q, k_pool, v_pool, page_table, pos):
+    """Decode ([B,1]) convenience wrapper: q [B,H,Dh] -> [B,H,Dh]."""
+    return paged_attention_ref(q[:, None], k_pool, v_pool, page_table,
+                               pos)[:, 0]

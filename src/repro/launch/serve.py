@@ -34,7 +34,8 @@ from repro.serving.engine import Engine, Request
 
 def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
                  max_len=512, opportunistic=False, checkpoint=None,
-                 seed=0, slots=4):
+                 seed=0, slots=4, paged=False, page_size=16,
+                 num_pages=None, prefill_chunk=32):
     cfg = get_config(arch)
     if vocab:
         from dataclasses import replace
@@ -51,7 +52,9 @@ def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
         params, step, _ = load_checkpoint(checkpoint, params)
         print(f"loaded checkpoint at step {step}")
     return Engine(model, params, tok, bundles, max_len=max_len,
-                  opportunistic=opportunistic, slots=slots), bundles, tok
+                  opportunistic=opportunistic, slots=slots, paged=paged,
+                  page_size=page_size, num_pages=num_pages,
+                  prefill_chunk=prefill_chunk), bundles, tok
 
 
 def main(argv=None):
@@ -67,6 +70,15 @@ def main(argv=None):
     ap.add_argument("--prompt", default="Q: produce output. A:")
     ap.add_argument("-B", "--slots", type=int, default=4,
                     help="continuous-batching decode pool width")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: page-table attention, "
+                         "refcounted prefix sharing, chunked prefill "
+                         "(docs/kv_paging.md)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV pool size in pages (default: the dense "
+                         "engine's memory budget, slots*max_len/page)")
     ap.add_argument("--sequential", action="store_true",
                     help="round-robin baseline (one request per call)")
     ap.add_argument("--speculative", action="store_true",
@@ -86,7 +98,8 @@ def main(argv=None):
     engine, bundles, tok = build_engine(
         args.arch, grammars=(args.grammar,),
         opportunistic=args.opportunistic, checkpoint=args.checkpoint,
-        slots=args.slots)
+        slots=args.slots, paged=args.paged, page_size=args.page_size,
+        num_pages=args.num_pages)
     dc = DecodeConfig(method="greedy" if args.greedy else "sample",
                       temperature=args.temperature)
     reqs = [Request(rid=i, prompt=args.prompt.encode(),
@@ -117,6 +130,11 @@ def main(argv=None):
               f"({stats.jump_fraction:.0%} of output), drafts "
               f"{stats.draft_accepted}/{stats.draft_proposed} accepted "
               f"({stats.acceptance_rate:.0%}), plan {stats.plan_time:.2f}s")
+    if args.paged:
+        print(f"kv paging: {stats.kv_pages_in_use} pages in use, peak "
+              f"util {stats.kv_peak_utilization:.0%}, prefix hit rate "
+              f"{stats.prefix_hit_rate:.0%}, {stats.kv_evictions} "
+              f"evictions, {stats.kv_cow_copies} COW copies")
     print(f"complete: {len(complete)}/{len(states)}, "
           f"valid among complete: {valid}/{len(complete)}")
 

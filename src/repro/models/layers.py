@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from .common import (NEG_INF, apply_rope, attn_out, chunked_attention,
                      dense_init, ffn, init_attention, init_ffn, qkv_proj,
                      rms_norm, split_keys)
+from ..kernels.paged_attention.ops import paged_attention
 from .moe import init_moe, moe_ffn
 from .rglru import (init_rglru, init_rglru_cache, rglru_decode,
                     rglru_prefill, rglru_train)
@@ -79,7 +80,13 @@ def _self_attention_prefill(p, x, cfg, ctx):
     cache = init_kv_cache(cfg, B, L, x.dtype)
     take = jnp.arange(L) + max(0, S - L)          # last L absolute positions
     slot = take % L
-    kv_pos = jnp.broadcast_to(jnp.where(take < S, take, -1)[None, :],
+    # true_len < S marks bucket-padded prompt tail positions (the engine
+    # pads prompts to power-of-two lengths so prefill jits once per
+    # bucket, not once per length) as empty: their K/V are garbage the
+    # ring overwrites later, and kv_pos = -1 keeps them unattendable.
+    limit = jnp.minimum(S, jnp.asarray(ctx["true_len"], jnp.int32)) \
+        if "true_len" in ctx else S
+    kv_pos = jnp.broadcast_to(jnp.where(take < limit, take, -1)[None, :],
                               (B, L))
     cache = {
         "k": cache["k"].at[:, slot].set(k[:, take].astype(cache["k"].dtype)),
@@ -87,6 +94,44 @@ def _self_attention_prefill(p, x, cfg, ctx):
         "kv_pos": jnp.zeros((B, L), jnp.int32).at[:, slot].set(kv_pos),
     }
     return attn_out(p, o), cache
+
+
+def _paged_attention_decode(p, x, cache, cfg, ctx):
+    """Paged twin of `_self_attention_decode`: the cache is a global page
+    pool {"k","v": [P, ps, K, Dh]} shared by every slot, and
+    ctx["page_table"] [B, nP] (int32, -1 = unmapped) names each slot's
+    pages. Span position i of slot b writes its K/V at
+    (page_table[b, (pos+i)//ps], (pos+i)%ps) — a flat scatter; unmapped
+    or feed_mask-gated positions drop — and attention reads back through
+    the page table (`kernels.paged_attention`, bit-exact with the dense
+    branch). Rejected speculative writes roll back exactly as in the
+    dense path: positions beyond the commit frontier are masked
+    (idx <= q_pos) and overwritten on re-feed."""
+    B, S, D = x.shape
+    kp, vp = cache["k"], cache["v"]                    # [P, ps, K, Dh]
+    P, ps, K, Dh = kp.shape
+    pos = jnp.broadcast_to(jnp.asarray(ctx["pos"], jnp.int32), (B,))
+    qpos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # [B,S]
+    q, k, v = qkv_proj(p, x, cfg)
+    q = apply_rope(q, qpos, cfg.rope_theta)
+    k = apply_rope(k, qpos, cfg.rope_theta)
+    pt = ctx["page_table"]
+    page = jnp.take_along_axis(pt, qpos // ps, axis=1)             # [B,S]
+    ok = page >= 0
+    feed = ctx.get("feed_mask")
+    if feed is not None:
+        ok &= feed
+    dest = jnp.where(ok, page * ps + qpos % ps, P * ps)  # OOB -> dropped
+    flat = dest.reshape(-1)
+    kp = kp.reshape(P * ps, K, Dh).at[flat].set(
+        k.reshape(B * S, K, Dh).astype(kp.dtype),
+        mode="drop").reshape(P, ps, K, Dh)
+    vp = vp.reshape(P * ps, K, Dh).at[flat].set(
+        v.reshape(B * S, K, Dh).astype(vp.dtype),
+        mode="drop").reshape(P, ps, K, Dh)
+    o = paged_attention(q, kp, vp, pt, pos,
+                        backend=ctx.get("paged_backend", "auto"))
+    return attn_out(p, o), {"k": kp, "v": vp}
 
 
 def _self_attention_decode(p, x, cache, cfg, ctx):
@@ -100,7 +145,12 @@ def _self_attention_decode(p, x, cache, cfg, ctx):
     are discarded by the caller) but never write, so rejected-draft /
     padding state can't leak into the cache. Writes from real positions
     at speculative offsets are naturally rolled back by the absolute-
-    position masking rule (kv_pos <= q_pos) plus overwrite-on-reuse."""
+    position masking rule (kv_pos <= q_pos) plus overwrite-on-reuse.
+
+    When ctx carries a page table the slot's KV lives in the shared
+    paged pool instead of a dense per-slot cache (docs/kv_paging.md)."""
+    if "page_table" in ctx:
+        return _paged_attention_decode(p, x, cache, cfg, ctx)
     B, S, D = x.shape
     pos = jnp.broadcast_to(jnp.asarray(ctx["pos"], jnp.int32), (B,))
     qpos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # [B,S]

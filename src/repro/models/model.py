@@ -224,12 +224,17 @@ class Model:
         return total, {"ce": ce, "lb": aux["lb"], "z": aux["z"]}
 
     # ----------------------------- prefill -------------------------------
-    def prefill(self, params, batch, cache_len=None):
+    def prefill(self, params, batch, cache_len=None, true_len=None):
+        """true_len (traced scalar, optional): number of real prompt
+        tokens when `tokens` is padded to a jit bucket length — padded
+        positions get kv_pos = -1 so they can never be attended."""
         cfg = self.cfg
         tokens = batch["tokens"]
         ctx = self._ctx_from_batch(params, batch)
         if cache_len is not None:
             ctx["cache_len"] = cache_len
+        if true_len is not None:
+            ctx["true_len"] = true_len
         x = embed_tokens(params["embed_block"], tokens)
         x = shard_hint(x, "act_bsd")
         caches = []
@@ -274,6 +279,17 @@ class Model:
         logits, new_caches = self._decode_trunk(params, caches,
                                                 token[:, None], ctx)
         return shard_hint(logits[:, 0], "logits_bv"), new_caches
+
+    @property
+    def prefill_padding_safe(self) -> bool:
+        """True iff prefill tolerates a zero-padded prompt tail under
+        `true_len` masking (the serving engine's jit-bucketing). Cache
+        entries of attention kinds are per-position and masked via
+        kv_pos; recurrent kinds (rec/ssm) fold the padded tail into
+        their carried state, so they must be prefilled at exact
+        length."""
+        return all(kind not in ("rec", "ssm")
+                   for pat, _ in layer_groups(self.cfg) for kind in pat)
 
     @property
     def supports_span_decode(self) -> bool:
@@ -343,6 +359,35 @@ class Model:
                 jax.tree.map(lambda a: jnp.zeros((count,) + a.shape, a.dtype),
                              one(kind))
                 for kind in pat)
+            caches.append(group)
+        return caches
+
+    def init_paged_caches(self, num_pages: int, page_size: int):
+        """Global paged KV pool for the serving engine's paged mode
+        (docs/kv_paging.md): every attention layer holds
+        {"k","v": [count, num_pages, page_size, K, Dh]} shared across
+        all decode slots; per-slot page tables ride in via
+        ctx["page_table"] on each decode/span call. Requires
+        position-addressed, window-free attention throughout."""
+        cfg = self.cfg
+        if not self.supports_span_decode:
+            raise ValueError(
+                "paged KV caches need position-addressed decode caches "
+                "(attn/moe layer kinds); this arch has recurrent or "
+                "side-input state")
+        if cfg.sliding_window:
+            raise ValueError(
+                "paged KV caches do not support sliding-window attention")
+        dtype = dtype_of(cfg)
+        K, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        caches = []
+        for pat, count in layer_groups(cfg):
+            group = tuple(
+                {"k": jnp.zeros((count, num_pages, page_size, K, Dh),
+                                dtype),
+                 "v": jnp.zeros((count, num_pages, page_size, K, Dh),
+                                dtype)}
+                for _ in pat)
             caches.append(group)
         return caches
 

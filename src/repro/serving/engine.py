@@ -46,8 +46,14 @@ from repro.core.decoding import (DecodeConfig, NEG_INF, select_batch,
 from repro.core.tokenizer import BOS_ID, ByteTokenizer, EOS_ID
 from repro.kernels.masked_logits.ops import (apply_grammar_mask,
                                              apply_grammar_mask_span)
-from repro.spec.scheduler import (SPAN_BUCKETS, SlotPhase, SpecConfig,
-                                  SpecScheduler)
+from repro.serving.kvpool import PagedAllocator, PoolExhausted
+from repro.spec.scheduler import (SPAN_BUCKETS, SlotPhase, SlotPlan,
+                                  SpecConfig, SpecScheduler)
+
+# span widths the paged feed path jits against (chunked prefill drains
+# prompt backlog through these; decode-only steps ride the width-1 bucket
+# at exactly the dense engine's per-step cost)
+FEED_BUCKETS = (1, 2, 4, 8, 16, 32)
 
 
 @dataclass
@@ -81,6 +87,11 @@ class RequestState:
     jump_tokens: int = 0                    # grammar-forced, zero model calls
     draft_proposed: int = 0
     draft_accepted: int = 0
+    # --- paged KV (engine paged mode) ---
+    prompt_len: int = 0
+    write_from: int = 0         # first position this slot may write into
+                                # its pages (below = shared prefix pages)
+    kv_pages: int = 0           # pages held when the request finished
 
 
 @dataclass
@@ -98,6 +109,13 @@ class EngineStats:
     draft_proposed: int = 0
     draft_accepted: int = 0
     plan_time: float = 0.0                  # host planning (jump + draft)
+    # --- paged KV cache (engine paged mode) ---
+    kv_pages_in_use: int = 0                # pages still referenced at end
+    kv_peak_utilization: float = 0.0        # peak pages-in-use / pool size
+    prefix_hit_rate: float = 0.0            # shared / total prompt tokens
+    kv_page_allocs: int = 0                 # page allocations over the run
+    kv_evictions: int = 0                   # cold pages evicted
+    kv_cow_copies: int = 0                  # copy-on-write device copies
 
     @property
     def tokens_per_sec(self):
@@ -116,9 +134,16 @@ class Engine:
     def __init__(self, model, params, tokenizer: ByteTokenizer,
                  grammar_bundles: dict, max_len: int = 512,
                  opportunistic: bool = False, mask_backend: str = "jnp",
-                 slots: int = 4):
+                 slots: int = 4, paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None, prefill_chunk: int = 32,
+                 attn_backend: str = "auto"):
         """grammar_bundles: name -> (grammar, table, store).
-        slots: decode-pool width B of the batched scheduler."""
+        slots: decode-pool width B of the batched scheduler.
+        paged: serve KV through the paged pool (docs/kv_paging.md) —
+        page-table attention, refcounted prefix sharing and chunked
+        prefill; token-for-token identical to the dense engine.
+        num_pages defaults to slots * ceil(max_len / page_size), i.e.
+        the dense engine's exact KV memory budget."""
         self.model = model
         self.params = params
         self.tok = tokenizer
@@ -127,8 +152,24 @@ class Engine:
         self.opportunistic = opportunistic
         self.mask_backend = mask_backend
         self.slots = max(1, int(slots))
+        self.paged = bool(paged)
+        self.page_size = max(1, int(page_size))
+        self.max_pages = -(-max_len // self.page_size)
+        self.num_pages = int(num_pages or self.slots * self.max_pages)
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        self.attn_backend = attn_backend
+        if self.paged and not model.supports_span_decode:
+            raise ValueError(
+                "paged KV serving needs position-addressed decode caches "
+                "(attn/moe layer kinds); this arch has recurrent or "
+                "side-input state")
+        if self.paged and model.cfg.sliding_window:
+            raise ValueError(
+                "paged KV serving does not support sliding-window "
+                "attention")
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, cache_len=max_len))
+            lambda p, b, tl: model.prefill(p, b, cache_len=max_len,
+                                           true_len=tl))
         self._decode = jax.jit(model.decode_step)
         # one concatenated device store for all grammars: a request's rows
         # index its grammar's block via the per-grammar row offset (shared
@@ -185,6 +226,25 @@ class Engine:
             ok = jnp.any(masked > NEG_INF / 2, axis=-1)
             return masked, ids, ok
 
+        def span_feed_paged(p, c, toks, pos, fm, pt, sel):
+            """Paged feed for the plain engine: decode a [B, S] span
+            through the page tables and return each slot's logits at its
+            selection index (clamped; non-selecting rows are ignored by
+            the caller), so the downstream mask/sample machinery sees
+            the same [B, V] it would from a dense decode_step."""
+            logits, c = self.model.decode_span(
+                p, c, toks, pos, feed_mask=fm,
+                batch_ctx={"page_table": pt,
+                           "paged_backend": self.attn_backend})
+            B, S = toks.shape
+            sel_logits = logits[jnp.arange(B), jnp.clip(sel, 0, S - 1)]
+            return sel_logits, c
+
+        def copy_page(c, s, d):
+            """Apply one allocator-directed COW copy to the page pools
+            (leaves are [count, P, ps, K, Dh])."""
+            return jax.tree.map(lambda a: a.at[:, d].set(a[:, s]), c)
+
         self._mask_sample = jax.jit(mask_sample)
         self._resample = jax.jit(resample)
         self._sample_plain = jax.jit(select_batch)
@@ -193,6 +253,13 @@ class Engine:
         self._span_decode = jax.jit(
             lambda p, c, toks, pos, fm: self.model.decode_span(
                 p, c, toks, pos, feed_mask=fm))
+        self._span_decode_paged = jax.jit(
+            lambda p, c, toks, pos, fm, pt: self.model.decode_span(
+                p, c, toks, pos, feed_mask=fm,
+                batch_ctx={"page_table": pt,
+                           "paged_backend": self.attn_backend}))
+        self._span_feed_paged = jax.jit(span_feed_paged)
+        self._copy_page = jax.jit(copy_page)
 
     # ------------------------------ lifecycle -----------------------------
 
@@ -202,23 +269,50 @@ class Engine:
         g, tab, store = self.bundles[req.grammar]
         return GrammarConstraint(g, tab, store, self.tok)
 
-    def _admit_common(self, req: Request, b: int, caches):
-        """Shared slot admission: build request state, prefill the
-        prompt, insert its caches into slot b. Returns (state, caches);
-        per-loop array updates stay with the caller."""
-        st = RequestState(req=req, slot=b)
-        st.constraint = self._make_constraint(req)
+    def _request_ids(self, req: Request) -> list[int]:
         ids = self._prompt_ids(req)
         if len(ids) == 1:
             # prefill needs >= 1 token before the decode loop takes
             # over; re-feeding the last prompt token would double-step
             # recurrent caches, so prepend BOS instead
             ids = [BOS_ID] + ids
-        prompt = jnp.asarray([ids[:-1]], jnp.int32)
-        _, pc = self._prefill(self.params, {"tokens": prompt})
+        return ids
+
+    def _bucketed_prompt(self, ids: list[int]):
+        """Zero-pad a prompt to its power-of-two jit bucket (capped at
+        max_len) -> ([1, bucket] int32, n). The prefill specializes once
+        per bucket instead of once per length; `true_len = n` masks the
+        padded tail's cache entries. Recurrent/SSM layer kinds fold a
+        padded tail into their carried state (true_len can't mask it),
+        so those archs keep exact-length prefill."""
+        n = len(ids)
+        bucket = n
+        if self.model.prefill_padding_safe:
+            bucket = max(n, min(1 << max(0, n - 1).bit_length(),
+                                self.max_len))
+        prompt = np.zeros((1, bucket), np.int32)
+        prompt[0, :n] = ids
+        return jnp.asarray(prompt), n
+
+    def _admit_common(self, req: Request, b: int, caches):
+        """Shared slot admission: build request state, prefill the
+        prompt, insert its caches into slot b. Returns (state, caches);
+        per-loop array updates stay with the caller.
+
+        The prompt is zero-padded to a power-of-two bucket before the
+        prefill call, so the jitted prefill specializes once per bucket
+        instead of once per distinct prompt length (true_len masks the
+        padded tail's cache entries); admission cost amortizes across
+        requests."""
+        st = RequestState(req=req, slot=b)
+        st.constraint = self._make_constraint(req)
+        ids = self._request_ids(req)
+        prompt, n = self._bucketed_prompt(ids[:-1])
+        _, pc = self._prefill(self.params, {"tokens": prompt}, jnp.int32(n))
         caches = self._insert_caches(caches, pc, jnp.int32(b))
         st.token_ids = list(ids)
         st.pos = len(ids)
+        st.prompt_len = len(ids)
         return st, caches
 
     def _prompt_ids(self, req: Request) -> list[int]:
@@ -244,13 +338,19 @@ class Engine:
 
     # ============================ batched path ============================
 
-    def _step_keys(self, seeds: np.ndarray, step: int,
+    def _step_keys(self, seeds: np.ndarray, salts: np.ndarray,
                    attempt: int) -> np.ndarray:
         """[B, 2] uint32 threefry key data: one counter-mode stream per
-        slot, advanced by (step, attempt). Greedy rows ignore keys."""
+        slot, advanced by (salts[b], attempt). salts are PER-SLOT step
+        counters (st.steps), not the global engine step, so a slot's
+        sample stream depends only on its own progress — which is what
+        keeps the paged engine (whose chunked prefill consumes engine
+        steps) token-for-token identical to the dense one. Greedy rows
+        ignore keys."""
         k = np.empty((seeds.shape[0], 2), np.uint32)
         k[:, 0] = seeds
-        k[:, 1] = np.uint32((step << 4) | (attempt & 0xF))
+        k[:, 1] = (salts.astype(np.uint32) << np.uint32(4)) | \
+            np.uint32(attempt & 0xF)
         return k
 
     def _fallback_exact(self, st: RequestState, row: np.ndarray,
@@ -279,6 +379,125 @@ class Engine:
             & 0xFFFFFFFF)
         return int(rng.choice(valid, p=p))
 
+    def _select_tokens(self, logits, slot_state, pending: set,
+                       seeds, greedy, temp, top_k, top_p):
+        """Shared per-step token selection for the batched engines (the
+        dense generate() and the paged feed loop run this IDENTICAL code
+        on a [B, V] logits matrix — equivalence by construction): the
+        opportunistic fast path, one fused mask+sample device call, the
+        on-device demote/resample rejection wrapper, and the exact-filter
+        fallback. `pending` names the slots that need a token this step;
+        rows outside it are ignored. Returns (committed: {slot: token},
+        counters). Slots whose mask dead-ends are marked done
+        ("mask_exhausted") and excluded from `committed`."""
+        B = self.slots
+        committed: dict[int, int] = {}
+        pending = set(pending)
+        ctr = {"mask_time": 0.0, "mask_computations": 0,
+               "opportunistic_hits": 0}
+        salts = np.array([slot_state[b].steps if slot_state[b] else 0
+                          for b in range(B)], np.uint32)
+
+        # ---- opportunistic fast path (whole batch at once) ----------
+        if self.opportunistic and any(
+                slot_state[b].constraint is not None for b in pending):
+            keys = self._step_keys(seeds, salts, 0)
+            prop = np.asarray(self._sample_plain(
+                logits, jnp.asarray(keys), jnp.asarray(greedy),
+                jnp.asarray(temp), jnp.asarray(top_k),
+                jnp.asarray(top_p)))
+            for b in list(pending):
+                st = slot_state[b]
+                t = int(prop[b])
+                if st.constraint is None:
+                    committed[b] = t
+                    pending.discard(b)
+                elif st.constraint.is_valid_extension(st.generated, t):
+                    st.opportunistic_hits += 1
+                    ctr["opportunistic_hits"] += 1
+                    committed[b] = t
+                    pending.discard(b)
+
+        if not pending:
+            return committed, ctr
+
+        # ---- fused mask + batched sample for the rest ---------------
+        t_mask = time.time()
+        cons = [slot_state[b].constraint
+                if (b in pending and slot_state[b] is not None)
+                else None for b in range(B)]
+        texts = [slot_state[b].generated if slot_state[b] else b""
+                 for b in range(B)]
+        offs = np.array(
+            [self._row_offset.get(slot_state[b].req.grammar, 0)
+             if slot_state[b] is not None else 0
+             for b in range(B)], np.int64)
+        rows, eos, _ = GrammarConstraint.step_rows_batch(
+            cons, texts, max_accept=MAX_ACCEPT, row_offsets=offs)
+        need_mask = np.array([c is not None for c in cons], bool)
+        keys = self._step_keys(seeds, salts, 1)
+        masked, ids, ok = self._mask_sample(
+            logits, self._store_cat, jnp.asarray(rows),
+            jnp.asarray(eos), jnp.asarray(need_mask),
+            jnp.asarray(greedy), jnp.asarray(temp),
+            jnp.asarray(top_k), jnp.asarray(top_p),
+            jnp.asarray(keys))
+        ids_h, ok_h = np.asarray(ids), np.asarray(ok)
+        n_masked = int(need_mask.sum())
+        ctr["mask_computations"] += n_masked
+        elapsed = time.time() - t_mask
+        ctr["mask_time"] += elapsed
+        for b in np.where(need_mask)[0]:
+            slot_state[b].mask_computations += 1
+            slot_state[b].mask_time += elapsed / max(n_masked, 1)
+
+        # rejection wrapper: the α<=1 mask is sound but over-
+        # approximate; verify with the exact oracle, demote invalid
+        # picks on device, resample only the affected rows. Only
+        # [B] ids/flags ever cross back to the host here.
+        for attempt in range(2, 6):
+            redo = np.zeros(B, bool)
+            ban = np.zeros(B, np.int32)
+            for b in sorted(pending):
+                st = slot_state[b]
+                if st.constraint is None:
+                    committed[b] = int(ids_h[b])
+                    pending.discard(b)
+                    continue
+                if not ok_h[b]:
+                    continue        # mask exhausted -> fallback
+                t = int(ids_h[b])
+                if t == EOS_ID or st.constraint.is_valid_extension(
+                        st.generated, t):
+                    committed[b] = t
+                    pending.discard(b)
+                else:
+                    redo[b] = True
+                    ban[b] = t
+            if not redo.any():
+                break
+            keys = self._step_keys(seeds, salts, attempt)
+            masked, ids, ok = self._resample(
+                masked, jnp.asarray(ban), jnp.asarray(redo),
+                jnp.asarray(greedy), jnp.asarray(temp),
+                jnp.asarray(top_k), jnp.asarray(top_p),
+                jnp.asarray(keys))
+            ids_h, ok_h = np.asarray(ids), np.asarray(ok)
+
+        # exact-filter fallback for slots that never validated
+        for b in sorted(pending):
+            st = slot_state[b]
+            nxt = self._fallback_exact(st, np.asarray(masked[b]), st.steps)
+            if nxt is None:
+                # nothing valid (should not happen for C_k in
+                # L_p(G)) — stop this request
+                st.done = True
+                st.finish_reason = "mask_exhausted"
+            else:
+                committed[b] = nxt
+            pending.discard(b)
+        return committed, ctr
+
     def generate(self, requests: list[Request], verbose: bool = False):
         """Continuous batching over a fixed pool of `self.slots` slots.
 
@@ -286,7 +505,12 @@ class Engine:
         fused mask+sample call (constrained and unconstrained slots mixed
         via the `constrained` flag), and only [B]-sized transfers back to
         the host. Finished slots are refilled from the queue immediately.
-        """
+
+        In paged mode the same selection machinery runs behind the paged
+        feed loop (`_generate_paged`): chunked prefill, prefix sharing
+        and page-table attention replace the dense per-slot caches."""
+        if self.paged:
+            return self._generate_paged(requests, verbose)
         t0 = time.time()
         B = self.slots
         queue = deque(requests)
@@ -344,105 +568,13 @@ class Engine:
             decode_steps += 1
             for b in active:
                 slot_state[b].steps += 1
-            committed: dict[int, int] = {}
-            pending = set(active)
 
-            # ---- opportunistic fast path (whole batch at once) ----------
-            if self.opportunistic and any(constrained[b] for b in active):
-                keys = self._step_keys(seeds, step, 0)
-                prop = np.asarray(self._sample_plain(
-                    logits, jnp.asarray(keys), jnp.asarray(greedy),
-                    jnp.asarray(temp), jnp.asarray(top_k),
-                    jnp.asarray(top_p)))
-                for b in list(pending):
-                    st = slot_state[b]
-                    t = int(prop[b])
-                    if st.constraint is None:
-                        committed[b] = t
-                        pending.discard(b)
-                    elif st.constraint.is_valid_extension(st.generated, t):
-                        st.opportunistic_hits += 1
-                        opportunistic_hits += 1
-                        committed[b] = t
-                        pending.discard(b)
-
-            # ---- fused mask + batched sample for the rest ---------------
-            if pending:
-                t_mask = time.time()
-                cons = [slot_state[b].constraint
-                        if (b in pending and slot_state[b] is not None)
-                        else None for b in range(B)]
-                texts = [slot_state[b].generated if slot_state[b] else b""
-                         for b in range(B)]
-                offs = np.array(
-                    [self._row_offset.get(slot_state[b].req.grammar, 0)
-                     if slot_state[b] is not None else 0
-                     for b in range(B)], np.int64)
-                rows, eos, _ = GrammarConstraint.step_rows_batch(
-                    cons, texts, max_accept=MAX_ACCEPT, row_offsets=offs)
-                need_mask = np.array([c is not None for c in cons], bool)
-                keys = self._step_keys(seeds, step, 1)
-                masked, ids, ok = self._mask_sample(
-                    logits, self._store_cat, jnp.asarray(rows),
-                    jnp.asarray(eos), jnp.asarray(need_mask),
-                    jnp.asarray(greedy), jnp.asarray(temp),
-                    jnp.asarray(top_k), jnp.asarray(top_p),
-                    jnp.asarray(keys))
-                ids_h, ok_h = np.asarray(ids), np.asarray(ok)
-                n_masked = int(need_mask.sum())
-                mask_computations += n_masked
-                elapsed = time.time() - t_mask
-                mask_time += elapsed
-                for b in np.where(need_mask)[0]:
-                    slot_state[b].mask_computations += 1
-                    slot_state[b].mask_time += elapsed / max(n_masked, 1)
-
-                # rejection wrapper: the α<=1 mask is sound but over-
-                # approximate; verify with the exact oracle, demote invalid
-                # picks on device, resample only the affected rows. Only
-                # [B] ids/flags ever cross back to the host here.
-                for attempt in range(2, 6):
-                    redo = np.zeros(B, bool)
-                    ban = np.zeros(B, np.int32)
-                    for b in sorted(pending):
-                        st = slot_state[b]
-                        if st.constraint is None:
-                            committed[b] = int(ids_h[b])
-                            pending.discard(b)
-                            continue
-                        if not ok_h[b]:
-                            continue        # mask exhausted -> fallback
-                        t = int(ids_h[b])
-                        if t == EOS_ID or st.constraint.is_valid_extension(
-                                st.generated, t):
-                            committed[b] = t
-                            pending.discard(b)
-                        else:
-                            redo[b] = True
-                            ban[b] = t
-                    if not redo.any():
-                        break
-                    keys = self._step_keys(seeds, step, attempt)
-                    masked, ids, ok = self._resample(
-                        masked, jnp.asarray(ban), jnp.asarray(redo),
-                        jnp.asarray(greedy), jnp.asarray(temp),
-                        jnp.asarray(top_k), jnp.asarray(top_p),
-                        jnp.asarray(keys))
-                    ids_h, ok_h = np.asarray(ids), np.asarray(ok)
-
-                # exact-filter fallback for slots that never validated
-                for b in sorted(pending):
-                    st = slot_state[b]
-                    nxt = self._fallback_exact(
-                        st, np.asarray(masked[b]), step)
-                    if nxt is None:
-                        # nothing valid (should not happen for C_k in
-                        # L_p(G)) — stop this request
-                        st.done = True
-                        st.finish_reason = "mask_exhausted"
-                    else:
-                        committed[b] = nxt
-                    pending.discard(b)
+            committed, ctr = self._select_tokens(
+                logits, slot_state, set(active), seeds, greedy, temp,
+                top_k, top_p)
+            mask_time += ctr["mask_time"]
+            mask_computations += ctr["mask_computations"]
+            opportunistic_hits += ctr["opportunistic_hits"]
 
             # ---- commit + immediate slot replacement --------------------
             for b, t in committed.items():
@@ -466,6 +598,249 @@ class Engine:
             batch_slots=B,
         )
         return all_states, stats
+
+    # ============================= paged path =============================
+    # Paged KV serving (docs/kv_paging.md): the dense per-slot decode
+    # caches are replaced by ONE global page pool per attention layer;
+    # slots read/write through refcounted page tables. Admission
+    # chain-hashes the prompt at page granularity and ATTACHES matching
+    # shared pages instead of re-prefilling them; the unmatched tail
+    # drains as chunked prefill through the same per-step span call that
+    # decoding slots ride at width 1 — so one long admission never
+    # stalls the pool, and N requests sharing a schema/system prompt pay
+    # its prefill once and hold one physical copy.
+
+    def _paged_setup(self, B):
+        """Fresh allocator + zeroed device page pools for one run."""
+        alloc = PagedAllocator(self.num_pages, self.page_size, B,
+                               self.max_pages)
+        caches = self.model.init_paged_caches(self.num_pages,
+                                              self.page_size)
+        return alloc, caches
+
+    def _admit_paged(self, req: Request, b: int, alloc, ids=None):
+        """Paged admission: no prefill device call here — the prompt is
+        attached from shared pages where its page-aligned prefix
+        chain-hash hits, and the rest becomes feed backlog drained by
+        the chunked-prefill span steps."""
+        st = RequestState(req=req, slot=b)
+        st.constraint = self._make_constraint(req)
+        if ids is None:
+            ids = self._request_ids(req)
+        st.token_ids = list(ids)
+        st.pos = len(ids)
+        st.prompt_len = len(ids)
+        plan = alloc.admit(b, ids)
+        st.write_from = plan.write_from
+        return st, plan
+
+    def _paged_can_admit(self, alloc, queue, ids_cache) -> bool:
+        """Admission gate: only admit the head request when its whole
+        prompt's pages can be reserved (prefix hits just reduce the
+        need). Its token ids are computed once and cached by rid, so a
+        request blocked for many steps isn't re-tokenized each step."""
+        req = queue[0]
+        ids = ids_cache.get(req.rid)
+        if ids is None:
+            ids = ids_cache[req.rid] = self._request_ids(req)
+        return alloc.can_admit(len(ids))
+
+    def _paged_wake(self, alloc, b, st, feed_pos, waiting) -> bool:
+        """Re-check a waiting slot (shared prefix pages still being
+        filled by another slot); on wake, adopt the — possibly
+        orphan-claim-lowered — feed/write cursors. True = slot live."""
+        if not waiting[b]:
+            return True
+        r = alloc.ready(b)
+        if r is None:
+            return False
+        waiting[b] = False
+        feed_pos[b], st.write_from = r
+        return True
+
+    def _feed_width(self, pend: list) -> int:
+        """Smallest feed bucket covering the widest per-slot backlog,
+        capped at prefill_chunk (steady-state decode rides width 1)."""
+        cands = [s for s in FEED_BUCKETS if s <= self.prefill_chunk] or [1]
+        top = max(pend)
+        for S in cands:
+            if S >= top:
+                return S
+        return cands[-1]
+
+    def _prepare_feed(self, alloc, caches, b, st, fs, k):
+        """Reserve/COW pages for slot b's feed of positions [fs, fs+k)
+        (only [max(fs, write_from), fs+k) is actually written) and apply
+        any copy-on-write device copies. Returns the updated caches, or
+        None if the pool is truly exhausted — the caller finishes the
+        request with 'kv_oom' instead of crashing the pool."""
+        ws = max(fs, st.write_from)
+        if fs + k > ws:
+            try:
+                for s_, d_ in alloc.prepare_write(b, ws, fs + k):
+                    caches = self._copy_page(caches, jnp.int32(s_),
+                                             jnp.int32(d_))
+            except PoolExhausted:
+                st.done = True
+                st.finish_reason = "kv_oom"
+                return None
+        return caches
+
+    def _kv_stats(self, stats: EngineStats, alloc) -> EngineStats:
+        stats.kv_pages_in_use = alloc.pages_in_use
+        stats.kv_peak_utilization = alloc.peak_in_use / max(alloc.P, 1)
+        stats.prefix_hit_rate = alloc.prefix_hit_rate
+        stats.kv_page_allocs = alloc.total_allocs
+        stats.kv_evictions = alloc.evictions
+        stats.kv_cow_copies = alloc.cow_copies
+        return stats
+
+    def _generate_paged(self, requests: list[Request],
+                        verbose: bool = False):
+        """generate() over the paged KV subsystem. Per engine step: ONE
+        [B, S] span feed through the page tables (S = 1 when every slot
+        is decoding; a feed bucket wide enough for the deepest prefill
+        backlog otherwise), then the IDENTICAL selection machinery as
+        the dense engine on the [B, V] selection-position logits —
+        output is token-for-token the dense engine's."""
+        t0 = time.time()
+        B = self.slots
+        alloc, caches = self._paged_setup(B)
+        queue = deque(requests)
+        all_states: list[RequestState] = []
+        feed_pos = np.zeros(B, np.int32)
+        slot_state: list[Optional[RequestState]] = [None] * B
+        waiting = np.zeros(B, bool)
+        seeds = np.zeros(B, np.uint32)
+        greedy = np.ones(B, bool)
+        temp = np.ones(B, np.float32)
+        top_k = np.zeros(B, np.int32)
+        top_p = np.ones(B, np.float32)
+        decode_steps = 0
+        mask_time = 0.0
+        mask_computations = 0
+        opportunistic_hits = 0
+        stall = 0
+        ids_cache: dict[int, list] = {}
+
+        def admit(b: int):
+            req = queue.popleft()
+            st, plan = self._admit_paged(req, b, alloc,
+                                         ids_cache.pop(req.rid, None))
+            slot_state[b] = st
+            feed_pos[b] = plan.feed_from
+            seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
+            g, t, k, p = DecodeConfig.batch_arrays([req.decode])
+            greedy[b], temp[b], top_k[b], top_p[b] = g[0], t[0], k[0], p[0]
+            waiting[b] = True   # shared pages may still be filling
+            if not self._paged_wake(alloc, b, st, feed_pos, waiting):
+                st.phase = SlotPhase.PREFILLING.value
+            all_states.append(st)
+
+        def finish(b: int):
+            st = slot_state[b]
+            st.kv_pages = len(alloc.tables[b])
+            alloc.release(b)
+            slot_state[b] = None
+            waiting[b] = False
+            feed_pos[b] = 0
+            if verbose:
+                print(f"[req {st.req.rid}] {st.finish_reason}: "
+                      f"{st.generated[:70]!r}")
+
+        while queue or any(s is not None for s in slot_state):
+            for b in range(B):
+                if slot_state[b] is None and queue:
+                    if not self._paged_can_admit(alloc, queue, ids_cache):
+                        break
+                    admit(b)
+            active = [b for b in range(B)
+                      if slot_state[b] is not None]
+            if not active:
+                if queue:
+                    raise PoolExhausted(
+                        "KV pool too small for the next request's prompt")
+                break
+
+            # ---- wake waiters whose shared prefix finished filling ------
+            live = [b for b in active
+                    if self._paged_wake(alloc, b, slot_state[b],
+                                        feed_pos, waiting)]
+            if not live:
+                stall += 1
+                if stall > 4 * B + 16:
+                    raise RuntimeError("paged scheduler stalled")
+                continue
+            stall = 0
+
+            # ---- ONE [B, S] paged span feed for the whole pool ----------
+            pend = {b: slot_state[b].pos - int(feed_pos[b]) for b in live}
+            S = self._feed_width(list(pend.values()))
+            tokens = np.zeros((B, S), np.int32)
+            fmask = np.zeros((B, S), bool)
+            sel = np.full(B, -1, np.int32)
+            feed_n: dict[int, int] = {}
+            for b in live:
+                st = slot_state[b]
+                fs = int(feed_pos[b])
+                k = min(pend[b], S)
+                new_caches = self._prepare_feed(alloc, caches, b, st,
+                                                fs, k)
+                if new_caches is None:
+                    continue                     # kv_oom: no feed
+                caches = new_caches
+                if pend[b] <= S:
+                    sel[b] = k - 1               # selection this step
+                tokens[b, :k] = st.token_ids[fs:fs + k]
+                for i in range(k):
+                    fmask[b, i] = (fs + i) >= st.write_from
+                feed_n[b] = k
+            live = [b for b in live if b in feed_n]
+            if live:
+                page_tab = alloc.table_rows(np)
+                logits, caches = self._span_feed_paged(
+                    self.params, caches, jnp.asarray(tokens),
+                    jnp.asarray(feed_pos), jnp.asarray(fmask),
+                    jnp.asarray(page_tab), jnp.asarray(sel))
+                decode_steps += 1
+                for b in live:
+                    st = slot_state[b]
+                    alloc.note_fill(b, min(int(feed_pos[b]) + feed_n[b],
+                                           st.prompt_len))
+                    if sel[b] < 0:               # chunked prefill drain
+                        feed_pos[b] += feed_n[b]
+                        st.phase = SlotPhase.PREFILLING.value
+                selecting = [b for b in live if sel[b] >= 0]
+                for b in selecting:
+                    slot_state[b].steps += 1
+                    slot_state[b].phase = SlotPhase.DECODING.value
+                if selecting:
+                    committed, ctr = self._select_tokens(
+                        logits, slot_state, set(selecting), seeds,
+                        greedy, temp, top_k, top_p)
+                    mask_time += ctr["mask_time"]
+                    mask_computations += ctr["mask_computations"]
+                    opportunistic_hits += ctr["opportunistic_hits"]
+                    for b, t in committed.items():
+                        st = slot_state[b]
+                        self._commit(st, t)
+                        feed_pos[b] = st.pos - 1
+            for b in active:
+                st = slot_state[b]
+                if st is not None and st.done:
+                    finish(b)
+
+        stats = EngineStats(
+            requests=len(all_states),
+            tokens=sum(s.steps for s in all_states),
+            wall=time.time() - t0,
+            mask_time=mask_time,
+            mask_computations=mask_computations,
+            opportunistic_hits=opportunistic_hits,
+            decode_steps=decode_steps,
+            batch_slots=B,
+        )
+        return all_states, self._kv_stats(stats, alloc)
 
     # ========================== speculative path ==========================
     # Grammar-aware speculative decoding on top of the batched pool:
@@ -571,12 +946,23 @@ class Engine:
         sched = SpecScheduler(spec, self.tok)
         queue = deque(requests)
         all_states: list[RequestState] = []
-        caches = self.model.init_decode_caches(B, self.max_len)
+        if self.paged:
+            # paged KV: prompt prefill becomes feed BACKLOG drained by
+            # the same span steps that replay jumps — chunked prefill
+            # for free — and shared prompt prefixes attach to existing
+            # pages instead of re-prefilling (docs/kv_paging.md)
+            alloc, caches = self._paged_setup(B)
+        else:
+            alloc = None
+            caches = self.model.init_decode_caches(B, self.max_len)
         # the feed cursor: slot b's tokens at positions < feed_pos[b] are
         # in the decode caches; token_ids[feed_pos[b]:pos] are committed
         # but pending feed (cur-token + jump backlog)
         feed_pos = np.zeros(B, np.int32)
         slot_state: list[Optional[RequestState]] = [None] * B
+        waiting = np.zeros(B, bool)
+        stall = 0
+        ids_cache: dict[int, list] = {}
         seeds = np.zeros(B, np.uint32)
         greedy = np.ones(B, bool)
         temp = np.ones(B, np.float32)
@@ -594,9 +980,18 @@ class Engine:
         def admit(b: int):
             nonlocal caches
             req = queue.popleft()
-            st, caches = self._admit_common(req, b, caches)
-            slot_state[b] = st
-            feed_pos[b] = st.pos - 1
+            if self.paged:
+                st, plan = self._admit_paged(req, b, alloc,
+                                             ids_cache.pop(req.rid, None))
+                slot_state[b] = st
+                feed_pos[b] = plan.feed_from
+                waiting[b] = True   # shared pages may still be filling
+                if not self._paged_wake(alloc, b, st, feed_pos, waiting):
+                    st.phase = SlotPhase.PREFILLING.value
+            else:
+                st, caches = self._admit_common(req, b, caches)
+                slot_state[b] = st
+                feed_pos[b] = st.pos - 1
             seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
             g, t, k, p = DecodeConfig.batch_arrays([req.decode])
             greedy[b], temp[b], top_k[b], top_p[b] = g[0], t[0], k[0], p[0]
@@ -605,7 +1000,11 @@ class Engine:
 
         def finish(b: int):
             st = slot_state[b]
+            if self.paged:
+                st.kv_pages = len(alloc.tables[b])
+                alloc.release(b)
             slot_state[b] = None
+            waiting[b] = False
             feed_pos[b] = 0
             sched.on_finish(st)
             if verbose:
@@ -619,19 +1018,37 @@ class Engine:
         while queue or any(s is not None for s in slot_state):
             for b in range(B):
                 if slot_state[b] is None and queue:
+                    if self.paged and not self._paged_can_admit(
+                            alloc, queue, ids_cache):
+                        break
                     admit(b)
             active = [b for b in range(B) if slot_state[b] is not None]
+            if self.paged and not active:
+                if queue:
+                    raise PoolExhausted(
+                        "KV pool too small for the next request's prompt")
+                break
             step += 1
+
+            # ---- wake waiters whose shared prefix finished filling ------
+            if self.paged:
+                for b in active:
+                    self._paged_wake(alloc, b, slot_state[b], feed_pos,
+                                     waiting)
 
             # ---- host planning: jump-forward commits + drafting ---------
             # Jumped tokens commit immediately but drain through the span
             # as per-slot BACKLOG (feed cursor trails the commit
             # frontier), so a long jump never inflates the pool's span
-            # width on its own.
+            # width on its own. (Waiting paged slots are not planned:
+            # their frontier cannot move until the shared pages fill.)
             plans = {}
             t_plan = time.time()
             for b in active:
                 st = slot_state[b]
+                if waiting[b]:
+                    plans[b] = SlotPlan()
+                    continue
                 backlog = (st.pos - 1) - int(feed_pos[b])
                 pre = st.jump_tokens
                 plans[b] = sched.plan_slot(st, commit_one, self.max_len,
@@ -644,9 +1061,14 @@ class Engine:
                 if st.done:      # finished mid-jump: nothing left to feed
                     sched.on_commit(st, plans[b].jumped)
                     finish(b)
-            live = [b for b in active if slot_state[b] is not None]
+            live = [b for b in active
+                    if slot_state[b] is not None and not waiting[b]]
             if not live:
+                stall += 1
+                if stall > 4 * B + 16:
+                    raise RuntimeError("paged scheduler stalled")
                 continue
+            stall = 0
 
             # ---- span width: maximize commits per unit of compute -------
             # pend = committed-but-unfed tokens (current token + backlog);
@@ -659,9 +1081,11 @@ class Engine:
             tokens = np.zeros((B, S), np.int32)
             fmask = np.zeros((B, S), bool)
             sel0 = {}        # b -> span index of first selection (-1 none)
-            for b in live:
+            fed = {}         # b -> tokens fed this span
+            for b in list(live):
                 st = slot_state[b]
-                pend = st.token_ids[int(feed_pos[b]): st.pos]
+                fs = int(feed_pos[b])
+                pend = st.token_ids[fs: st.pos]
                 if len(pend) > S:          # backlog drain: feed only
                     feed = pend[:S]
                     sel0[b] = -1
@@ -670,14 +1094,42 @@ class Engine:
                     plans[b].drafts = plans[b].drafts[: S - len(pend)]
                     feed = pend + plans[b].drafts
                     sel0[b] = len(pend) - 1
+                if self.paged:
+                    new_caches = self._prepare_feed(alloc, caches, b, st,
+                                                    fs, len(feed))
+                    if new_caches is None:
+                        finish(b)          # kv_oom under true pressure
+                        live.remove(b)
+                        continue
+                    caches = new_caches
+                    # write gating: positions below write_from live in
+                    # SHARED pages (attached prefix) — re-fed read-only
+                    for i in range(len(feed)):
+                        fmask[b, i] = (fs + i) >= st.write_from
+                else:
+                    fmask[b, : len(feed)] = True
                 tokens[b, : len(feed)] = feed
-                fmask[b, : len(feed)] = True
+                fed[b] = len(feed)
                 if plans[b].drafts:
                     st.phase = SlotPhase.VERIFYING.value
-            logits, caches = self._span_decode(
-                self.params, caches, jnp.asarray(tokens),
-                jnp.asarray(feed_pos), jnp.asarray(fmask))
+            if not live:
+                continue
+            if self.paged:
+                page_tab = alloc.table_rows(np)
+                logits, caches = self._span_decode_paged(
+                    self.params, caches, jnp.asarray(tokens),
+                    jnp.asarray(feed_pos), jnp.asarray(fmask),
+                    jnp.asarray(page_tab))
+            else:
+                logits, caches = self._span_decode(
+                    self.params, caches, jnp.asarray(tokens),
+                    jnp.asarray(feed_pos), jnp.asarray(fmask))
             decode_steps += 1
+            if self.paged:
+                for b in live:
+                    st = slot_state[b]
+                    alloc.note_fill(b, min(int(feed_pos[b]) + fed[b],
+                                           st.prompt_len))
 
             # ---- mask rows for every selection position -----------------
             t_mask = time.time()
@@ -719,11 +1171,14 @@ class Engine:
                 st = slot_state[b]
                 pl = plans[b]
                 if sel0[b] < 0:
-                    # pure backlog drain: advance the feed cursor; the
-                    # step's jump commits (nonempty only on the first
-                    # drain step) must still reach the proposer history
+                    # pure backlog drain (jump replay or chunked
+                    # prefill): advance the feed cursor; the step's jump
+                    # commits (nonempty only on the first drain step)
+                    # must still reach the proposer history
                     sched.on_commit(st, pl.jumped)
-                    feed_pos[b] += S
+                    feed_pos[b] += fed[b]
+                    if self.paged and feed_pos[b] < st.prompt_len:
+                        st.phase = SlotPhase.PREFILLING.value
                     continue
                 idx = sel0[b]
                 committed = []
@@ -743,7 +1198,7 @@ class Engine:
                 if not st.done:
                     nxt = self._resolve_span_selection(
                         st, masked, b, idx, int(ids_h[b, idx]),
-                        bool(ok_h[b, idx]), step)
+                        bool(ok_h[b, idx]), st.steps)
                     if nxt is None:
                         st.done = True
                         st.finish_reason = "mask_exhausted"
@@ -770,6 +1225,8 @@ class Engine:
             draft_accepted=draft_accepted,
             plan_time=plan_time,
         )
+        if self.paged:
+            self._kv_stats(stats, alloc)
         return all_states, stats
 
     # =========================== sequential path ==========================
@@ -781,12 +1238,13 @@ class Engine:
         st = RequestState(req=req)
         st.constraint = self._make_constraint(req)
         ids = self._prompt_ids(req)
-        tokens = jnp.asarray([ids], jnp.int32)
-        logits, caches = self._prefill(self.params, {"tokens": tokens})
+        prompt, n = self._bucketed_prompt(ids)
+        logits, caches = self._prefill(self.params, {"tokens": prompt},
+                                       jnp.int32(n))
         st.caches = caches
-        st.pos = len(ids)
+        st.pos = n
         st.token_ids = list(ids)
-        st.pending_logits = logits[:, -1]       # prediction for next token
+        st.pending_logits = logits[:, n - 1]    # prediction for next token
         return st
 
     def _logits(self, st: RequestState):

@@ -38,6 +38,9 @@ class SlotPhase(str, Enum):
     JUMPING = "jumping"
     DRAFTING = "drafting"
     VERIFYING = "verifying"
+    PREFILLING = "prefilling"   # paged engine: prompt backlog (chunked
+                                # prefill) or waiting on shared pages
+                                # another slot is still filling
 
 
 @dataclass

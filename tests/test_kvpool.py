@@ -1,0 +1,261 @@
+"""Paged KV allocator: refcount/free-list/prefix-cache invariants under
+random op sequences, checked against a dense shadow cache.
+
+The fuzz harness drives the PUBLIC allocator API (admit / prepare_write /
+note_fill / fork / release) exactly the way the engine does, mirrors
+every directed device action (page copies, token writes) into a fake
+numpy "pool", and asserts after every op that
+
+  * refcounts equal the observed references (tables + prefix cache),
+  * free pages are unreferenced, no double frees, cold pages cache-only
+    (`PagedAllocator.check_invariants`),
+  * reconstructing each live slot through its page table yields exactly
+    the tokens the shadow says it holds — including slots whose prefix
+    pages are SHARED with other slots or the cache, and slots that
+    forked + diverged through copy-on-write.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade gracefully: only @given tests skip
+    from tests._hypothesis_stub import given, settings, st
+
+from repro.serving.kvpool import PagedAllocator, PoolExhausted
+
+PS = 4          # page size
+PAGES = 24
+SLOTS = 4
+MAXP = 8        # max pages per slot -> max seq 32
+
+
+class Sim:
+    """Engine stand-in: drives the allocator and mirrors device state."""
+
+    def __init__(self, pages=PAGES, ps=PS, slots=SLOTS, maxp=MAXP):
+        self.a = PagedAllocator(pages, ps, slots, maxp)
+        self.ps = ps
+        self.pool = np.full((pages, ps), -1, np.int64)   # fake device pool
+        self.shadow = {}                                 # b -> list[tokens]
+        self.frontier = {}                               # b -> written len
+
+    # -- engine-protocol ops ------------------------------------------
+
+    def admit(self, b, ids):
+        plan = self.a.admit(b, ids)
+        self.shadow[b] = list(ids)
+        self.frontier[b] = plan.write_from
+        # chunked prefill, all at once: write the unmatched tail
+        self.write(b, plan.write_from, len(ids), ids[plan.write_from:])
+        self.a.note_fill(b, len(ids))
+        return plan
+
+    def write(self, b, start, end, values):
+        for src, dst in self.a.prepare_write(b, start, end):
+            self.pool[dst] = self.pool[src]              # device COW copy
+        t = self.a.tables[b]
+        for i, v in zip(range(start, end), values):
+            self.pool[t[i // self.ps], i % self.ps] = v
+        self.frontier[b] = max(self.frontier[b], end)
+
+    def append(self, b, values):
+        n = len(self.shadow[b])
+        self.write(b, n, n + len(values), values)
+        self.shadow[b].extend(values)
+        self.a.note_fill(b, len(self.shadow[b]))
+
+    def fork(self, src, dst):
+        self.a.fork(src, dst)
+        self.shadow[dst] = list(self.shadow[src])
+        self.frontier[dst] = self.frontier[src]
+
+    def release(self, b):
+        self.a.release(b)
+        self.shadow.pop(b, None)
+        self.frontier.pop(b, None)
+
+    # -- checks --------------------------------------------------------
+
+    def check(self):
+        self.a.check_invariants()
+        for b, want in self.shadow.items():
+            t = self.a.tables[b]
+            got = [int(self.pool[t[i // self.ps], i % self.ps])
+                   for i in range(len(want))]
+            assert got == list(want), (b, got, want)
+
+
+# ---------------------------- directed tests -------------------------------
+
+def test_prefix_sharing_attaches_full_pages():
+    s = Sim()
+    ids = list(range(100, 100 + 11))                 # 2 full pages + tail
+    s.admit(0, ids)
+    s.check()
+    p1 = s.admit(1, ids)
+    assert p1.matched_len == 8 and p1.feed_from == 8
+    assert s.a.tables[0][:2] == s.a.tables[1][:2]    # physical sharing
+    assert s.a.tables[0][2] != s.a.tables[1][2]      # private tails
+    s.check()
+    assert s.a.prefix_hit_rate > 0
+
+
+def test_release_turns_shared_pages_cold_and_rehit():
+    s = Sim()
+    ids = list(range(1, 13))                         # 12 tokens = 3 full pages
+    s.admit(0, ids)
+    s.release(0)
+    s.check()
+    assert s.a.cold_pages == 3                       # all registered, cold
+    plan = s.admit(1, ids)                           # warm rehit from cold
+    assert plan.matched_len == 12 and plan.feed_from == 11
+    assert s.a.cold_pages == 0                       # re-attached = warm
+    s.check()
+
+
+def test_full_page_aligned_prompt_matches_to_last_token():
+    s = Sim()
+    ids = list(range(1, 9))                          # exactly two full pages
+    s.admit(0, ids)
+    s.release(0)
+    plan = s.admit(1, ids)
+    # whole prompt attached; engine re-feeds only the last token,
+    # read-only (feed_from = plen - 1, write_from = plen)
+    assert plan.matched_len == 8
+    assert plan.feed_from == 7 and plan.write_from == 8
+    s.check()
+
+
+def test_fork_then_append_cow():
+    s = Sim()
+    ids = list(range(50, 60))
+    s.admit(0, ids)
+    s.fork(0, 1)
+    s.check()
+    assert s.a.tables[0] == s.a.tables[1]
+    s.append(1, [7, 8, 9])                           # diverge via COW
+    s.append(0, [1, 2, 3])
+    s.check()                                        # both exact
+    assert s.a.tables[0][-1] != s.a.tables[1][-1]
+    assert s.a.cow_copies >= 1
+
+
+def test_eviction_under_pressure_and_exhaustion():
+    s = Sim(pages=6, slots=3, maxp=6)
+    s.admit(0, list(range(10)))                      # 3 pages
+    s.release(0)                                     # 2 cached cold
+    assert s.a.cold_pages == 2
+    s.admit(1, list(range(100, 118)))                # needs 5 pages
+    assert s.a.evictions >= 1                        # ate the cold cache
+    s.check()
+    with pytest.raises(PoolExhausted):
+        s.admit(2, list(range(200, 212)))            # nothing left
+    s.check()                                        # failed admit rolled back
+    assert s.a.tables[2] == []
+
+
+def test_waiting_and_writer_orphan_claim():
+    a = PagedAllocator(16, 4, 3, 4)
+    ids = list(range(9))
+    a.admit(0, ids)                                  # writer of 2 pages
+    plan1 = a.admit(1, ids)
+    assert plan1.matched_len == 8
+    assert a.ready(1) is None                        # writer still filling
+    a.note_fill(0, 4)                                # one page done
+    assert a.ready(1) is None
+    a.release(0)                                     # orphan page 2nd page
+    ff, wf = a.ready(1)                              # claim: refill from 4
+    assert wf == 4 and ff == 4
+    a.prepare_write(1, 4, 9)
+    a.note_fill(1, 9)
+    assert a.ready(1) == (4, 4)
+    a.check_invariants()
+
+
+def test_fork_never_claims_writer_rights():
+    """ready() on a forked slot must not claim the source's pages — a
+    claim would let prepare_write skip the COW and clobber pages the
+    source still reads."""
+    s = Sim()
+    ids = list(range(50, 60))                        # 2 full + partial tail
+    s.admit(0, ids)
+    s.fork(0, 1)
+    assert s.a.ready(1) is not None                  # no waiting, and...
+    tail = s.a.tables[0][-1]
+    assert s.a.writer.get(tail) != 1                 # ...no claim happened
+    s.append(1, [1, 2])                              # must COW, not clobber
+    s.check()
+    assert s.a.tables[0][-1] != s.a.tables[1][-1]
+
+
+def test_orphan_claim_stops_at_live_writer():
+    """Claiming an orphaned prefix run must not steal pages a live
+    writer is still filling."""
+    a = PagedAllocator(24, 4, 4, 6)
+    ids = list(range(17))                            # 4 full pages + tail
+    a.admit(0, ids)
+    a.note_fill(0, 8)                                # pages 0,1 full
+    p2, p3 = a.tables[0][2], a.tables[0][3]
+    a.admit(1, ids)                                  # attaches 4 full pages
+    a.release(0)                                     # orphans pages 2,3
+    a.writer[p3] = 2                                 # simulate live writer
+    ff, wf = a.ready(1)                              # claim page 2 only
+    assert wf == 8 and a.writer[p2] == 1 and a.writer[p3] == 2
+
+
+def test_pages_in_use_accounting():
+    s = Sim()
+    assert s.a.pages_in_use == 0
+    s.admit(0, list(range(6)))
+    assert s.a.pages_in_use == 2
+    s.append(0, list(range(6)))                      # grow to 12 tokens
+    assert s.a.pages_in_use == 3
+    assert s.a.peak_in_use == 3
+    s.release(0)
+    assert s.a.pages_in_use == 1                     # one cached cold page
+    s.check()
+
+
+# ----------------------------- fuzz harness --------------------------------
+
+_token = st.integers(min_value=0, max_value=30)      # small alphabet: real
+                                                     # cross-slot collisions
+
+
+@st.composite
+def _op(draw):
+    kind = draw(st.sampled_from(
+        ["admit", "append", "fork", "release", "release", "admit"]))
+    return (kind, draw(st.integers(0, SLOTS - 1)),
+            draw(st.lists(_token, min_size=1, max_size=14)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_op(), min_size=1, max_size=40))
+def test_fuzz_alloc_append_fork_free_vs_shadow(ops):
+    s = Sim()
+    for kind, b, toks in ops:
+        try:
+            if kind == "admit":
+                if b in s.shadow:
+                    s.release(b)
+                s.admit(b, toks)
+            elif kind == "append" and b in s.shadow:
+                room = MAXP * PS - len(s.shadow[b])
+                if room > 0:
+                    s.append(b, toks[:room])
+            elif kind == "fork" and b in s.shadow:
+                dst = (b + 1) % SLOTS
+                if dst not in s.shadow:
+                    s.fork(b, dst)
+            elif kind == "release" and b in s.shadow:
+                s.release(b)
+        except PoolExhausted:
+            pass                                     # legal under pressure
+        s.check()
+    for b in list(s.shadow):
+        s.release(b)
+        s.check()
+    # after releasing everything, only the prefix cache may hold pages
+    assert s.a.pages_in_use == s.a.cold_pages
