@@ -333,7 +333,29 @@ def paged_engine_sharedprefix(n=32, max_new=24):
              f"{kv_cols(st)};n={n}")
 
 
+def sharded_engine_throughput():
+    """Tensor-parallel (vocab-sharded) engine rows: engine_sharded_m1 /
+    _m2 / _m4 + an unsharded baseline (docs/sharding.md), each asserting
+    token-for-token identity with the baseline.
+
+    Runs benchmarks/bench_sharded.py in a SUBPROCESS — the main bench
+    process must keep the single real CPU device (tests/conftest.py
+    note), and the device count is fixed at backend init. The
+    subprocess forces its own XLA host devices before importing jax."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.join(os.path.dirname(__file__), "..")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sharded"],
+        cwd=root, capture_output=True, text=True, timeout=1800)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr)
+        raise RuntimeError("bench_sharded subprocess failed")
+
+
 ALL = [table1_json, table2_sql, table3_gpl, table5_mask_store,
        fig10_incremental, mask_union_micro, opportunistic_ablation,
        batched_engine_throughput, speculative_engine_throughput,
-       paged_engine_sharedprefix]
+       paged_engine_sharedprefix, sharded_engine_throughput]

@@ -48,23 +48,61 @@ def greedy(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits, axis=-1)
 
 
+def topk_topp_filter(scaled: jnp.ndarray, top_k: jnp.ndarray,
+                     top_p: jnp.ndarray) -> jnp.ndarray:
+    """Support filter shared by the scalar sampler (`sample`) and the
+    batched selector (`select_batch`): ONE implementation, so the two
+    paths keep IDENTICAL kept-token sets by construction (parity is
+    fuzz-tested in tests/test_decoding.py).
+
+    scaled [..., V] temperature-scaled logits; top_k [...] int32 (<= 0
+    disables); top_p [...] f32 (>= 1.0 disables). Boundary semantics:
+
+      * top-k keeps ties with the k-th largest logit (strictly-below
+        demotion), so the kept set can exceed k;
+      * top-p keeps tokens while the sorted cumulative probability is
+        < top_p, PLUS the first token at/over the boundary
+        (inclusive-first-over), plus any tie with that cutoff logit;
+      * top_p >= 1.0 disables the nucleus filter EXACTLY. (The scalar
+        sampler used to apply `cum < 1.0` literally, where float
+        round-off in the cumsum could truncate low-probability tail
+        tokens the batched selector kept — the boundary-semantics
+        mismatch this shared filter removes.)
+    """
+    V = scaled.shape[-1]
+    # top-k: demote everything strictly below the k-th largest
+    kidx = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V) - 1
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    kth = jnp.take_along_axis(sorted_desc, kidx[..., None], axis=-1)
+    scaled = jnp.where(scaled < kth, NEG_INF, scaled)
+    # top-p (nucleus) over the top-k-filtered rows
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    cum = jnp.cumsum(jax.nn.softmax(sorted_desc, axis=-1), axis=-1)
+    p = jnp.where(top_p < 1.0, top_p, 2.0)[..., None]
+    cutoff_idx = jnp.minimum(jnp.sum(cum < p, axis=-1, keepdims=True), V - 1)
+    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx, axis=-1)
+    return jnp.where(scaled < cutoff, NEG_INF, scaled)
+
+
 def sample(logits: jnp.ndarray, key: jax.Array, temperature: float = 1.0,
            top_k: Optional[int] = None, top_p: Optional[float] = None
            ) -> jnp.ndarray:
-    """Temperature / top-k / top-p sampling over the last axis."""
-    logits = logits / jnp.maximum(temperature, 1e-6)
-    if top_k is not None:
-        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, NEG_INF, logits)
-    if top_p is not None:
-        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
-        probs = jax.nn.softmax(sorted_logits, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        # keep tokens until cumulative prob exceeds top_p (incl. first over)
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
-        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-        logits = jnp.where(logits < cutoff, NEG_INF, logits)
-    return jax.random.categorical(key, logits, axis=-1)
+    """Temperature / top-k / top-p sampling over the last axis.
+
+    The support set is `topk_topp_filter` — the same filter the batched
+    `select_batch` applies — so scalar and batched sampling draw from
+    identical candidate sets for identical configs."""
+    scaled = logits / jnp.maximum(temperature, 1e-6)
+    if top_k is not None or top_p is not None:
+        # both None is the common plain-temperature case: the filter is
+        # a mathematical no-op there, and the Optionals are static at
+        # trace time, so skip its two O(V log V) sorts entirely
+        lead = logits.shape[:-1]
+        scaled = topk_topp_filter(
+            scaled,
+            jnp.full(lead, 0 if top_k is None else top_k, jnp.int32),
+            jnp.full(lead, 1.0 if top_p is None else top_p, jnp.float32))
+    return jax.random.categorical(key, scaled, axis=-1)
 
 
 def select_batch(logits: jnp.ndarray, keys: jnp.ndarray,
@@ -84,21 +122,20 @@ def select_batch(logits: jnp.ndarray, keys: jnp.ndarray,
       top_p        [B]     f32, >= 1.0 disables
 
     Returns [B] int32 sampled ids.
+
+    Sharded serving: under `use_sharding` with the serving rules the
+    incoming logits are vocab-sharded; the "sample_logits" hint below
+    is the hot path's single combine — one all-gather of the masked
+    [B, V] back to replicated right before the sort/cumsum/categorical
+    machinery, whose partitioned forms are not bit-exact. (The greedy
+    argmax alone would partition exactly, but sampled rows force the
+    gather anyway and only [B] ids ever reach the host.)
     """
+    from repro.distributed.api import shard_hint
+    logits = shard_hint(logits, "sample_logits")
     B, V = logits.shape
     scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
-    # top-k: demote everything below each row's k-th largest
-    kidx = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V) - 1
-    sorted_desc = -jnp.sort(-scaled, axis=-1)
-    kth = jnp.take_along_axis(sorted_desc, kidx[:, None], axis=-1)
-    scaled = jnp.where(scaled < kth, NEG_INF, scaled)
-    # top-p (nucleus) over the top-k-filtered rows; p >= 1 keeps everything
-    sorted_desc = -jnp.sort(-scaled, axis=-1)
-    cum = jnp.cumsum(jax.nn.softmax(sorted_desc, axis=-1), axis=-1)
-    p = jnp.where(top_p < 1.0, top_p, 2.0)[:, None]
-    cutoff_idx = jnp.minimum(jnp.sum(cum < p, axis=-1, keepdims=True), V - 1)
-    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx, axis=-1)
-    scaled = jnp.where(scaled < cutoff, NEG_INF, scaled)
+    scaled = topk_topp_filter(scaled, top_k, top_p)
     sampled = jax.vmap(jax.random.categorical)(keys, scaled)
     return jnp.where(greedy_flags, jnp.argmax(logits, axis=-1),
                      sampled).astype(jnp.int32)

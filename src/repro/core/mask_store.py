@@ -27,12 +27,19 @@ from __future__ import annotations
 
 import hashlib
 import os
+import tempfile
 import time
 
 import numpy as np
 
 from .grammar import Grammar
 from .tokenizer import ByteTokenizer, EOS_ID, PAD_ID
+
+# On-disk cache layout version, hashed into the cache fingerprint. Bump
+# whenever the packed representation changes (word dtype, bit order, row
+# addressing, padding) so stale caches written by an older layout MISS
+# instead of being loaded as garbage masks.
+STORE_LAYOUT_VERSION = 2
 
 
 class MaskStore:
@@ -153,6 +160,11 @@ class MaskStore:
 
 def _fingerprint(grammar: Grammar, tok: ByteTokenizer) -> str:
     h = hashlib.sha256()
+    # layout version + packed-word geometry first: a cache produced by an
+    # older packed layout must not fingerprint-match (it would load as
+    # wrong masks — soundness, not just staleness)
+    words = (tok.vocab_size + 31) // 32
+    h.update(f"layout{STORE_LAYOUT_VERSION}:uint32le:w{words}".encode())
     h.update(grammar.name.encode())
     for t in grammar.terminal_names:
         h.update(t.encode())
@@ -290,16 +302,26 @@ def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,
               f"{meta['build_seconds']:.1f}s")
     if cache_dir:
         os.makedirs(cache_dir, exist_ok=True)
-        # atomic publish: write to a private temp file, then os.replace —
-        # concurrent builders race benignly and readers never see a torn
-        # .npz
-        tmp = f"{path}.tmp.{os.getpid()}"
+        # atomic publish, safe under concurrent multi-process (and
+        # multi-thread) builds: mkstemp gives each writer a private
+        # temp file in the SAME directory (os.replace must not cross
+        # filesystems), the pid in the prefix aids debugging, and
+        # os.replace atomically publishes — concurrent builders race
+        # benignly (last writer wins, all write identical bytes) and
+        # readers never see a torn .npz. The unlink is tolerant: the
+        # temp name is private, so ENOENT can only mean our own
+        # os.replace already consumed it.
+        fd, tmp = tempfile.mkstemp(
+            dir=cache_dir,
+            prefix=f".maskstore_{grammar.name}_{fp}.{os.getpid()}.")
         try:
-            with open(tmp, "wb") as f:
+            with os.fdopen(fd, "wb") as f:
                 np.savez_compressed(f, packed=packed)
             os.replace(tmp, path)
         finally:
-            if os.path.exists(tmp):
+            try:
                 os.remove(tmp)
+            except OSError:
+                pass
         meta["path"] = path
     return MaskStore(grammar, tokenizer, packed, meta)

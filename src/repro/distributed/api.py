@@ -41,3 +41,16 @@ def shard_hint(x, name: str):
     if spec is None:
         return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_active() -> bool:
+    """True inside a `use_sharding` context (trace-time query). Kernel
+    dispatchers use it to route around Pallas bodies, which GSPMD cannot
+    partition, onto the jnp references it can."""
+    return _rules() is not None
+
+
+def current_mesh():
+    """The active `use_sharding` mesh, or None."""
+    ctx = _rules()
+    return None if ctx is None else ctx[0]

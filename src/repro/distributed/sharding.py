@@ -211,6 +211,112 @@ def cache_shardings(abstract_caches, mesh, cfg):
         jax.tree_util.tree_map_with_path(rule, abstract_caches)
 
 
+# ======================= serving tensor parallelism ========================
+# The sharded serving engine promises token-for-token identical output
+# to the single-device engine (docs/sharding.md), which constrains WHAT
+# may be sharded. Measured on the CPU host-platform backend (bf16 demo
+# decode, forced host devices):
+#
+#   * vocab-dim sharding is bit-exact: embed [V, D] on V (the gather's
+#     masked-sum combine only ever adds the true value to zeros),
+#     lm_head [D, V] on V (every shard computes its logit columns with
+#     the full, un-split contraction over D), the packed mask store
+#     [R, W] on W, and all elementwise mask math on the sharded vocab
+#     axis;
+#   * any trunk sharding is NOT: row-parallel wo/w_down partition the
+#     contraction (partial dots + all-reduce reorder the fp summation;
+#     logits drift ~3e-2 after two layers), and even head-aligned
+#     wq/wk/wv or w_gate/w_up sharding with forced gather points before
+#     the next contraction shifts attention/FFN outputs by one bf16 ulp
+#     (the partitioned einsum's accumulation differs from the
+#     single-device kernel's).
+#
+# So the serving default is VOCAB PARALLELISM: trunk + KV caches
+# replicated, the grammar hot path — logits, packed mask rows, mask
+# application — vocab-sharded, with ONE gather in the selector before
+# the categorical draw. `trunk_shard=True` additionally applies the
+# megatron-style `param_spec`/`cache_shardings` rules for TPU-scale
+# serving, where per-device memory forces it and the bit-exactness
+# gate does not apply.
+
+def serving_param_spec(path_str: str, shape, mesh, cfg,
+                       trunk_shard: bool = False) -> P:
+    """Sharding rule for one serving param (vocab-parallel; see above)."""
+    stacked = ("['groups']" in path_str) or ("['encoder']" in path_str)
+    pre = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+    name = path_str.rsplit("['", 1)[-1].rstrip("']")
+
+    def mp(n):
+        return "model" if _div(n, mesh, "model") else None
+
+    if name == "embed" and len(core) == 2:
+        return P(*pre, mp(core[0]), None)
+    if name == "lm_head" and len(core) == 2:
+        return P(*pre, None, mp(core[1]))
+    if trunk_shard:
+        return param_spec(path_str, shape, mesh)
+    return P(*pre, *([None] * len(core)))
+
+
+def serving_param_shardings(abstract_params, mesh, cfg,
+                            trunk_shard: bool = False):
+    def rule(path, leaf):
+        return NamedSharding(
+            mesh, serving_param_spec(jax.tree_util.keystr(path), leaf.shape,
+                                     mesh, cfg, trunk_shard=trunk_shard))
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def serving_cache_shardings(abstract_caches, mesh, cfg,
+                            trunk_shard: bool = False):
+    """KV caches/pools for the sharded engine. Bit-exact default:
+    replicated (sharding the kv-head or sequence/page dims partitions
+    the attention einsums, which is measurably not ulp-stable on the
+    CPU backend). trunk_shard=True defers to `cache_shardings` — the
+    dense [c,B,L,K,Dh] rule also covers the paged pools' [c,P,ps,K,Dh]
+    leaves (kv-head dim on "model" when divisible)."""
+    if abstract_caches is None:
+        return None
+    if trunk_shard:
+        return cache_shardings(abstract_caches, mesh, cfg)
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*([None] * l.ndim))),
+        abstract_caches)
+
+
+def serving_store_sharding(mesh, num_words: int):
+    """Packed mask store [R, W]: uint32 word dim on "model" (the vocab
+    axis at 1/32 scale) when divisible, else replicated."""
+    wp = "model" if _div(num_words, mesh, "model") else None
+    return NamedSharding(mesh, P(None, wp))
+
+
+def serving_rules(mesh, cfg, trunk_shard: bool = False) -> dict:
+    """shard_hint rules for the sharded serving engine (consumed inside
+    `use_sharding`; see distributed/api.py). Replication rules are hard
+    gather points: they force a sharded activation back to replicated
+    before math that must stay bit-exact."""
+    mp_v = "model" if _div(cfg.vocab_size, mesh, "model") else None
+    kv_mp = "model" if trunk_shard and cfg.num_kv_heads and \
+        _div(cfg.num_kv_heads, mesh, "model") else None
+    return {
+        "act_bsd": P(None, None, None),         # residual stream replicated
+        "attn_kv": P(None, None, kv_mp, None),
+        "logits_bsv": P(None, None, mp_v),
+        "logits_bv": P(None, mp_v),
+        # gather points guarding contractions over trunk-sharded dims
+        # (no-ops in the vocab-parallel default, where the trunk is
+        # replicated anyway)
+        "attn_out_in": P(None, None, None),     # heads, before @ wo
+        "ffn_hidden": P(None, None, None),      # d_ff, before @ w_down
+        # the selector's single combine: replicate [B(*S), V] masked
+        # logits once, right before the sort/cumsum/categorical draw
+        # (a cumsum over a sharded vocab axis is NOT bit-exact)
+        "sample_logits": P(None, None),
+    }
+
+
 def activation_rules(mesh, cfg, batch_size: int, seq_parallel: bool = False):
     """Logical-name rules consumed by shard_hint (distributed/api.py).
 

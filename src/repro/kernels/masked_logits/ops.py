@@ -15,13 +15,19 @@ import jax.numpy as jnp
 
 from .kernel import masked_logits, masked_logits_span
 from .ref import masked_logits_ref, masked_logits_span_ref
+from ...distributed.api import sharding_active
 
 
 def apply_grammar_mask(logits, store, rows, eos_allowed, *, eos_id: int = 1,
                        backend: str = "auto", block_v: int = 4096,
                        constrained=None):
-    """backend: 'pallas' | 'jnp' | 'auto' (pallas-interpret off-TPU)."""
-    if backend == "jnp":
+    """backend: 'pallas' | 'jnp' | 'auto' (pallas-interpret off-TPU).
+
+    Under an active serving sharding context the jnp reference is used
+    regardless of backend: GSPMD cannot partition a pallas_call, while
+    the reference's gather + bitwise-or + where partition cleanly along
+    the vocab-sharded store words (docs/sharding.md)."""
+    if backend == "jnp" or sharding_active():
         return masked_logits_ref(logits, store, rows, eos_allowed,
                                  eos_id=eos_id, constrained=constrained)
     interpret = jax.default_backend() != "tpu"
@@ -44,8 +50,10 @@ def apply_grammar_mask_span(logits, store, rows, eos_allowed, *,
     speculative decoding: every draft position carries its own mask-row
     set, so mask + accept-test run fused on device over the whole draft
     window. `constrained` [B,K] bool marks positions that actually carry
-    a grammar mask (padding / unconstrained positions pass through)."""
-    if backend == "jnp":
+    a grammar mask (padding / unconstrained positions pass through).
+    Routes to the jnp reference under an active sharding context (see
+    `apply_grammar_mask`)."""
+    if backend == "jnp" or sharding_active():
         return masked_logits_span_ref(logits, store, rows, eos_allowed,
                                       eos_id=eos_id, constrained=constrained)
     interpret = jax.default_backend() != "tpu"

@@ -16,6 +16,7 @@ import jax
 
 from .kernel import paged_attention_decode, paged_attention_span
 from .ref import paged_attention_ref
+from ...distributed.api import sharding_active
 
 
 def paged_attention(q, k_pool, v_pool, page_table, pos, *,
@@ -27,8 +28,10 @@ def paged_attention(q, k_pool, v_pool, page_table, pos, *,
     backend: 'pallas' | 'jnp' | 'auto'. 'auto' picks the kernel on TPU
     and the jnp reference elsewhere (interpret-mode gathers are far
     slower than XLA's native gather on CPU; the kernel stays covered by
-    the parity tests)."""
-    if backend == "jnp":
+    the parity tests). Under an active serving sharding context the jnp
+    reference is used regardless: GSPMD cannot partition a pallas_call
+    (docs/sharding.md)."""
+    if backend == "jnp" or sharding_active():
         return paged_attention_ref(q, k_pool, v_pool, page_table, pos)
     on_tpu = jax.default_backend() == "tpu"
     if backend == "auto" and not on_tpu:

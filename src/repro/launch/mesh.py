@@ -19,6 +19,23 @@ def make_local_mesh(model_axis: int = 1):
     return jax.make_mesh((data, model_axis), ("data", "model"))
 
 
+def make_serving_mesh(model_parallel: int = 1):
+    """Serving-engine mesh: a pure "model" axis of `model_parallel`
+    devices (data axis 1 — the engine's continuous-batching pool IS the
+    batch dim and stays host-driven). Works on real accelerators and on
+    forced host devices alike (CPU CI runs under
+    XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    m = int(model_parallel)
+    if m < 1:
+        raise ValueError(f"model_parallel must be >= 1, got {m}")
+    if m > jax.device_count():
+        raise ValueError(
+            f"serving mesh wants {m} devices but only "
+            f"{jax.device_count()} exist (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={m} for CPU runs)")
+    return jax.make_mesh((1, m), ("data", "model"))
+
+
 # TPU v5e hardware constants (roofline targets; see EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -35,7 +35,10 @@ from repro.serving.engine import Engine, Request
 def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
                  max_len=512, opportunistic=False, checkpoint=None,
                  seed=0, slots=4, paged=False, page_size=16,
-                 num_pages=None, prefill_chunk=32):
+                 num_pages=None, prefill_chunk=32, mesh=None,
+                 trunk_shard=False):
+    """mesh: None | int (model-parallel degree; 1 = single device) | a
+    prebuilt jax Mesh with a "model" axis. See docs/sharding.md."""
     cfg = get_config(arch)
     if vocab:
         from dataclasses import replace
@@ -51,10 +54,16 @@ def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
         from repro.training.checkpoint import load_checkpoint
         params, step, _ = load_checkpoint(checkpoint, params)
         print(f"loaded checkpoint at step {step}")
+    if isinstance(mesh, int):
+        # mesh=1 builds a real single-device mesh (exercises the whole
+        # sharded code path; benchmarks use it to price the machinery)
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(mesh)
     return Engine(model, params, tok, bundles, max_len=max_len,
                   opportunistic=opportunistic, slots=slots, paged=paged,
                   page_size=page_size, num_pages=num_pages,
-                  prefill_chunk=prefill_chunk), bundles, tok
+                  prefill_chunk=prefill_chunk, mesh=mesh,
+                  trunk_shard=trunk_shard), bundles, tok
 
 
 def main(argv=None):
@@ -79,6 +88,18 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=None,
                     help="KV pool size in pages (default: the dense "
                          "engine's memory budget, slots*max_len/page)")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="tensor-parallel mesh size: shard embed/lm_head,"
+                         " logits, the packed mask store and the mask/"
+                         "sample hot path across N devices (vocab "
+                         "parallelism, token-for-token identical to "
+                         "single-device; docs/sharding.md). CPU runs "
+                         "need XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--trunk-shard", action="store_true",
+                    help="with --mesh: additionally shard the model "
+                         "trunk megatron-style (memory relief at TPU "
+                         "scale; gives up bit-exact equivalence)")
     ap.add_argument("--sequential", action="store_true",
                     help="round-robin baseline (one request per call)")
     ap.add_argument("--speculative", action="store_true",
@@ -99,7 +120,8 @@ def main(argv=None):
         args.arch, grammars=(args.grammar,),
         opportunistic=args.opportunistic, checkpoint=args.checkpoint,
         slots=args.slots, paged=args.paged, page_size=args.page_size,
-        num_pages=args.num_pages)
+        num_pages=args.num_pages, mesh=args.mesh,
+        trunk_shard=args.trunk_shard)
     dc = DecodeConfig(method="greedy" if args.greedy else "sample",
                       temperature=args.temperature)
     reqs = [Request(rid=i, prompt=args.prompt.encode(),
@@ -125,6 +147,10 @@ def main(argv=None):
           f"({stats.decode_steps} decode steps x {stats.batch_slots} slots)"
           f" | mask {stats.mask_time:.2f}s/{stats.mask_computations} | "
           f"opportunistic hits {stats.opportunistic_hits}")
+    if stats.mesh_devices > 1:
+        print(f"tensor-parallel: {stats.mesh_devices}-device mesh "
+              f"(vocab-sharded mask path"
+              f"{', trunk sharded' if args.trunk_shard else ''})")
     if args.speculative:
         print(f"speculation: jump {stats.jump_tokens} tokens "
               f"({stats.jump_fraction:.0%} of output), drafts "

@@ -245,7 +245,14 @@ def qkv_proj(p, x, cfg):
 
 def attn_out(p, o):
     B, S, H, Dh = o.shape
-    return o.reshape(B, S, H * Dh) @ p["wo"]
+    from repro.distributed.api import shard_hint
+    # serving gather point: heads were computed model-sharded; wo's
+    # contraction runs over them, so pull the activation back to
+    # replicated first — the dot is then a full local contraction,
+    # bit-identical to the single-device engine's (docs/sharding.md).
+    # Outside a serving ctx ("attn_out_in" unbound) this is identity.
+    o = shard_hint(o.reshape(B, S, H * Dh), "attn_out_in")
+    return o @ p["wo"]
 
 
 # ----------------------------- FFN -----------------------------------------
@@ -260,7 +267,11 @@ def init_ffn(key, d_model, d_ff, dtype):
 
 
 def ffn(p, x):
-    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    from repro.distributed.api import shard_hint
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    # serving gather point before the w_down contraction over d_ff
+    # (see attn_out); identity unless "ffn_hidden" is bound.
+    return shard_hint(h, "ffn_hidden") @ p["w_down"]
 
 
 # ----------------------------- embedding / loss ----------------------------

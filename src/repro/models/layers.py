@@ -115,6 +115,11 @@ def _paged_attention_decode(p, x, cache, cfg, ctx):
     q, k, v = qkv_proj(p, x, cfg)
     q = apply_rope(q, qpos, cfg.rope_theta)
     k = apply_rope(k, qpos, cfg.rope_theta)
+    # pin the fresh K/V to the pool's kv-head sharding BEFORE the
+    # scatter, so a sharded pool is updated shard-locally instead of
+    # being gathered (identity outside a serving sharding ctx)
+    k = shard_hint(k, "attn_kv")
+    v = shard_hint(v, "attn_kv")
     pt = ctx["page_table"]
     page = jnp.take_along_axis(pt, qpos // ps, axis=1)             # [B,S]
     ok = page >= 0
@@ -157,6 +162,10 @@ def _self_attention_decode(p, x, cache, cfg, ctx):
     q, k, v = qkv_proj(p, x, cfg)
     q = apply_rope(q, qpos, cfg.rope_theta)
     k = apply_rope(k, qpos, cfg.rope_theta)
+    # match the cache's kv-head sharding before the where-blend write
+    # (identity outside a serving sharding ctx)
+    k = shard_hint(k, "attn_kv")
+    v = shard_hint(v, "attn_kv")
     L = cache["k"].shape[1]
     slot = qpos % L                                           # [B, S]
     # where-blend instead of scatter: GSPMD partitions a batched scatter
@@ -244,7 +253,7 @@ def attn_decode(p, x, cache, cfg, ctx):
                                       cache, cfg, ctx)
     x = x + o
     x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
-    return x, cache
+    return shard_hint(x, "act_bsd"), cache
 
 
 # ---- "moe": self-attention + MoE FFN ----
@@ -282,7 +291,7 @@ def moe_decode(p, x, cache, cfg, ctx):
                                       cache, cfg, ctx)
     x = x + o
     y, _ = moe_ffn(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
-    return x + y, cache
+    return shard_hint(x + y, "act_bsd"), cache
 
 
 # ---- "cross": cross-attention to image/encoder tokens + FFN (VLM) ----

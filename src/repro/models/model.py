@@ -256,6 +256,12 @@ class Model:
         KIND_DECODE under lax.scan against the caches -> ([B,S,V], caches)."""
         cfg = self.cfg
         x = embed_tokens(params["embed_block"], tokens)
+        # pin the residual stream's sharding before the layer scan (same
+        # hint train/prefill apply): under the serving rules this
+        # gathers the vocab-sharded embedding lookup back to replicated
+        # exactly once, instead of leaving GSPMD to re-decide inside the
+        # scanned layer body (docs/sharding.md)
+        x = shard_hint(x, "act_bsd")
         new_caches = []
         for (pat, count), gp, gc in zip(layer_groups(cfg), params["groups"],
                                         caches):

@@ -44,6 +44,11 @@ from repro.core.constrain import GrammarConstraint, MAX_ACCEPT
 from repro.core.decoding import (DecodeConfig, NEG_INF, select_batch,
                                  select_span)
 from repro.core.tokenizer import BOS_ID, ByteTokenizer, EOS_ID
+from repro.distributed.api import use_sharding
+from repro.distributed.sharding import (serving_cache_shardings,
+                                        serving_param_shardings,
+                                        serving_rules,
+                                        serving_store_sharding)
 from repro.kernels.masked_logits.ops import (apply_grammar_mask,
                                              apply_grammar_mask_span)
 from repro.serving.kvpool import PagedAllocator, PoolExhausted
@@ -104,6 +109,7 @@ class EngineStats:
     opportunistic_hits: int = 0
     decode_steps: int = 0                   # batched [B,V] device steps
     batch_slots: int = 0
+    mesh_devices: int = 1                   # tensor-parallel mesh size
     # --- speculation (generate_speculative) ---
     jump_tokens: int = 0                    # emitted with zero model calls
     draft_proposed: int = 0
@@ -136,14 +142,24 @@ class Engine:
                  opportunistic: bool = False, mask_backend: str = "jnp",
                  slots: int = 4, paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None, prefill_chunk: int = 32,
-                 attn_backend: str = "auto"):
+                 attn_backend: str = "auto", mesh=None,
+                 trunk_shard: bool = False):
         """grammar_bundles: name -> (grammar, table, store).
         slots: decode-pool width B of the batched scheduler.
         paged: serve KV through the paged pool (docs/kv_paging.md) —
         page-table attention, refcounted prefix sharing and chunked
         prefill; token-for-token identical to the dense engine.
         num_pages defaults to slots * ceil(max_len / page_size), i.e.
-        the dense engine's exact KV memory budget."""
+        the dense engine's exact KV memory budget.
+        mesh: a jax Mesh with a "model" axis (launch/mesh.py::
+        make_serving_mesh) — serve tensor-parallel across its devices:
+        embed/lm_head, the [.., V] logits, the packed mask store and
+        the whole mask hot path run vocab-sharded, with one gather in
+        the selector; output stays token-for-token identical to the
+        single-device engine (docs/sharding.md).
+        trunk_shard: additionally shard the trunk megatron-style
+        (param_spec/cache_shardings) — TPU-scale memory relief that
+        gives up bit-exactness vs the single-device engine."""
         self.model = model
         self.params = params
         self.tok = tokenizer
@@ -158,6 +174,21 @@ class Engine:
         self.num_pages = int(num_pages or self.slots * self.max_pages)
         self.prefill_chunk = max(1, int(prefill_chunk))
         self.attn_backend = attn_backend
+        self.mesh = mesh
+        self.trunk_shard = bool(trunk_shard)
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    "serving mesh needs a 'model' axis "
+                    "(launch/mesh.py::make_serving_mesh)")
+            self._rules = serving_rules(mesh, model.cfg,
+                                        trunk_shard=self.trunk_shard)
+            self.params = jax.device_put(
+                params, serving_param_shardings(
+                    params, mesh, model.cfg,
+                    trunk_shard=self.trunk_shard))
+        else:
+            self._rules = None
         if self.paged and not model.supports_span_decode:
             raise ValueError(
                 "paged KV serving needs position-addressed decode caches "
@@ -167,10 +198,10 @@ class Engine:
             raise ValueError(
                 "paged KV serving does not support sliding-window "
                 "attention")
-        self._prefill = jax.jit(
+        self._prefill = self._shard_jit(
             lambda p, b, tl: model.prefill(p, b, cache_len=max_len,
                                            true_len=tl))
-        self._decode = jax.jit(model.decode_step)
+        self._decode = self._shard_jit(model.decode_step)
         # one concatenated device store for all grammars: a request's rows
         # index its grammar's block via the per-grammar row offset (shared
         # by the batched and sequential paths — the store lives on device
@@ -184,8 +215,40 @@ class Engine:
         words = (tokenizer.vocab_size + 31) // 32
         cat = (np.concatenate(parts, axis=0) if parts
                else np.zeros((1, words), np.uint32))
-        self._store_cat = jnp.asarray(cat)
+        if self.mesh is not None:
+            # the packed mask store lives vocab-sharded on the mesh:
+            # word w of every row sits on the shard owning vocab ids
+            # [w*32, (w+1)*32) — the row gather + bitwise union +
+            # logits mask in kernels/masked_logits stay shard-local
+            self._store_cat = jax.device_put(
+                cat, serving_store_sharding(self.mesh, cat.shape[1]))
+        else:
+            self._store_cat = jnp.asarray(cat)
         self._build_batched_fns()
+
+    def _shard_jit(self, fn):
+        """jit, plus (when a mesh is configured) the serving
+        `use_sharding` context around every call — shard_hint rules
+        bind at trace time, and per-bucket retraces re-enter them."""
+        jf = jax.jit(fn)
+        if self.mesh is None:
+            return jf
+
+        def call(*args, **kwargs):
+            with use_sharding(self.mesh, self._rules):
+                return jf(*args, **kwargs)
+        return call
+
+    def _place_caches(self, caches):
+        """Commit freshly-initialized decode caches / paged pools to the
+        mesh (replicated in the bit-exact default; kv-head-sharded under
+        trunk_shard). No-op without a mesh."""
+        if self.mesh is None:
+            return caches
+        return jax.device_put(
+            caches, serving_cache_shardings(caches, self.mesh,
+                                            self.model.cfg,
+                                            trunk_shard=self.trunk_shard))
 
     def _build_batched_fns(self):
         backend = self.mask_backend
@@ -245,21 +308,21 @@ class Engine:
             (leaves are [count, P, ps, K, Dh])."""
             return jax.tree.map(lambda a: a.at[:, d].set(a[:, s]), c)
 
-        self._mask_sample = jax.jit(mask_sample)
-        self._resample = jax.jit(resample)
-        self._sample_plain = jax.jit(select_batch)
-        self._insert_caches = jax.jit(insert)
-        self._span_mask_select = jax.jit(span_mask_select)
-        self._span_decode = jax.jit(
+        self._mask_sample = self._shard_jit(mask_sample)
+        self._resample = self._shard_jit(resample)
+        self._sample_plain = self._shard_jit(select_batch)
+        self._insert_caches = self._shard_jit(insert)
+        self._span_mask_select = self._shard_jit(span_mask_select)
+        self._span_decode = self._shard_jit(
             lambda p, c, toks, pos, fm: self.model.decode_span(
                 p, c, toks, pos, feed_mask=fm))
-        self._span_decode_paged = jax.jit(
+        self._span_decode_paged = self._shard_jit(
             lambda p, c, toks, pos, fm, pt: self.model.decode_span(
                 p, c, toks, pos, feed_mask=fm,
                 batch_ctx={"page_table": pt,
                            "paged_backend": self.attn_backend}))
-        self._span_feed_paged = jax.jit(span_feed_paged)
-        self._copy_page = jax.jit(copy_page)
+        self._span_feed_paged = self._shard_jit(span_feed_paged)
+        self._copy_page = self._shard_jit(copy_page)
 
     # ------------------------------ lifecycle -----------------------------
 
@@ -515,7 +578,8 @@ class Engine:
         B = self.slots
         queue = deque(requests)
         all_states: list[RequestState] = []
-        caches = self.model.init_decode_caches(B, self.max_len)
+        caches = self._place_caches(
+            self.model.init_decode_caches(B, self.max_len))
         cur_tok = np.zeros(B, np.int32)
         feed_pos = np.zeros(B, np.int32)
         slot_state: list[Optional[RequestState]] = [None] * B
@@ -596,6 +660,7 @@ class Engine:
             opportunistic_hits=opportunistic_hits,
             decode_steps=decode_steps,
             batch_slots=B,
+            mesh_devices=self.mesh.size if self.mesh else 1,
         )
         return all_states, stats
 
@@ -614,8 +679,8 @@ class Engine:
         """Fresh allocator + zeroed device page pools for one run."""
         alloc = PagedAllocator(self.num_pages, self.page_size, B,
                                self.max_pages)
-        caches = self.model.init_paged_caches(self.num_pages,
-                                              self.page_size)
+        caches = self._place_caches(
+            self.model.init_paged_caches(self.num_pages, self.page_size))
         return alloc, caches
 
     def _admit_paged(self, req: Request, b: int, alloc, ids=None):
@@ -839,6 +904,7 @@ class Engine:
             opportunistic_hits=opportunistic_hits,
             decode_steps=decode_steps,
             batch_slots=B,
+            mesh_devices=self.mesh.size if self.mesh else 1,
         )
         return all_states, self._kv_stats(stats, alloc)
 
@@ -954,7 +1020,8 @@ class Engine:
             alloc, caches = self._paged_setup(B)
         else:
             alloc = None
-            caches = self.model.init_decode_caches(B, self.max_len)
+            caches = self._place_caches(
+                self.model.init_decode_caches(B, self.max_len))
         # the feed cursor: slot b's tokens at positions < feed_pos[b] are
         # in the decode caches; token_ids[feed_pos[b]:pos] are committed
         # but pending feed (cur-token + jump backlog)
@@ -1220,6 +1287,7 @@ class Engine:
             mask_computations=mask_computations,
             decode_steps=decode_steps,
             batch_slots=B,
+            mesh_devices=self.mesh.size if self.mesh else 1,
             jump_tokens=jump_tokens,
             draft_proposed=draft_proposed,
             draft_accepted=draft_accepted,
@@ -1341,5 +1409,6 @@ class Engine:
             opportunistic_hits=sum(s.opportunistic_hits for s in states),
             decode_steps=sum(s.steps for s in states),
             batch_slots=1,
+            mesh_devices=self.mesh.size if self.mesh else 1,
         )
         return states, stats

@@ -265,16 +265,36 @@ class PagedAllocator:
         must apply BEFORE the write (non-empty only when the write
         starts mid-page inside a shared page, so older content in that
         page must survive; shared pages fully covered by the write are
-        simply replaced). Raises PoolExhausted under true pressure."""
+        simply replaced). Raises PoolExhausted under true pressure.
+
+        ATOMIC: every allocation this call needs (growth + COW
+        replacements) is counted against `available()` up front, and the
+        failure path acquires nothing. A mid-call failure used to leave
+        the grown head of a multi-page feed referenced in the table and
+        its completed COW swaps stripped of their pending device copies
+        — harmless for a caller that immediately finishes the request
+        (release() returns the pages), but a page-refcount leak plus a
+        garbage-head page for any caller that keeps the slot alive
+        after catching PoolExhausted."""
         t = self.tables[b]
         need = self._pages_for(end)
         if need > self.max_pages:
             raise ValueError(
                 f"slot {b} needs {need} pages > max {self.max_pages}")
+        ps = self.ps
+        # clamp: a write range ending inside an already-longer table has
+        # negative headroom, which must not offset the COW count below
+        grow = max(0, need - len(t))
+        cow = sum(1 for i in range(start // ps, min(len(t), need))
+                  if self.refcount[t[i]] > 1 and self.writer.get(t[i]) != b)
+        if grow + cow > self.available():
+            raise PoolExhausted(
+                f"KV page pool exhausted ({self.P} pages of {self.ps}; "
+                f"feed needs {grow} new + {cow} COW, "
+                f"{self.available()} allocatable)")
         while len(t) < need:
             t.append(self._alloc())
         copies = []
-        ps = self.ps
         for i in range(start // ps, need):
             p = t[i]
             if self.refcount[p] > 1 and self.writer.get(p) != b:

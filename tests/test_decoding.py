@@ -11,7 +11,8 @@ except ImportError:  # degrade gracefully: only @given tests skip
 
 from repro.core.decoding import (DecodeConfig, NEG_INF, apply_bool_mask,
                                  beam_search, greedy, sample, select_batch,
-                                 union_packed_rows, unpack_mask_words)
+                                 topk_topp_filter, union_packed_rows,
+                                 unpack_mask_words)
 
 
 def test_greedy_respects_mask():
@@ -173,3 +174,90 @@ def test_decode_config_dispatch():
     t = DecodeConfig(method="sample", temperature=0.01).select(
         logits, jax.random.PRNGKey(0))
     assert int(t[0]) == 1
+
+
+# ------------- scalar sampler <-> batched selector parity -------------------
+# The scalar `sample` (sequential engine, DecodeConfig.select) and the
+# batched `select_batch` (batched/paged/sharded engines) must keep
+# IDENTICAL token-support sets for identical configs — they share
+# `topk_topp_filter`, and these tests pin the boundary semantics
+# (cum < top_p cutoff, inclusive-first-over token, tie handling).
+
+def _scalar_support(logits_row, temp, top_k, top_p):
+    """Token set the scalar sampler can draw from."""
+    s = jnp.asarray(logits_row)[None, :] / max(temp, 1e-6)
+    f = topk_topp_filter(
+        s, jnp.full((1,), top_k or 0, jnp.int32),
+        jnp.full((1,), 1.0 if top_p is None else top_p, jnp.float32))
+    return set(np.where(np.asarray(f)[0] > NEG_INF / 2)[0].tolist())
+
+
+def _batch_support(logits_row, temp, top_k, top_p):
+    """Token set `select_batch` can draw from (its exact filter chain)."""
+    s = jnp.asarray(logits_row)[None, :] / \
+        jnp.maximum(jnp.asarray([temp], jnp.float32), 1e-6)[:, None]
+    f = topk_topp_filter(s, jnp.asarray([top_k or 0], jnp.int32),
+                         jnp.asarray([1.0 if top_p is None else top_p],
+                                     jnp.float32))
+    return set(np.where(np.asarray(f)[0] > NEG_INF / 2)[0].tolist())
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       temp=st.floats(0.1, 3.0),
+       top_k=st.one_of(st.none(), st.integers(1, 40)),
+       top_p=st.one_of(st.none(), st.floats(0.05, 1.0)))
+def test_scalar_batch_topp_support_parity(seed, temp, top_k, top_p):
+    """Fuzz across temperatures/top-k/top-p (incl. the top_p == 1.0 and
+    ties boundaries): both samplers must keep the same token set."""
+    rng = np.random.default_rng(seed)
+    V = 64
+    logits = rng.normal(size=V).astype(np.float32)
+    # inject ties at the top-k and nucleus boundaries half the time
+    if seed % 2:
+        order = np.argsort(logits)[::-1]
+        logits[order[1]] = logits[order[2]]
+        logits[order[4]] = logits[order[5]]
+    assert _scalar_support(logits, temp, top_k, top_p) == \
+        _batch_support(logits, temp, top_k, top_p)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       temp=st.floats(0.2, 2.0),
+       top_k=st.one_of(st.none(), st.integers(1, 16)),
+       top_p=st.one_of(st.none(), st.floats(0.1, 1.0)))
+def test_scalar_sample_draws_within_batch_support(seed, temp, top_k, top_p):
+    """End-to-end: tokens the scalar sampler actually draws always lie in
+    the batched selector's support set (and vice versa by symmetry of the
+    shared filter)."""
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(1, 48)).astype(np.float32))
+    sup = _batch_support(np.asarray(logits)[0], temp, top_k, top_p)
+    for s in range(4):
+        t = int(sample(logits, jax.random.PRNGKey(seed + s),
+                       temperature=temp, top_k=top_k, top_p=top_p)[0])
+        assert t in sup
+
+
+def test_topp_one_keeps_full_support():
+    """top_p=1.0 must disable the nucleus filter EXACTLY: the scalar
+    sampler used to apply `cum < 1.0` literally, where cumsum round-off
+    truncated low-probability tail tokens that `select_batch` kept."""
+    logits = np.zeros(32, np.float32)
+    logits[0] = 20.0            # softmax mass concentrates; cum hits 1.0
+    assert _scalar_support(logits, 1.0, None, 1.0) == set(range(32))
+    assert _batch_support(logits, 1.0, None, 1.0) == set(range(32))
+
+
+def test_topp_inclusive_first_over_and_ties():
+    """cum < top_p cutoff keeps the first token AT/OVER the boundary,
+    plus any token tied with the cutoff logit — in both samplers."""
+    logits = np.asarray([2.0, 1.0, 1.0, -3.0], np.float32)
+    # p tiny: only the argmax survives (it is the first-over token)
+    assert _scalar_support(logits, 1.0, None, 0.01) == {0}
+    assert _batch_support(logits, 1.0, None, 0.01) == {0}
+    # boundary inside the tied pair: the cutoff token's tie survives too
+    s_sc = _scalar_support(logits, 1.0, None, 0.8)
+    s_ba = _batch_support(logits, 1.0, None, 0.8)
+    assert s_sc == s_ba == {0, 1, 2}

@@ -259,3 +259,125 @@ def test_fuzz_alloc_append_fork_free_vs_shadow(ops):
         s.check()
     # after releasing everything, only the prefix cache may hold pages
     assert s.a.pages_in_use == s.a.cold_pages
+
+
+# ------------------- prepare_write atomicity (kv_oom) ----------------------
+
+def _leaked_pages(a):
+    """Pages still referenced that are NOT legitimate cache-cold holds
+    (a leak candidate: held but unreachable through any table/cache)."""
+    return [p for p in range(a.P)
+            if a.refcount[p] > 0 and not
+            (a.refcount[p] == 1 and p in a._rev and a.full[p])]
+
+
+def test_prepare_write_exhaustion_is_atomic():
+    """A multi-page feed that cannot be fully reserved must acquire
+    NOTHING: the table, refcounts and free list are untouched, so a
+    caller may keep the slot alive (or release it later) without
+    leaking the grown head or losing pending COW copies."""
+    a = PagedAllocator(num_pages=4, page_size=4, slots=2,
+                       max_pages_per_slot=8)
+    a.admit(0, list(range(10)))                      # 3 pages
+    a.note_fill(0, 10)
+    before_table = list(a.tables[0])
+    before_ref = list(a.refcount)
+    before_free = list(a.free)
+    # needs 3 more pages (to cover 24 tokens) but only 1 is allocatable
+    with pytest.raises(PoolExhausted):
+        a.prepare_write(0, 10, 24)
+    assert a.tables[0] == before_table
+    assert a.refcount == before_ref
+    assert list(a.free) == before_free
+    a.check_invariants()
+    # the slot is still fully usable afterwards
+    assert a.prepare_write(0, 10, 14) == []
+    a.release(0)
+    assert not _leaked_pages(a)
+
+
+def test_prepare_write_exhaustion_with_cow_is_atomic():
+    """Same, when the failing feed also crosses SHARED pages: no COW
+    swap may happen unless the whole reservation fits."""
+    a = PagedAllocator(num_pages=4, page_size=4, slots=3,
+                       max_pages_per_slot=8)
+    a.admit(0, list(range(8)))                       # 2 full prompt pages
+    a.note_fill(0, 8)
+    a.fork(0, 1)                                     # all pages shared
+    before_table = list(a.tables[1])
+    before_ref = list(a.refcount)
+    # writing [6, 16) needs 1 COW (mid-page 1) + 2 growth pages; only
+    # 2 pages are allocatable -> must refuse without swapping anything
+    with pytest.raises(PoolExhausted):
+        a.prepare_write(1, 6, 16)
+    assert a.tables[1] == before_table
+    assert a.refcount == before_ref
+    a.check_invariants()
+    a.release(0)
+    a.release(1)
+    assert not _leaked_pages(a)
+
+
+def test_prepare_write_atomic_when_table_longer_than_range():
+    """The atomicity precheck must clamp negative growth: a COW-only
+    write whose range ends INSIDE an already-longer table (grow < 0)
+    must not let the negative headroom offset the COW count — that
+    would pass the reservation check and fail mid-COW-loop, mutating
+    the table."""
+    a = PagedAllocator(num_pages=7, page_size=4, slots=3,
+                       max_pages_per_slot=8)
+    a.admit(0, list(range(12)))                      # 3 full prompt pages
+    a.note_fill(0, 12)
+    a.fork(0, 1)
+    a.prepare_write(1, 12, 24)                       # grow slot 1 to 6 pages
+    assert a.available() == 1
+    before_table = list(a.tables[1])
+    before_ref = list(a.refcount)
+    # [2, 8) covers 2 shared pages -> 2 COW allocs; need=2 < len(t)=6,
+    # so unclamped grow would be -4 and the check would wrongly pass
+    with pytest.raises(PoolExhausted):
+        a.prepare_write(1, 2, 8)
+    assert a.tables[1] == before_table
+    assert a.refcount == before_ref
+    a.check_invariants()
+    a.release(0)
+    a.release(1)
+    assert not _leaked_pages(a)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, SLOTS - 1),
+                          st.lists(_token, min_size=1, max_size=12)),
+                min_size=1, max_size=30),
+       grow=st.integers(1, 40))
+def test_forced_exhaustion_returns_pool_to_baseline(ops, grow):
+    """Regression (kv_oom audit): drive admits/appends until the pool
+    throws PoolExhausted, release everything, and require every page to
+    return to free-or-cache-cold — no page may stay referenced by a
+    dead slot."""
+    s = Sim(pages=10, ps=PS, slots=SLOTS, maxp=MAXP)
+    saw_oom = False
+    for b, toks in ops:
+        try:
+            if b in s.shadow:
+                room = MAXP * PS - len(s.shadow[b])
+                s.append(b, (toks * 4)[:max(1, min(grow, room))])
+            else:
+                s.admit(b, toks)
+        except PoolExhausted:
+            saw_oom = True
+            # engine behavior: the request finishes kv_oom -> release
+            if b in s.shadow:
+                s.release(b)
+            else:
+                # failed admit already rolled itself back
+                assert not s.a.tables[b]
+        s.check()
+    for b in list(s.shadow):
+        s.release(b)
+    s.check()
+    assert s.a.pages_in_use == s.a.cold_pages
+    assert not _leaked_pages(s.a)
+    if saw_oom:
+        # at least one exhaustion was exercised on this example
+        assert s.a.P == 10

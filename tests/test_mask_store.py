@@ -153,3 +153,64 @@ def test_cache_roundtrip_atomic(tmp_path, tokenizer):
     store2 = build_mask_store(g, tokenizer, cache_dir=str(tmp_path))
     assert store2.meta["cached"]
     np.testing.assert_array_equal(store.packed, store2.packed)
+
+
+def test_fingerprint_includes_layout_version(tokenizer, monkeypatch):
+    """A cache written under an older packed-word layout must MISS (the
+    fingerprint embeds STORE_LAYOUT_VERSION + word geometry), never load
+    as wrong masks."""
+    from repro.core import mask_store as ms
+    from repro.core.grammars import load_grammar
+    g, _ = load_grammar("calc")
+    fp_now = ms._fingerprint(g, tokenizer)
+    monkeypatch.setattr(ms, "STORE_LAYOUT_VERSION",
+                        ms.STORE_LAYOUT_VERSION + 1)
+    assert ms._fingerprint(g, tokenizer) != fp_now
+
+
+def test_stale_layout_cache_misses_on_disk(tmp_path, tokenizer, monkeypatch):
+    """End-to-end: a store cached under layout N is ignored (rebuilt,
+    fresh file) after the layout version bumps."""
+    import os
+    from repro.core import mask_store as ms
+    from repro.core.grammars import load_grammar
+    g, _ = load_grammar("calc")
+    s1 = ms.build_mask_store(g, tokenizer, cache_dir=str(tmp_path))
+    assert len(os.listdir(tmp_path)) == 1
+    monkeypatch.setattr(ms, "STORE_LAYOUT_VERSION",
+                        ms.STORE_LAYOUT_VERSION + 1)
+    s2 = ms.build_mask_store(g, tokenizer, cache_dir=str(tmp_path))
+    assert not s2.meta["cached"]                 # stale cache missed
+    assert len(os.listdir(tmp_path)) == 2        # republished under new fp
+    np.testing.assert_array_equal(s1.packed, s2.packed)
+
+
+def test_concurrent_multiprocess_cache_publish(tmp_path):
+    """Two processes racing to build + publish the same store must both
+    succeed, leave exactly one readable .npz and no temp litter — the
+    per-process mkstemp + os.replace protocol."""
+    import os
+    import subprocess
+    import sys
+    code = (
+        "import sys; sys.path.insert(0, {src!r})\n"
+        "from repro.core.grammars import load_grammar\n"
+        "from repro.core.mask_store import build_mask_store\n"
+        "from repro.core.tokenizer import ByteTokenizer\n"
+        "g, _ = load_grammar('calc')\n"
+        "s = build_mask_store(g, ByteTokenizer(512), cache_dir={cd!r})\n"
+        "print(s.packed.sum())\n"
+    ).format(src=os.path.join(os.path.dirname(__file__), "..", "src"),
+             cd=str(tmp_path))
+    procs = [subprocess.Popen([sys.executable, "-c", code],
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE)
+             for _ in range(3)]
+    outs = [p.communicate(timeout=300) for p in procs]
+    assert all(p.returncode == 0 for p in procs), outs
+    sums = {o[0].strip() for o in outs}
+    assert len(sums) == 1                        # identical stores
+    files = os.listdir(tmp_path)
+    assert len(files) == 1 and files[0].endswith(".npz"), files
+    # the published file is a complete, loadable npz
+    np.load(os.path.join(tmp_path, files[0]))["packed"]
