@@ -10,9 +10,10 @@ test:              ## tier-1 test suite (same command CI runs)
 bench:             ## paper-table + engine benchmarks (CSV to stdout)
 	PYTHONPATH=src $(PY) benchmarks/run.py
 
-bench-smoke:       ## seconds-scale paged + sharded engine smoke runs (CI gate)
+bench-smoke:       ## seconds-scale paged + sharded + async engine smoke runs (CI gate)
 	PYTHONPATH=src $(PY) -m benchmarks.bench_smoke
 	PYTHONPATH=src $(PY) -m benchmarks.bench_sharded --smoke
+	PYTHONPATH=src $(PY) -m benchmarks.bench_async --smoke
 
 docs-check:        ## fail if src/repro packages are missing from README's module map
 	$(PY) scripts/docs_check.py

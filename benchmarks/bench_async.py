@@ -1,0 +1,138 @@
+"""Async engine + host/device overlap benchmark rows (ISSUE 5).
+
+Two workloads through the persistent async step loop, each measured
+with overlap off and on and ASSERTED token-for-token identical to the
+synchronous engine (the overlap speedup may never buy a different
+stream):
+
+  * `sampled` — the `engine_batched_b16` twin (16 JSON requests,
+    temperature 0.9, B = 16). High-temperature sampling over the
+    over-approximate mask rejects some slot most steps, so the adaptive
+    gate (serving/loop.py::DenseMode) quickly stops speculating —
+    overlap-on must track overlap-off, not lose to it.
+  * `greedy`  — the steady-state structured-output serving case (same
+    requests, greedy). The masked argmax almost always passes the exact
+    oracle, so nearly every speculative forward is consumed and
+    overlap-on shows the throughput win: the device never idles while
+    the host steps the incremental parsers and builds mask rows.
+
+The overlap comparison uses PAIRED INTERLEAVED trials (off, on, off,
+on, ...) and reports the median paired ratio: the effect lives at the
+few-percent level on this substrate — the incremental parsers keep host
+grammar work at ~2-4 ms of a ~45 ms step, so hiding all of it buys a
+few percent here, while the same mechanism hides 10-30% mask-generation
+shares on accelerator-scale vocabularies (the regime the ISSUE targets)
+— and a paired design is how a few-percent effect stays measurable on a
+noisy shared box.
+
+`--smoke` is the seconds-scale CI gate wired into `make bench-smoke`.
+"""
+from __future__ import annotations
+
+import asyncio
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import build_demo, emit
+
+
+def _reqs(n, max_new, method, temperature=0.9):
+    from repro.core.decoding import DecodeConfig
+    from repro.serving.engine import Request
+    return [Request(rid=i, prompt=b"Q: generate. A:", grammar="json",
+                    max_new_tokens=max_new,
+                    decode=DecodeConfig(method=method,
+                                        temperature=temperature),
+                    seed=i) for i in range(n)]
+
+
+def _run_async(engine, reqs):
+    from repro.serving.async_engine import AsyncEngine
+
+    async def go():
+        aeng = AsyncEngine(engine)
+        try:
+            return await aeng.generate(reqs)
+        finally:
+            await aeng.drain()
+    return asyncio.run(go())
+
+
+PAIRS = 5
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def main(smoke: bool = False) -> int:
+    n, max_new, slots = (4, 10, 4) if smoke else (16, 32, 16)
+    pairs = 1 if smoke else PAIRS
+    tag = f"b{slots}"
+    ok = True
+    win = {}
+
+    for wname, method in (("sampled", "sample"), ("greedy", "greedy")):
+        sync_eng, _, _ = build_demo(("json",), slots=slots)
+        sync_eng.generate(_reqs(n, max_new, method))     # warm jit
+        sstates, sstats = sync_eng.generate(_reqs(n, max_new, method))
+        want = [s.token_ids for s in sstates]
+        emit(f"engine_sync_{tag}_{wname}",
+             sstats.wall / max(sstats.tokens, 1) * 1e6,
+             f"tok_s={sstats.tokens_per_sec:.1f};"
+             f"decode_steps={sstats.decode_steps};n={n}")
+        ok = ok and sstats.tokens > 0
+
+        engines = {}
+        for oname, overlap in (("overlap_off", False),
+                               ("overlap_on", True)):
+            engines[oname], _, _ = build_demo(("json",), slots=slots,
+                                              overlap=overlap)
+            _run_async(engines[oname], _reqs(n, max_new, method))  # warm
+        rates = {"overlap_off": [], "overlap_on": []}
+        ident = {"overlap_off": True, "overlap_on": True}
+        stats_of = {}
+        for _ in range(pairs):          # paired, interleaved trials
+            for oname in ("overlap_off", "overlap_on"):
+                states, stats = _run_async(engines[oname],
+                                           _reqs(n, max_new, method))
+                by_rid = {s.req.rid: s.token_ids for s in states}
+                identical = [by_rid[i] for i in range(n)] == want
+                ok = ok and identical
+                ident[oname] = ident[oname] and identical
+                rates[oname].append(stats.tokens_per_sec)
+                stats_of[oname] = stats
+        for oname in ("overlap_off", "overlap_on"):
+            stats = stats_of[oname]
+            tok_s = _median(rates[oname])
+            emit(f"engine_async_{tag}_{wname}_{oname}",
+                 1e6 / max(tok_s, 1e-9),
+                 f"tok_s={tok_s:.1f};"
+                 f"decode_steps={stats.decode_steps};"
+                 f"overlap_hits={stats.overlap_hits}/"
+                 f"{stats.overlap_dispatched};"
+                 f"identical_to_sync={ident[oname]};"   # AND over trials
+                 f"pairs={pairs};n={n}")
+        speedup = _median([t / max(f, 1e-9) for f, t in
+                           zip(rates["overlap_off"],
+                               rates["overlap_on"])])
+        win[wname] = speedup
+        on = stats_of["overlap_on"]
+        emit(f"engine_async_{tag}_{wname}_overlap_speedup", speedup * 100,
+             f"overlap_on_vs_off={speedup:.2f}x_paired_median;"
+             f"hit_rate={on.overlap_hit_rate:.2f}")
+
+    if smoke:
+        print(f"bench-async-smoke: {'OK' if ok else 'FAILED'} "
+              f"(identity {'held' if ok else 'VIOLATED'}; overlap "
+              f"greedy {win.get('greedy', 0):.2f}x, sampled "
+              f"{win.get('sampled', 0):.2f}x)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(smoke="--smoke" in sys.argv[1:]))

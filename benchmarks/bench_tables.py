@@ -333,6 +333,16 @@ def paged_engine_sharedprefix(n=32, max_new=24):
              f"{kv_cols(st)};n={n}")
 
 
+def async_engine_throughput():
+    """Async/streaming engine rows: engine_async_b16_{sampled,greedy}_
+    overlap_{off,on} + sync twins (benchmarks/bench_async.py) — the
+    persistent step loop vs the sync engine, host/device overlap off
+    and on, identity asserted per run."""
+    from benchmarks import bench_async
+    if bench_async.main(smoke=False) != 0:
+        raise RuntimeError("bench_async reported identity violation")
+
+
 def sharded_engine_throughput():
     """Tensor-parallel (vocab-sharded) engine rows: engine_sharded_m1 /
     _m2 / _m4 + an unsharded baseline (docs/sharding.md), each asserting
@@ -358,4 +368,5 @@ def sharded_engine_throughput():
 ALL = [table1_json, table2_sql, table3_gpl, table5_mask_store,
        fig10_incremental, mask_union_micro, opportunistic_ablation,
        batched_engine_throughput, speculative_engine_throughput,
-       paged_engine_sharedprefix, sharded_engine_throughput]
+       paged_engine_sharedprefix, async_engine_throughput,
+       sharded_engine_throughput]

@@ -25,17 +25,35 @@ from .parser import IncrementalParser, ParseError
 from .tokenizer import ByteTokenizer, EOS_ID
 
 
-# uniform accept-sequence cap: the batched engine's [B, A] row matrix uses
-# one A for every slot, so the default lives here rather than per-call
+# base accept-sequence width: the batched engine's [B, A] row matrix uses
+# one A for every slot, so the default lives here rather than per-call.
+# This is a PADDING bucket, never a cap — steps whose accept set overflows
+# it get a wider (power-of-two multiple) row vector, so the mask is always
+# the union of EVERY accept sequence (paper soundness; a silent cap here
+# over-constrains the mask and bans grammar-valid tokens).
 MAX_ACCEPT = 48
+
+
+def accept_width(n_rows: int, base: int = MAX_ACCEPT) -> int:
+    """Smallest power-of-two multiple of `base` holding n_rows rows.
+
+    Row vectors/matrices are padded to these buckets so the jitted fused
+    mask+sample call specializes once per bucket (wide accept sets are
+    rare) instead of once per distinct row count."""
+    a = max(1, int(base))
+    while a < n_rows:
+        a *= 2
+    return a
 
 
 @dataclass
 class StepMask:
     """Host-side result for one sequence at one decoding step."""
-    rows: np.ndarray          # [max_accept] int32 row ids into the store, -1 pad
+    rows: np.ndarray          # [>= max_accept] int32 store row ids, -1 pad
+                              # (width grows in accept_width buckets; the
+                              # valid prefix covers ALL accept sequences)
     eos_allowed: bool
-    num_sequences: int        # |A| before dedup/capping (diagnostics)
+    num_sequences: int        # |A| before dedup (diagnostics)
 
 
 class GrammarConstraint:
@@ -75,9 +93,9 @@ class GrammarConstraint:
             if rid not in seen:
                 seen.add(rid)
                 rows.append(rid)
-        arr = np.full(self.max_accept, -1, dtype=np.int32)
-        n = min(len(rows), self.max_accept)
-        arr[:n] = rows[:n]
+        arr = np.full(accept_width(len(rows), self.max_accept), -1,
+                      dtype=np.int32)
+        arr[:len(rows)] = rows
         return StepMask(rows=arr, eos_allowed=res.eos_allowed,
                         num_sequences=len(res.accept_sequences))
 
@@ -96,21 +114,25 @@ class GrammarConstraint:
         grammars; a slot's rows index its grammar's block).
 
         Returns (rows [B, A] int32 with -1 pad, eos_allowed [B] bool,
-        num_sequences [B] int32).
+        num_sequences [B] int32). `max_accept` is the BASE width of A:
+        when some slot's accept set overflows it, A grows to the next
+        accept_width bucket so no row is ever dropped (soundness).
         """
         B = len(constraints)
-        rows = np.full((B, max_accept), -1, dtype=np.int32)
+        sms = [gc.step_rows(texts[b]) if gc is not None else None
+               for b, gc in enumerate(constraints)]
+        A = max([max_accept] + [sm.rows.shape[0] for sm in sms
+                                if sm is not None])
+        rows = np.full((B, A), -1, dtype=np.int32)
         eos = np.zeros(B, dtype=bool)
         nseq = np.zeros(B, dtype=np.int32)
-        for b, gc in enumerate(constraints):
-            if gc is None:
+        for b, sm in enumerate(sms):
+            if sm is None:
                 continue
-            sm = gc.step_rows(texts[b])
-            n = min(max_accept, sm.rows.shape[0])
-            r = sm.rows[:n]
+            r = sm.rows
             if row_offsets is not None:
                 r = np.where(r >= 0, r + int(row_offsets[b]), r)
-            rows[b, :n] = r
+            rows[b, :r.shape[0]] = r
             eos[b] = sm.eos_allowed
             nseq[b] = sm.num_sequences
         return rows, eos, nseq
@@ -192,6 +214,13 @@ class GrammarConstraint:
         except (ParseError, LexError):
             return False
         if not res.remainder:
+            return True
+        if res.eos_allowed:
+            # the extended text is itself a complete sentence (exact:
+            # eos_allowed shifts the final token and checks acceptance).
+            # Without this, a grammar with NO ignore terminals rejected
+            # the token that exactly completes the sentence — the accept
+            # sequences only describe CONTINUATIONS of the remainder
             return True
         for seq in res.accept_sequences:
             dfa = self.grammar.terminals[seq[0]].dfa

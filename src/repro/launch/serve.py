@@ -15,6 +15,18 @@ forced continuations + draft-verify spans; see docs/speculation.md);
 `--literal-jump` additionally jumps grammar-forced byte literals,
 re-tokenized canonically (longer jumps, byte-identical grammar
 guarantees, token stream may differ from the plain engine's).
+
+`--serve` starts the persistent streaming HTTP endpoint instead of a
+batch run (docs/serving.md): one background step loop with live
+admission, per-token NDJSON streaming, cancellation on disconnect and
+per-request deadlines:
+
+  python -m repro.launch.serve --serve --port 8400 --grammar json
+  curl -N -d '{"prompt": "say:", "grammar": "json"}' \
+      http://127.0.0.1:8400/generate
+
+`--no-overlap` disables the host/device overlap in the dense decode
+loop (on by default; serving/loop.py).
 """
 from __future__ import annotations
 
@@ -36,7 +48,7 @@ def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
                  max_len=512, opportunistic=False, checkpoint=None,
                  seed=0, slots=4, paged=False, page_size=16,
                  num_pages=None, prefill_chunk=32, mesh=None,
-                 trunk_shard=False):
+                 trunk_shard=False, overlap=True):
     """mesh: None | int (model-parallel degree; 1 = single device) | a
     prebuilt jax Mesh with a "model" axis. See docs/sharding.md."""
     cfg = get_config(arch)
@@ -63,7 +75,7 @@ def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
                   opportunistic=opportunistic, slots=slots, paged=paged,
                   page_size=page_size, num_pages=num_pages,
                   prefill_chunk=prefill_chunk, mesh=mesh,
-                  trunk_shard=trunk_shard), bundles, tok
+                  trunk_shard=trunk_shard, overlap=overlap), bundles, tok
 
 
 def main(argv=None):
@@ -114,6 +126,15 @@ def main(argv=None):
                     help="max forced tokens committed per jump")
     ap.add_argument("--proposer", default="sam", choices=("sam", "ngram"),
                     help="draft proposer (suffix automaton | n-gram)")
+    ap.add_argument("--serve", action="store_true",
+                    help="start the persistent streaming HTTP endpoint "
+                         "(POST /generate NDJSON stream, GET /healthz; "
+                         "docs/serving.md) instead of a batch run")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8400)
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable host/device overlap in the dense "
+                         "decode loop (serving/loop.py)")
     args = ap.parse_args(argv)
 
     engine, bundles, tok = build_engine(
@@ -121,7 +142,26 @@ def main(argv=None):
         opportunistic=args.opportunistic, checkpoint=args.checkpoint,
         slots=args.slots, paged=args.paged, page_size=args.page_size,
         num_pages=args.num_pages, mesh=args.mesh,
-        trunk_shard=args.trunk_shard)
+        trunk_shard=args.trunk_shard, overlap=not args.no_overlap)
+
+    if args.serve:
+        import asyncio
+
+        from repro.serving.async_engine import AsyncEngine
+        from repro.serving.server import run_server
+        spec = None
+        if args.speculative:
+            from repro.spec import SpecConfig
+            spec = SpecConfig(literal_jump=args.literal_jump,
+                              draft_k=args.draft_k, max_jump=args.max_jump,
+                              proposer=args.proposer)
+        aeng = AsyncEngine(engine, spec=spec, verbose=True)
+        try:
+            asyncio.run(run_server(aeng, host=args.host, port=args.port))
+        except KeyboardInterrupt:
+            pass
+        return
+
     dc = DecodeConfig(method="greedy" if args.greedy else "sample",
                       temperature=args.temperature)
     reqs = [Request(rid=i, prompt=args.prompt.encode(),

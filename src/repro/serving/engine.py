@@ -25,6 +25,15 @@ The engine is built around **continuous batching** over a fixed pool of
     admitted immediately (no round-robin sweep), so the pool stays full
     under load.
 
+The per-step bodies of every mode (dense / paged / speculative) live on
+ONE shared step-loop core, `serving/loop.py` — the `generate*` entry
+points here drive that loop to completion over a fixed request list,
+and `serving/async_engine.py` drives the same loop persistently with
+live admission, streaming, cancellation and deadlines (docs/serving.md).
+This module keeps the engine's device plumbing (jitted decode / fused
+mask+sample / paged feed builders), the admission and selection
+machinery the modes call into, and the request/stats dataclasses.
+
 `generate_sequential` keeps the original one-request-at-a-time stepping
 path for comparison benchmarks (benchmarks/bench_tables.py::
 batched_engine_throughput) and as an oracle for the batched scheduler.
@@ -32,7 +41,6 @@ batched_engine_throughput) and as an oracle for the batched scheduler.
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -52,8 +60,7 @@ from repro.distributed.sharding import (serving_cache_shardings,
 from repro.kernels.masked_logits.ops import (apply_grammar_mask,
                                              apply_grammar_mask_span)
 from repro.serving.kvpool import PagedAllocator, PoolExhausted
-from repro.spec.scheduler import (SPAN_BUCKETS, SlotPhase, SlotPlan,
-                                  SpecConfig, SpecScheduler)
+from repro.spec.scheduler import SPAN_BUCKETS, SlotPhase, SpecConfig
 
 # span widths the paged feed path jits against (chunked prefill drains
 # prompt backlog through these; decode-only steps ride the width-1 bucket
@@ -69,6 +76,9 @@ class Request:
     max_new_tokens: int = 128
     decode: DecodeConfig = field(default_factory=DecodeConfig)
     seed: int = 0
+    deadline: Optional[float] = None        # seconds from admission; on
+                                            # expiry the request finishes
+                                            # with reason "deadline"
 
 
 @dataclass
@@ -97,6 +107,10 @@ class RequestState:
     write_from: int = 0         # first position this slot may write into
                                 # its pages (below = shared prefix pages)
     kv_pages: int = 0           # pages held when the request finished
+    # --- async lifecycle (serving/loop.py) ---
+    cancelled: bool = False     # set from any thread; the loop frees the
+                                # slot (and its KV pages) next step
+    deadline_at: Optional[float] = None     # perf_counter() expiry
 
 
 @dataclass
@@ -107,9 +121,17 @@ class EngineStats:
     mask_time: float = 0.0
     mask_computations: int = 0
     opportunistic_hits: int = 0
-    decode_steps: int = 0                   # batched [B,V] device steps
+    decode_steps: int = 0                   # CONSUMED batched [B,V] device
+                                            # steps (one per engine step; a
+                                            # discarded speculative forward
+                                            # is extra device work counted
+                                            # as overlap_dispatched -
+                                            # overlap_hits, not here)
     batch_slots: int = 0
     mesh_devices: int = 1                   # tensor-parallel mesh size
+    # --- host/device overlap (serving/loop.py::DenseMode) ---
+    overlap_dispatched: int = 0             # speculative forwards launched
+    overlap_hits: int = 0                   # ...that the next step consumed
     # --- speculation (generate_speculative) ---
     jump_tokens: int = 0                    # emitted with zero model calls
     draft_proposed: int = 0
@@ -135,6 +157,29 @@ class EngineStats:
     def acceptance_rate(self):
         return self.draft_accepted / max(self.draft_proposed, 1)
 
+    @property
+    def overlap_hit_rate(self):
+        return self.overlap_hits / max(self.overlap_dispatched, 1)
+
+
+@dataclass
+class _SelectCtx:
+    """In-flight state between `_select_dispatch` and `_select_resolve`.
+
+    `ids` is the FIRST-round sampled ids still on device — the overlap
+    path (serving/loop.py::DenseMode) feeds it straight into the next
+    forward. `clean` ends True iff the host changed nothing: every
+    pending slot committed exactly its first-round device id."""
+    committed: dict
+    pending: set
+    ctr: dict
+    salts: np.ndarray
+    masked: object = None
+    ids: object = None
+    ok: object = None
+    need_mask: object = None
+    clean: bool = True
+
 
 class Engine:
     def __init__(self, model, params, tokenizer: ByteTokenizer,
@@ -143,7 +188,7 @@ class Engine:
                  slots: int = 4, paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None, prefill_chunk: int = 32,
                  attn_backend: str = "auto", mesh=None,
-                 trunk_shard: bool = False):
+                 trunk_shard: bool = False, overlap: bool = True):
         """grammar_bundles: name -> (grammar, table, store).
         slots: decode-pool width B of the batched scheduler.
         paged: serve KV through the paged pool (docs/kv_paging.md) —
@@ -159,7 +204,12 @@ class Engine:
         single-device engine (docs/sharding.md).
         trunk_shard: additionally shard the trunk megatron-style
         (param_spec/cache_shardings) — TPU-scale memory relief that
-        gives up bit-exactness vs the single-device engine."""
+        gives up bit-exactness vs the single-device engine.
+        overlap: host/device overlap in the dense step loop — dispatch
+        step k+1's forward with the on-device sampled ids while the
+        host validates step k and builds step k+1's mask rows
+        (serving/loop.py). Token-for-token identical; auto-disabled
+        for recurrent archs and under opportunistic masking."""
         self.model = model
         self.params = params
         self.tok = tokenizer
@@ -176,6 +226,7 @@ class Engine:
         self.attn_backend = attn_backend
         self.mesh = mesh
         self.trunk_shard = bool(trunk_shard)
+        self.overlap = bool(overlap)
         if mesh is not None:
             if "model" not in mesh.axis_names:
                 raise ValueError(
@@ -442,17 +493,13 @@ class Engine:
             & 0xFFFFFFFF)
         return int(rng.choice(valid, p=p))
 
-    def _select_tokens(self, logits, slot_state, pending: set,
-                       seeds, greedy, temp, top_k, top_p):
-        """Shared per-step token selection for the batched engines (the
-        dense generate() and the paged feed loop run this IDENTICAL code
-        on a [B, V] logits matrix — equivalence by construction): the
-        opportunistic fast path, one fused mask+sample device call, the
-        on-device demote/resample rejection wrapper, and the exact-filter
-        fallback. `pending` names the slots that need a token this step;
-        rows outside it are ignored. Returns (committed: {slot: token},
-        counters). Slots whose mask dead-ends are marked done
-        ("mask_exhausted") and excluded from `committed`."""
+    def _select_dispatch(self, logits, slot_state, pending: set,
+                         seeds, greedy, temp, top_k, top_p):
+        """Phase A of per-step token selection: the opportunistic fast
+        path (host sync) and the fused mask+sample DISPATCH — no sync of
+        the sampled ids. Returns a `_SelectCtx` whose `.ids` device array
+        is what the overlap path feeds into the next forward before the
+        host ever sees it. `_select_resolve` is phase B."""
         B = self.slots
         committed: dict[int, int] = {}
         pending = set(pending)
@@ -460,6 +507,8 @@ class Engine:
                "opportunistic_hits": 0}
         salts = np.array([slot_state[b].steps if slot_state[b] else 0
                           for b in range(B)], np.uint32)
+        ctx = _SelectCtx(committed=committed, pending=pending, ctr=ctr,
+                         salts=salts)
 
         # ---- opportunistic fast path (whole batch at once) ----------
         if self.opportunistic and any(
@@ -469,6 +518,8 @@ class Engine:
                 logits, jnp.asarray(keys), jnp.asarray(greedy),
                 jnp.asarray(temp), jnp.asarray(top_k),
                 jnp.asarray(top_p)))
+            ctx.clean = False       # committed ids came from the
+                                    # unmasked proposal stream
             for b in list(pending):
                 st = slot_state[b]
                 t = int(prop[b])
@@ -482,10 +533,10 @@ class Engine:
                     pending.discard(b)
 
         if not pending:
-            return committed, ctr
+            return ctx
 
-        # ---- fused mask + batched sample for the rest ---------------
-        t_mask = time.time()
+        # ---- fused mask + batched sample dispatch -------------------
+        t_mask = time.perf_counter()
         cons = [slot_state[b].constraint
                 if (b in pending and slot_state[b] is not None)
                 else None for b in range(B)]
@@ -499,20 +550,39 @@ class Engine:
             cons, texts, max_accept=MAX_ACCEPT, row_offsets=offs)
         need_mask = np.array([c is not None for c in cons], bool)
         keys = self._step_keys(seeds, salts, 1)
-        masked, ids, ok = self._mask_sample(
+        ctx.masked, ctx.ids, ctx.ok = self._mask_sample(
             logits, self._store_cat, jnp.asarray(rows),
             jnp.asarray(eos), jnp.asarray(need_mask),
             jnp.asarray(greedy), jnp.asarray(temp),
             jnp.asarray(top_k), jnp.asarray(top_p),
             jnp.asarray(keys))
-        ids_h, ok_h = np.asarray(ids), np.asarray(ok)
-        n_masked = int(need_mask.sum())
-        ctr["mask_computations"] += n_masked
-        elapsed = time.time() - t_mask
-        ctr["mask_time"] += elapsed
-        for b in np.where(need_mask)[0]:
+        ctx.need_mask = need_mask
+        ctr["mask_computations"] += int(need_mask.sum())
+        ctr["mask_time"] += time.perf_counter() - t_mask
+        return ctx
+
+    def _select_resolve(self, ctx, slot_state,
+                        seeds, greedy, temp, top_k, top_p):
+        """Phase B: sync the sampled ids, verify against the exact
+        oracle, demote+resample on device, exact-filter fallback.
+        Returns (committed, counters); `ctx.clean` stays True only when
+        every pending slot committed its FIRST-round device id — the
+        overlap path's speculative forward is valid exactly then."""
+        B = self.slots
+        committed, pending, ctr = ctx.committed, ctx.pending, ctx.ctr
+        salts = ctx.salts
+        if ctx.ids is None:
+            return committed, ctr
+        t_mask = time.perf_counter()
+        masked = ctx.masked
+        ids_h, ok_h = np.asarray(ctx.ids), np.asarray(ctx.ok)
+        n_masked = int(ctx.need_mask.sum())
+        elapsed = (time.perf_counter() - t_mask) + \
+            ctr["mask_time"]        # rows build + dispatch + sync
+        for b in np.where(ctx.need_mask)[0]:
             slot_state[b].mask_computations += 1
             slot_state[b].mask_time += elapsed / max(n_masked, 1)
+        ctr["mask_time"] = elapsed
 
         # rejection wrapper: the α<=1 mask is sound but over-
         # approximate; verify with the exact oracle, demote invalid
@@ -528,6 +598,7 @@ class Engine:
                     pending.discard(b)
                     continue
                 if not ok_h[b]:
+                    ctx.clean = False
                     continue        # mask exhausted -> fallback
                 t = int(ids_h[b])
                 if t == EOS_ID or st.constraint.is_valid_extension(
@@ -539,6 +610,7 @@ class Engine:
                     ban[b] = t
             if not redo.any():
                 break
+            ctx.clean = False
             keys = self._step_keys(seeds, salts, attempt)
             masked, ids, ok = self._resample(
                 masked, jnp.asarray(ban), jnp.asarray(redo),
@@ -549,6 +621,7 @@ class Engine:
 
         # exact-filter fallback for slots that never validated
         for b in sorted(pending):
+            ctx.clean = False
             st = slot_state[b]
             nxt = self._fallback_exact(st, np.asarray(masked[b]), st.steps)
             if nxt is None:
@@ -561,6 +634,22 @@ class Engine:
             pending.discard(b)
         return committed, ctr
 
+    def _select_tokens(self, logits, slot_state, pending: set,
+                       seeds, greedy, temp, top_k, top_p):
+        """Shared per-step token selection for the batched engines (the
+        dense loop and the paged feed loop run this IDENTICAL code on a
+        [B, V] logits matrix — equivalence by construction): the
+        opportunistic fast path, one fused mask+sample device call, the
+        on-device demote/resample rejection wrapper, and the exact-filter
+        fallback. `pending` names the slots that need a token this step;
+        rows outside it are ignored. Returns (committed: {slot: token},
+        counters). Slots whose mask dead-ends are marked done
+        ("mask_exhausted") and excluded from `committed`."""
+        ctx = self._select_dispatch(logits, slot_state, pending, seeds,
+                                    greedy, temp, top_k, top_p)
+        return self._select_resolve(ctx, slot_state, seeds, greedy, temp,
+                                    top_k, top_p)
+
     def generate(self, requests: list[Request], verbose: bool = False):
         """Continuous batching over a fixed pool of `self.slots` slots.
 
@@ -568,101 +657,20 @@ class Engine:
         fused mask+sample call (constrained and unconstrained slots mixed
         via the `constrained` flag), and only [B]-sized transfers back to
         the host. Finished slots are refilled from the queue immediately.
+        With `overlap` (the default) the next step's forward is
+        dispatched with the on-device sampled ids before the host syncs,
+        hiding the host-side grammar work behind device compute.
 
         In paged mode the same selection machinery runs behind the paged
-        feed loop (`_generate_paged`): chunked prefill, prefix sharing
-        and page-table attention replace the dense per-slot caches."""
-        if self.paged:
-            return self._generate_paged(requests, verbose)
-        t0 = time.time()
-        B = self.slots
-        queue = deque(requests)
-        all_states: list[RequestState] = []
-        caches = self._place_caches(
-            self.model.init_decode_caches(B, self.max_len))
-        cur_tok = np.zeros(B, np.int32)
-        feed_pos = np.zeros(B, np.int32)
-        slot_state: list[Optional[RequestState]] = [None] * B
-        seeds = np.zeros(B, np.uint32)
-        constrained = np.zeros(B, bool)
-        greedy = np.ones(B, bool)
-        temp = np.ones(B, np.float32)
-        top_k = np.zeros(B, np.int32)
-        top_p = np.ones(B, np.float32)
-        step = 0
-        decode_steps = 0
-        mask_time = 0.0
-        mask_computations = 0
-        opportunistic_hits = 0
+        feed loop: chunked prefill, prefix sharing and page-table
+        attention replace the dense per-slot caches.
 
-        def admit(b: int):
-            nonlocal caches
-            req = queue.popleft()
-            st, caches = self._admit_common(req, b, caches)
-            slot_state[b] = st
-            cur_tok[b] = st.token_ids[-1]
-            feed_pos[b] = st.pos - 1
-            seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
-            constrained[b] = st.constraint is not None
-            g, t, k, p = DecodeConfig.batch_arrays([req.decode])
-            greedy[b], temp[b], top_k[b], top_p[b] = g[0], t[0], k[0], p[0]
-            all_states.append(st)
-
-        def finish(b: int):
-            st = slot_state[b]
-            slot_state[b] = None
-            constrained[b] = False
-            cur_tok[b] = 0
-            feed_pos[b] = 0
-            if verbose:
-                print(f"[req {st.req.rid}] {st.finish_reason}: "
-                      f"{st.generated[:70]!r}")
-
-        while queue or any(s is not None for s in slot_state):
-            for b in range(B):
-                if slot_state[b] is None and queue:
-                    admit(b)
-            active = [b for b in range(B) if slot_state[b] is not None]
-            step += 1
-
-            # ---- ONE [B, V] decode step for the whole pool --------------
-            logits, caches = self._decode(
-                self.params, caches, jnp.asarray(cur_tok),
-                jnp.asarray(feed_pos))
-            decode_steps += 1
-            for b in active:
-                slot_state[b].steps += 1
-
-            committed, ctr = self._select_tokens(
-                logits, slot_state, set(active), seeds, greedy, temp,
-                top_k, top_p)
-            mask_time += ctr["mask_time"]
-            mask_computations += ctr["mask_computations"]
-            opportunistic_hits += ctr["opportunistic_hits"]
-
-            # ---- commit + immediate slot replacement --------------------
-            for b, t in committed.items():
-                st = slot_state[b]
-                self._commit(st, t)
-                cur_tok[b] = t
-                feed_pos[b] = st.pos - 1
-            for b in active:
-                st = slot_state[b]
-                if st is not None and st.done:
-                    finish(b)
-
-        stats = EngineStats(
-            requests=len(all_states),
-            tokens=sum(s.steps for s in all_states),
-            wall=time.time() - t0,
-            mask_time=mask_time,
-            mask_computations=mask_computations,
-            opportunistic_hits=opportunistic_hits,
-            decode_steps=decode_steps,
-            batch_slots=B,
-            mesh_devices=self.mesh.size if self.mesh else 1,
-        )
-        return all_states, stats
+        The step body lives in serving/loop.py (one shared loop for the
+        sync and async engines, all modes)."""
+        from repro.serving.loop import ListSource, StepLoop, make_mode
+        loop = StepLoop(self, make_mode(self), ListSource(requests),
+                        verbose=verbose)
+        return loop.run()
 
     # ============================= paged path =============================
     # Paged KV serving (docs/kv_paging.md): the dense per-slot decode
@@ -699,12 +707,11 @@ class Engine:
         st.write_from = plan.write_from
         return st, plan
 
-    def _paged_can_admit(self, alloc, queue, ids_cache) -> bool:
-        """Admission gate: only admit the head request when its whole
-        prompt's pages can be reserved (prefix hits just reduce the
-        need). Its token ids are computed once and cached by rid, so a
-        request blocked for many steps isn't re-tokenized each step."""
-        req = queue[0]
+    def _paged_can_admit(self, alloc, req, ids_cache) -> bool:
+        """Admission gate: only admit a request when its whole prompt's
+        pages can be reserved (prefix hits just reduce the need). Its
+        token ids are computed once and cached by rid, so a request
+        blocked for many steps isn't re-tokenized each step."""
         ids = ids_cache.get(req.rid)
         if ids is None:
             ids = ids_cache[req.rid] = self._request_ids(req)
@@ -759,154 +766,6 @@ class Engine:
         stats.kv_evictions = alloc.evictions
         stats.kv_cow_copies = alloc.cow_copies
         return stats
-
-    def _generate_paged(self, requests: list[Request],
-                        verbose: bool = False):
-        """generate() over the paged KV subsystem. Per engine step: ONE
-        [B, S] span feed through the page tables (S = 1 when every slot
-        is decoding; a feed bucket wide enough for the deepest prefill
-        backlog otherwise), then the IDENTICAL selection machinery as
-        the dense engine on the [B, V] selection-position logits —
-        output is token-for-token the dense engine's."""
-        t0 = time.time()
-        B = self.slots
-        alloc, caches = self._paged_setup(B)
-        queue = deque(requests)
-        all_states: list[RequestState] = []
-        feed_pos = np.zeros(B, np.int32)
-        slot_state: list[Optional[RequestState]] = [None] * B
-        waiting = np.zeros(B, bool)
-        seeds = np.zeros(B, np.uint32)
-        greedy = np.ones(B, bool)
-        temp = np.ones(B, np.float32)
-        top_k = np.zeros(B, np.int32)
-        top_p = np.ones(B, np.float32)
-        decode_steps = 0
-        mask_time = 0.0
-        mask_computations = 0
-        opportunistic_hits = 0
-        stall = 0
-        ids_cache: dict[int, list] = {}
-
-        def admit(b: int):
-            req = queue.popleft()
-            st, plan = self._admit_paged(req, b, alloc,
-                                         ids_cache.pop(req.rid, None))
-            slot_state[b] = st
-            feed_pos[b] = plan.feed_from
-            seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
-            g, t, k, p = DecodeConfig.batch_arrays([req.decode])
-            greedy[b], temp[b], top_k[b], top_p[b] = g[0], t[0], k[0], p[0]
-            waiting[b] = True   # shared pages may still be filling
-            if not self._paged_wake(alloc, b, st, feed_pos, waiting):
-                st.phase = SlotPhase.PREFILLING.value
-            all_states.append(st)
-
-        def finish(b: int):
-            st = slot_state[b]
-            st.kv_pages = len(alloc.tables[b])
-            alloc.release(b)
-            slot_state[b] = None
-            waiting[b] = False
-            feed_pos[b] = 0
-            if verbose:
-                print(f"[req {st.req.rid}] {st.finish_reason}: "
-                      f"{st.generated[:70]!r}")
-
-        while queue or any(s is not None for s in slot_state):
-            for b in range(B):
-                if slot_state[b] is None and queue:
-                    if not self._paged_can_admit(alloc, queue, ids_cache):
-                        break
-                    admit(b)
-            active = [b for b in range(B)
-                      if slot_state[b] is not None]
-            if not active:
-                if queue:
-                    raise PoolExhausted(
-                        "KV pool too small for the next request's prompt")
-                break
-
-            # ---- wake waiters whose shared prefix finished filling ------
-            live = [b for b in active
-                    if self._paged_wake(alloc, b, slot_state[b],
-                                        feed_pos, waiting)]
-            if not live:
-                stall += 1
-                if stall > 4 * B + 16:
-                    raise RuntimeError("paged scheduler stalled")
-                continue
-            stall = 0
-
-            # ---- ONE [B, S] paged span feed for the whole pool ----------
-            pend = {b: slot_state[b].pos - int(feed_pos[b]) for b in live}
-            S = self._feed_width(list(pend.values()))
-            tokens = np.zeros((B, S), np.int32)
-            fmask = np.zeros((B, S), bool)
-            sel = np.full(B, -1, np.int32)
-            feed_n: dict[int, int] = {}
-            for b in live:
-                st = slot_state[b]
-                fs = int(feed_pos[b])
-                k = min(pend[b], S)
-                new_caches = self._prepare_feed(alloc, caches, b, st,
-                                                fs, k)
-                if new_caches is None:
-                    continue                     # kv_oom: no feed
-                caches = new_caches
-                if pend[b] <= S:
-                    sel[b] = k - 1               # selection this step
-                tokens[b, :k] = st.token_ids[fs:fs + k]
-                for i in range(k):
-                    fmask[b, i] = (fs + i) >= st.write_from
-                feed_n[b] = k
-            live = [b for b in live if b in feed_n]
-            if live:
-                page_tab = alloc.table_rows(np)
-                logits, caches = self._span_feed_paged(
-                    self.params, caches, jnp.asarray(tokens),
-                    jnp.asarray(feed_pos), jnp.asarray(fmask),
-                    jnp.asarray(page_tab), jnp.asarray(sel))
-                decode_steps += 1
-                for b in live:
-                    st = slot_state[b]
-                    alloc.note_fill(b, min(int(feed_pos[b]) + feed_n[b],
-                                           st.prompt_len))
-                    if sel[b] < 0:               # chunked prefill drain
-                        feed_pos[b] += feed_n[b]
-                        st.phase = SlotPhase.PREFILLING.value
-                selecting = [b for b in live if sel[b] >= 0]
-                for b in selecting:
-                    slot_state[b].steps += 1
-                    slot_state[b].phase = SlotPhase.DECODING.value
-                if selecting:
-                    committed, ctr = self._select_tokens(
-                        logits, slot_state, set(selecting), seeds,
-                        greedy, temp, top_k, top_p)
-                    mask_time += ctr["mask_time"]
-                    mask_computations += ctr["mask_computations"]
-                    opportunistic_hits += ctr["opportunistic_hits"]
-                    for b, t in committed.items():
-                        st = slot_state[b]
-                        self._commit(st, t)
-                        feed_pos[b] = st.pos - 1
-            for b in active:
-                st = slot_state[b]
-                if st is not None and st.done:
-                    finish(b)
-
-        stats = EngineStats(
-            requests=len(all_states),
-            tokens=sum(s.steps for s in all_states),
-            wall=time.time() - t0,
-            mask_time=mask_time,
-            mask_computations=mask_computations,
-            opportunistic_hits=opportunistic_hits,
-            decode_steps=decode_steps,
-            batch_slots=B,
-            mesh_devices=self.mesh.size if self.mesh else 1,
-        )
-        return all_states, self._kv_stats(stats, alloc)
 
     # ========================== speculative path ==========================
     # Grammar-aware speculative decoding on top of the batched pool:
@@ -976,13 +835,20 @@ class Engine:
                 break
         return best
 
-    def _span_keys(self, seeds: np.ndarray, S: int, step: int) -> np.ndarray:
+    def _span_keys(self, seeds: np.ndarray,
+                   salts: np.ndarray, S: int) -> np.ndarray:
         """[B, S, 2] uint32 threefry key data: one counter-mode stream
-        per (slot, span position). Greedy rows ignore keys."""
+        per (slot, span position). `salts` are PER-SLOT step counters
+        (st.steps), like `_step_keys` — a slot's sample stream depends
+        only on its own progress, never on the loop-global step count,
+        so async admission timing cannot change sampled speculative
+        streams (a slot commits >= 1 token per selecting span, so
+        consecutive spans' salt<<6 windows never collide for S <= 64).
+        Greedy rows ignore keys."""
         B = seeds.shape[0]
         k = np.empty((B, S, 2), np.uint32)
         k[:, :, 0] = seeds[:, None]
-        k[:, :, 1] = (np.uint32((step << 6) & 0xFFFFFFFF)
+        k[:, :, 1] = ((salts.astype(np.uint32)[:, None] << np.uint32(6))
                       + np.arange(S, dtype=np.uint32)[None, :])
         return k
 
@@ -1000,302 +866,15 @@ class Engine:
         and the host accepts each slot's longest matching draft prefix
         plus a bonus token. Slots with nothing to speculate ride the same
         span at width 1 — identical cost to generate()'s step.
+
+        The step body lives in serving/loop.py::SpecMode (dense or
+        paged, on the same shared loop as every other mode).
         """
-        spec = spec or SpecConfig()
-        if not self.model.supports_span_decode:
-            raise ValueError(
-                "speculative decoding needs position-addressed decode "
-                "caches (attn/moe layer kinds); this arch has recurrent "
-                "or side-input state")
-        t0 = time.time()
-        B = self.slots
-        sched = SpecScheduler(spec, self.tok)
-        queue = deque(requests)
-        all_states: list[RequestState] = []
-        if self.paged:
-            # paged KV: prompt prefill becomes feed BACKLOG drained by
-            # the same span steps that replay jumps — chunked prefill
-            # for free — and shared prompt prefixes attach to existing
-            # pages instead of re-prefilling (docs/kv_paging.md)
-            alloc, caches = self._paged_setup(B)
-        else:
-            alloc = None
-            caches = self._place_caches(
-                self.model.init_decode_caches(B, self.max_len))
-        # the feed cursor: slot b's tokens at positions < feed_pos[b] are
-        # in the decode caches; token_ids[feed_pos[b]:pos] are committed
-        # but pending feed (cur-token + jump backlog)
-        feed_pos = np.zeros(B, np.int32)
-        slot_state: list[Optional[RequestState]] = [None] * B
-        waiting = np.zeros(B, bool)
-        stall = 0
-        ids_cache: dict[int, list] = {}
-        seeds = np.zeros(B, np.uint32)
-        greedy = np.ones(B, bool)
-        temp = np.ones(B, np.float32)
-        top_k = np.zeros(B, np.int32)
-        top_p = np.ones(B, np.float32)
-        step = 0
-        decode_steps = 0
-        plan_time = 0.0
-        mask_time = 0.0
-        mask_computations = 0
-        jump_tokens = 0
-        draft_proposed = 0
-        draft_accepted = 0
+        from repro.serving.loop import ListSource, SpecMode, StepLoop
+        loop = StepLoop(self, SpecMode(self, spec), ListSource(requests),
+                        verbose=verbose)
+        return loop.run()
 
-        def admit(b: int):
-            nonlocal caches
-            req = queue.popleft()
-            if self.paged:
-                st, plan = self._admit_paged(req, b, alloc,
-                                             ids_cache.pop(req.rid, None))
-                slot_state[b] = st
-                feed_pos[b] = plan.feed_from
-                waiting[b] = True   # shared pages may still be filling
-                if not self._paged_wake(alloc, b, st, feed_pos, waiting):
-                    st.phase = SlotPhase.PREFILLING.value
-            else:
-                st, caches = self._admit_common(req, b, caches)
-                slot_state[b] = st
-                feed_pos[b] = st.pos - 1
-            seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
-            g, t, k, p = DecodeConfig.batch_arrays([req.decode])
-            greedy[b], temp[b], top_k[b], top_p[b] = g[0], t[0], k[0], p[0]
-            sched.on_admit(st)
-            all_states.append(st)
-
-        def finish(b: int):
-            st = slot_state[b]
-            if self.paged:
-                st.kv_pages = len(alloc.tables[b])
-                alloc.release(b)
-            slot_state[b] = None
-            waiting[b] = False
-            feed_pos[b] = 0
-            sched.on_finish(st)
-            if verbose:
-                print(f"[req {st.req.rid}] {st.finish_reason}: "
-                      f"{st.generated[:70]!r}")
-
-        def commit_one(st: RequestState, token: int):
-            st.steps += 1
-            self._commit(st, token)
-
-        while queue or any(s is not None for s in slot_state):
-            for b in range(B):
-                if slot_state[b] is None and queue:
-                    if self.paged and not self._paged_can_admit(
-                            alloc, queue, ids_cache):
-                        break
-                    admit(b)
-            active = [b for b in range(B) if slot_state[b] is not None]
-            if self.paged and not active:
-                if queue:
-                    raise PoolExhausted(
-                        "KV pool too small for the next request's prompt")
-                break
-            step += 1
-
-            # ---- wake waiters whose shared prefix finished filling ------
-            if self.paged:
-                for b in active:
-                    self._paged_wake(alloc, b, slot_state[b], feed_pos,
-                                     waiting)
-
-            # ---- host planning: jump-forward commits + drafting ---------
-            # Jumped tokens commit immediately but drain through the span
-            # as per-slot BACKLOG (feed cursor trails the commit
-            # frontier), so a long jump never inflates the pool's span
-            # width on its own. (Waiting paged slots are not planned:
-            # their frontier cannot move until the shared pages fill.)
-            plans = {}
-            t_plan = time.time()
-            for b in active:
-                st = slot_state[b]
-                if waiting[b]:
-                    plans[b] = SlotPlan()
-                    continue
-                backlog = (st.pos - 1) - int(feed_pos[b])
-                pre = st.jump_tokens
-                plans[b] = sched.plan_slot(st, commit_one, self.max_len,
-                                           backlog=backlog)
-                jump_tokens += st.jump_tokens - pre
-                st.phase = plans[b].phase.value
-            plan_time += time.time() - t_plan
-            for b in active:
-                st = slot_state[b]
-                if st.done:      # finished mid-jump: nothing left to feed
-                    sched.on_commit(st, plans[b].jumped)
-                    finish(b)
-            live = [b for b in active
-                    if slot_state[b] is not None and not waiting[b]]
-            if not live:
-                stall += 1
-                if stall > 4 * B + 16:
-                    raise RuntimeError("paged scheduler stalled")
-                continue
-            stall = 0
-
-            # ---- span width: maximize commits per unit of compute -------
-            # pend = committed-but-unfed tokens (current token + backlog);
-            # desired = pend + drafts. The bucket is chosen to maximize
-            # sum(min(desired, S)) / S so one deep slot cannot force the
-            # whole pool through a mostly-padding span.
-            pend_n = {b: slot_state[b].pos - int(feed_pos[b]) for b in live}
-            S = self._choose_span(
-                [pend_n[b] + len(plans[b].drafts) for b in live])
-            tokens = np.zeros((B, S), np.int32)
-            fmask = np.zeros((B, S), bool)
-            sel0 = {}        # b -> span index of first selection (-1 none)
-            fed = {}         # b -> tokens fed this span
-            for b in list(live):
-                st = slot_state[b]
-                fs = int(feed_pos[b])
-                pend = st.token_ids[fs: st.pos]
-                if len(pend) > S:          # backlog drain: feed only
-                    feed = pend[:S]
-                    sel0[b] = -1
-                    plans[b].drafts = []
-                else:
-                    plans[b].drafts = plans[b].drafts[: S - len(pend)]
-                    feed = pend + plans[b].drafts
-                    sel0[b] = len(pend) - 1
-                if self.paged:
-                    new_caches = self._prepare_feed(alloc, caches, b, st,
-                                                    fs, len(feed))
-                    if new_caches is None:
-                        finish(b)          # kv_oom under true pressure
-                        live.remove(b)
-                        continue
-                    caches = new_caches
-                    # write gating: positions below write_from live in
-                    # SHARED pages (attached prefix) — re-fed read-only
-                    for i in range(len(feed)):
-                        fmask[b, i] = (fs + i) >= st.write_from
-                else:
-                    fmask[b, : len(feed)] = True
-                tokens[b, : len(feed)] = feed
-                fed[b] = len(feed)
-                if plans[b].drafts:
-                    st.phase = SlotPhase.VERIFYING.value
-            if not live:
-                continue
-            if self.paged:
-                page_tab = alloc.table_rows(np)
-                logits, caches = self._span_decode_paged(
-                    self.params, caches, jnp.asarray(tokens),
-                    jnp.asarray(feed_pos), jnp.asarray(fmask),
-                    jnp.asarray(page_tab))
-            else:
-                logits, caches = self._span_decode(
-                    self.params, caches, jnp.asarray(tokens),
-                    jnp.asarray(feed_pos), jnp.asarray(fmask))
-            decode_steps += 1
-            if self.paged:
-                for b in live:
-                    st = slot_state[b]
-                    alloc.note_fill(b, min(int(feed_pos[b]) + fed[b],
-                                           st.prompt_len))
-
-            # ---- mask rows for every selection position -----------------
-            t_mask = time.time()
-            rows = np.full((B, S, MAX_ACCEPT), -1, np.int32)
-            eosm = np.zeros((B, S), bool)
-            consm = np.zeros((B, S), bool)
-            for b in live:
-                st = slot_state[b]
-                pl = plans[b]
-                if st.constraint is None or sel0[b] < 0:
-                    continue
-                off = self._row_offset[st.req.grammar]
-                text = st.generated
-                for i in range(len(pl.drafts) + 1):
-                    if i > 0:
-                        text = text + self.tok.id_to_bytes[pl.drafts[i - 1]]
-                    if i == 0 and pl.stop_mask is not None:
-                        sm = pl.stop_mask   # reuse the jump analyzer's mask
-                    else:
-                        sm = st.constraint.step_rows(text)
-                    f = sel0[b] + i
-                    rows[b, f] = np.where(sm.rows >= 0, sm.rows + off,
-                                          sm.rows)
-                    eosm[b, f] = sm.eos_allowed
-                    consm[b, f] = True
-                    st.mask_computations += 1
-                    mask_computations += 1
-            keys = self._span_keys(seeds, S, step)
-            masked, ids, ok = self._span_mask_select(
-                logits, self._store_cat, jnp.asarray(rows),
-                jnp.asarray(eosm), jnp.asarray(consm), jnp.asarray(greedy),
-                jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
-                jnp.asarray(keys))
-            ids_h, ok_h = np.asarray(ids), np.asarray(ok)
-            mask_time += time.time() - t_mask
-
-            # ---- accept: longest valid draft prefix + bonus token -------
-            for b in live:
-                st = slot_state[b]
-                pl = plans[b]
-                if sel0[b] < 0:
-                    # pure backlog drain (jump replay or chunked
-                    # prefill): advance the feed cursor; the step's jump
-                    # commits (nonempty only on the first drain step)
-                    # must still reach the proposer history
-                    sched.on_commit(st, pl.jumped)
-                    feed_pos[b] += fed[b]
-                    if self.paged and feed_pos[b] < st.prompt_len:
-                        st.phase = SlotPhase.PREFILLING.value
-                    continue
-                idx = sel0[b]
-                committed = []
-                for d in pl.drafts:
-                    if st.done or int(ids_h[b, idx]) != d:
-                        break
-                    # d is oracle-vetted; selection == d is exactly what
-                    # the plain engine would have committed here
-                    commit_one(st, d)
-                    committed.append(d)
-                    idx += 1
-                st.draft_proposed += len(pl.drafts)
-                st.draft_accepted += len(committed)
-                draft_proposed += len(pl.drafts)
-                draft_accepted += len(committed)
-                sched.on_verify(st, len(pl.drafts), len(committed))
-                if not st.done:
-                    nxt = self._resolve_span_selection(
-                        st, masked, b, idx, int(ids_h[b, idx]),
-                        bool(ok_h[b, idx]), st.steps)
-                    if nxt is None:
-                        st.done = True
-                        st.finish_reason = "mask_exhausted"
-                    else:
-                        commit_one(st, nxt)
-                        committed.append(nxt)
-                sched.on_commit(st, pl.jumped + committed)
-                if st.done:
-                    finish(b)
-                else:
-                    feed_pos[b] = st.pos - 1
-                    st.phase = SlotPhase.DECODING.value
-
-        stats = EngineStats(
-            requests=len(all_states),
-            tokens=sum(s.steps for s in all_states),
-            wall=time.time() - t0,
-            mask_time=mask_time,
-            mask_computations=mask_computations,
-            decode_steps=decode_steps,
-            batch_slots=B,
-            mesh_devices=self.mesh.size if self.mesh else 1,
-            jump_tokens=jump_tokens,
-            draft_proposed=draft_proposed,
-            draft_accepted=draft_accepted,
-            plan_time=plan_time,
-        )
-        if self.paged:
-            self._kv_stats(stats, alloc)
-        return all_states, stats
 
     # =========================== sequential path ==========================
     # The original one-request-at-a-time engine (paper Algorithm 3,
@@ -1348,7 +927,7 @@ class Engine:
                 self._commit(st, proposal)
                 return
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         sm = gc.step_rows(text)
         off = self._row_offset[req.grammar]
         rows = jnp.asarray(np.where(sm.rows >= 0, sm.rows + off,
@@ -1356,7 +935,7 @@ class Engine:
         eos = jnp.asarray([sm.eos_allowed])
         masked = apply_grammar_mask(logits, self._store_cat,
                                     rows, eos, backend=self.mask_backend)
-        st.mask_time += time.time() - t0
+        st.mask_time += time.perf_counter() - t0
         st.mask_computations += 1
 
         # rejection wrapper (see generate() for the batched variant)
@@ -1387,7 +966,7 @@ class Engine:
     def generate_sequential(self, requests: list[Request],
                             verbose: bool = False):
         """Round-robin continuous stepping, one request per device call."""
-        t0 = time.time()
+        t0 = time.perf_counter()
         states = [self._start(r) for r in requests]
         keys = {r.rid: jax.random.PRNGKey(r.seed) for r in requests}
         active = list(states)
@@ -1403,7 +982,7 @@ class Engine:
         stats = EngineStats(
             requests=len(states),
             tokens=sum(s.steps for s in states),
-            wall=time.time() - t0,
+            wall=time.perf_counter() - t0,
             mask_time=sum(s.mask_time for s in states),
             mask_computations=sum(s.mask_computations for s in states),
             opportunistic_hits=sum(s.opportunistic_hits for s in states),

@@ -1,0 +1,255 @@
+"""Minimal streaming HTTP endpoint over the AsyncEngine (stdlib only).
+
+`python -m repro.launch.serve --serve --port 8400` starts it; clients
+POST JSON and read newline-delimited JSON (NDJSON) chunks as tokens
+commit — the paper's constrained decoding, served live:
+
+  POST /generate
+      {"prompt": "...", "grammar": "json" | null,
+       "max_new_tokens": 64, "method": "greedy" | "sample",
+       "temperature": 1.0, "top_k": 0, "top_p": 1.0, "seed": 0,
+       "deadline": null | seconds, "stream": true}
+  ->  {"token": 17, "text": "{\""}        one line per committed token
+      ...
+      {"done": true, "finish_reason": "eos", "tokens": 12,
+       "text": "<full output>"}           terminal line
+
+  `"stream": false` returns only the terminal line. Disconnecting
+  mid-stream cancels the request — its slot and KV pages free at the
+  next engine step.
+
+  GET /healthz -> {"ok": true, "slots": B, "active": n}
+
+The HTTP layer is deliberately tiny (HTTP/1.1, Content-Length bodies,
+chunked responses); production fronting belongs in a real proxy — this
+endpoint's job is exercising live admission, streaming, cancellation
+and backpressure against the persistent step loop.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+from typing import Optional
+
+from repro.core.decoding import DecodeConfig
+from repro.serving.async_engine import AsyncEngine
+from repro.serving.engine import Request
+
+_MAX_BODY = 1 << 20
+
+
+class ServerError(Exception):
+    def __init__(self, status: int, msg: str):
+        super().__init__(msg)
+        self.status = status
+        self.msg = msg
+
+
+async def _read_request(reader) -> tuple[str, str, bytes]:
+    line = await reader.readline()
+    if not line:
+        raise ConnectionError("closed")
+    try:
+        method, path, _ = line.decode("latin-1").split(" ", 2)
+    except ValueError:
+        raise ServerError(400, "bad request line")
+    clen = 0
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        name, _, val = h.decode("latin-1").partition(":")
+        if name.strip().lower() == "content-length":
+            try:
+                clen = int(val.strip())
+            except ValueError:
+                raise ServerError(400, "bad content-length")
+    if clen > _MAX_BODY:
+        raise ServerError(413, "body too large")
+    body = await reader.readexactly(clen) if clen else b""
+    return method, path, body
+
+
+def _start_response(writer, status: int, reason: str,
+                    content_type: str = "application/x-ndjson",
+                    chunked: bool = True,
+                    body: Optional[bytes] = None) -> None:
+    hdr = [f"HTTP/1.1 {status} {reason}",
+           f"Content-Type: {content_type}",
+           "Connection: close"]
+    if chunked:
+        hdr.append("Transfer-Encoding: chunked")
+    else:
+        hdr.append(f"Content-Length: {len(body or b'')}")
+    writer.write(("\r\n".join(hdr) + "\r\n\r\n").encode("latin-1"))
+    if not chunked and body:
+        writer.write(body)
+
+
+def _chunk(writer, data: bytes) -> None:
+    writer.write(f"{len(data):x}\r\n".encode("latin-1") + data + b"\r\n")
+
+
+def _end_chunks(writer) -> None:
+    writer.write(b"0\r\n\r\n")
+
+
+def _parse_generate(body: bytes, grammars, rid: int) -> tuple[Request, bool]:
+    try:
+        spec = json.loads(body.decode() or "{}")
+    except (ValueError, UnicodeDecodeError):
+        raise ServerError(400, "body is not JSON")
+    grammar = spec.get("grammar")
+    if grammar is not None and grammar not in grammars:
+        raise ServerError(400, f"unknown grammar {grammar!r}; "
+                               f"have {sorted(grammars)}")
+    method = spec.get("method", "greedy")
+    if method not in ("greedy", "sample"):
+        raise ServerError(400, f"bad method {method!r}")
+    dc = DecodeConfig(method=method,
+                      temperature=float(spec.get("temperature", 1.0)),
+                      top_k=spec.get("top_k") or None,
+                      top_p=spec.get("top_p"))
+    deadline = spec.get("deadline")
+    req = Request(rid=rid,
+                  prompt=str(spec.get("prompt", "")).encode(),
+                  grammar=grammar,
+                  max_new_tokens=int(spec.get("max_new_tokens", 64)),
+                  decode=dc,
+                  seed=int(spec.get("seed", 0)),
+                  deadline=float(deadline) if deadline is not None
+                  else None)
+    return req, bool(spec.get("stream", True))
+
+
+class EngineServer:
+    def __init__(self, async_engine: AsyncEngine):
+        self.aeng = async_engine
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    # ------------------------------ routes ----------------------------
+
+    async def _generate(self, reader, writer, body: bytes) -> None:
+        req, stream = _parse_generate(body, self.aeng.engine.bundles,
+                                      self.aeng.next_rid())
+        handle = self.aeng.submit(req)      # raises pre-response: the
+                                            # generic 503 path applies
+        # disconnect watch: streamed responses notice a dead peer at the
+        # next chunk write, but a "stream": false request writes nothing
+        # until the end — watch the read side for EOF so a disconnect
+        # cancels (frees the slot + KV pages) in that mode too
+        def on_eof(t):
+            if not t.cancelled():
+                t.exception()               # retrieve; reset == EOF here
+                if not handle.finished:
+                    handle.cancel()
+        eof_watch = asyncio.ensure_future(reader.read())
+        eof_watch.add_done_callback(on_eof)
+        _start_response(writer, 200, "OK")
+        n = 0
+        try:
+            async for tid, tb in handle.tokens():
+                n += 1
+                if stream:
+                    _chunk(writer, json.dumps(
+                        {"token": tid,
+                         "text": tb.decode("utf-8", "replace")}
+                    ).encode() + b"\n")
+                    await writer.drain()
+            st = await handle.result()
+            _chunk(writer, json.dumps(
+                {"done": True,
+                 "finish_reason": st.finish_reason if st else "error",
+                 "tokens": n,
+                 "text": (st.generated if st else b"").decode(
+                     "utf-8", "replace")}).encode() + b"\n")
+            _end_chunks(writer)
+            await writer.drain()
+        except (ConnectionError, BrokenPipeError, asyncio.CancelledError):
+            # client went away mid-stream: free the slot + KV pages now
+            handle.cancel()
+            raise
+        except Exception:
+            # mid-stream engine failure: the chunked body has already
+            # started, so no status line can help — cancel the request
+            # and close; the truncated chunked stream signals the error
+            handle.cancel()
+        finally:
+            eof_watch.cancel()
+
+    async def _healthz(self, writer) -> None:
+        loop = self.aeng._loop_obj
+        active = 0 if loop is None else len(loop.active())
+        body = json.dumps({"ok": True, "slots": self.aeng.engine.slots,
+                           "active": active}).encode()
+        _start_response(writer, 200, "OK", "application/json",
+                        chunked=False, body=body)
+
+    # ---------------------------- connection --------------------------
+
+    async def _handle(self, reader, writer) -> None:
+        try:
+            try:
+                method, path, body = await _read_request(reader)
+                if method == "POST" and path == "/generate":
+                    await self._generate(reader, writer, body)
+                elif method == "GET" and path == "/healthz":
+                    await self._healthz(writer)
+                else:
+                    raise ServerError(404, f"no route {method} {path}")
+            except ServerError as e:
+                body = json.dumps({"error": e.msg}).encode()
+                _start_response(writer, e.status, "Error",
+                                "application/json", chunked=False,
+                                body=body)
+            except (ConnectionError, BrokenPipeError,
+                    asyncio.CancelledError):
+                raise
+            except Exception as e:
+                # engine-side failures before any bytes went out (e.g.
+                # submit() during drain) become a JSON 503 instead of a
+                # silent connection reset. Mid-stream failures can only
+                # append garbage to an already-started chunked body, so
+                # _generate keeps its own narrower handling.
+                body = json.dumps(
+                    {"error": f"engine unavailable: {e}"}).encode()
+                _start_response(writer, 503, "Service Unavailable",
+                                "application/json", chunked=False,
+                                body=body)
+            await writer.drain()
+        except (ConnectionError, BrokenPipeError, asyncio.CancelledError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, BrokenPipeError):
+                pass
+
+    # ----------------------------- lifecycle --------------------------
+
+    async def start(self, host: str = "127.0.0.1", port: int = 8400):
+        self._server = await asyncio.start_server(self._handle, host, port)
+        return self._server.sockets[0].getsockname()[:2]
+
+    async def serve_forever(self) -> None:
+        async with self._server:
+            await self._server.serve_forever()
+
+    async def stop(self, drain: bool = True) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        if drain:
+            await self.aeng.drain()
+        else:
+            await self.aeng.abort()
+
+
+async def run_server(async_engine: AsyncEngine, host: str = "127.0.0.1",
+                     port: int = 8400) -> None:
+    srv = EngineServer(async_engine)
+    addr = await srv.start(host, port)
+    print(f"serving on http://{addr[0]}:{addr[1]} "
+          f"(POST /generate, GET /healthz)")
+    await srv.serve_forever()

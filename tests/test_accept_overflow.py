@@ -1,0 +1,136 @@
+"""Regression: accept sets wider than the base row bucket must NOT be
+truncated (the soundness hole: `step_rows` used to cap at MAX_ACCEPT=48
+and silently drop the rest, over-constraining the mask and banning
+grammar-valid tokens).
+
+The wide grammar below has 62 alternative two-byte literals with 62
+distinct first bytes, so the start state's accept set is 62 rows — 14 of
+them used to fall off the cap, banning every token that could only start
+those alternatives.
+"""
+import numpy as np
+import pytest
+
+from repro.core.constrain import GrammarConstraint, MAX_ACCEPT, accept_width
+from repro.core.grammar import Grammar
+from repro.core.lr import build_lr_table
+from repro.core.mask_store import build_mask_store
+from repro.core.tokenizer import ByteTokenizer
+
+# 62 distinct first bytes: A-Z a-z 0-9
+_FIRST = ("ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+          "abcdefghijklmnopqrstuvwxyz"
+          "0123456789")
+_LITERALS = [c + "q" for c in _FIRST]
+
+WIDE_GRAMMAR = "start: " + " | ".join(f'"{lit}"' for lit in _LITERALS) + "\n"
+
+
+@pytest.fixture(scope="module")
+def wide_gc():
+    tok = ByteTokenizer(1024)
+    g = Grammar(WIDE_GRAMMAR, name="wide")
+    tab = build_lr_table(g)
+    store = build_mask_store(g, tok)
+    return GrammarConstraint(g, tab, store, tok), tok
+
+
+def _byte_token(tok, ch: str) -> int:
+    tid = tok.encode(ch.encode())[0]
+    assert tok.id_to_bytes[tid][:1] == ch.encode()
+    return tid
+
+
+def test_accept_width_buckets():
+    assert accept_width(0) == MAX_ACCEPT
+    assert accept_width(MAX_ACCEPT) == MAX_ACCEPT
+    assert accept_width(MAX_ACCEPT + 1) == 2 * MAX_ACCEPT
+    assert accept_width(3 * MAX_ACCEPT) == 4 * MAX_ACCEPT
+
+
+def test_step_rows_never_truncates(wide_gc):
+    gc, tok = wide_gc
+    sm = gc.step_rows(b"")
+    n_rows = int((sm.rows >= 0).sum())
+    assert sm.num_sequences >= len(_LITERALS)
+    assert n_rows > MAX_ACCEPT, "grammar must overflow the base bucket"
+    assert sm.rows.shape[0] == accept_width(n_rows)
+
+
+def test_overflow_rows_keep_valid_tokens(wide_gc):
+    """Every alternative's first byte must survive the mask. Under the
+    old cap, the rows beyond MAX_ACCEPT were dropped and their
+    alternatives' tokens banned."""
+    gc, tok = wide_gc
+    mask = gc.token_mask(b"")
+    for ch in _FIRST:
+        tid = _byte_token(tok, ch)
+        assert gc.is_valid_extension(b"", tid), ch
+        assert mask[tid], f"grammar-valid token {ch!r} banned by the mask"
+
+
+def test_truncated_mask_would_have_banned_tokens(wide_gc):
+    """Sanity that this IS a regression test: re-applying the old cap
+    (first MAX_ACCEPT rows only) bans at least one token the exact
+    oracle allows."""
+    gc, tok = wide_gc
+    sm = gc.step_rows(b"")
+    old_mask = gc.store.unpack(gc.store.union_rows(sm.rows[:MAX_ACCEPT]))
+    banned = [ch for ch in _FIRST
+              if gc.is_valid_extension(b"", _byte_token(tok, ch))
+              and not old_mask[_byte_token(tok, ch)]]
+    assert banned, "old truncation no longer reproducible — update test"
+
+
+def test_forced_step_not_confused_by_overflow(wide_gc):
+    """forced_step must see the FULL union (62 candidates -> 'free'), not
+    a capped one that could collapse to a bogus forced token."""
+    gc, tok = wide_gc
+    kind, token, sm = gc.forced_step(b"")
+    assert kind == "free"
+    # after the first byte, the literal's second byte is truly forced
+    kind, token, _ = gc.forced_step(b"A")
+    assert kind == "token"
+    assert gc.tokenizer.id_to_bytes[token] == b"q"
+
+
+def test_step_rows_batch_grows_width(wide_gc):
+    gc, tok = wide_gc
+    rows, eos, nseq = GrammarConstraint.step_rows_batch(
+        [gc, None, gc], [b"", b"", b"Aq"])
+    assert rows.shape[1] > MAX_ACCEPT
+    assert (rows[1] == -1).all()
+    # the narrow slot (after "Aq" the sentence can only end) pads out
+    assert int((rows[2] >= 0).sum()) <= MAX_ACCEPT
+    assert eos[2]
+
+
+def test_engine_serves_wide_grammar(wide_gc):
+    """End-to-end through the batched engine: the [B, A] fused mask+
+    sample path must ride the wider bucket and complete validly."""
+    import jax
+    from dataclasses import replace
+
+    from repro.configs import get_config
+    from repro.core.decoding import DecodeConfig
+    from repro.core.parser import IncrementalParser
+    from repro.models.model import build_model
+    from repro.serving.engine import Engine, Request
+
+    gc, tok = wide_gc
+    bundles = {"wide": (gc.grammar, gc.parser.table, gc.store)}
+    cfg = get_config("syncode-demo")
+    cfg = replace(cfg, vocab_size=tok.vocab_size, num_layers=1,
+                  d_model=64, d_ff=128, num_heads=2, num_kv_heads=2,
+                  head_dim=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, tok, bundles, max_len=64, slots=2)
+    reqs = [Request(rid=i, prompt=b"go:", grammar="wide", max_new_tokens=8,
+                    decode=DecodeConfig(method="sample", temperature=1.0),
+                    seed=i) for i in range(3)]
+    states, _ = engine.generate(reqs)
+    p = IncrementalParser(gc.grammar, gc.parser.table)
+    for st in states:
+        assert st.finish_reason == "eos"
+        assert p.recognize(st.generated), st.generated

@@ -1,0 +1,425 @@
+"""AsyncEngine + streaming server: token-for-token identity with the
+synchronous engine (dense / paged / speculative), per-token streaming,
+cancellation (slot + KV pages freed immediately), deadlines, live
+admission and graceful drain. The async layer drives the SAME StepLoop
+as the sync entry points (serving/loop.py), so identity is asserted, not
+hoped for."""
+import asyncio
+import json
+
+import jax
+import pytest
+
+from repro.core.decoding import DecodeConfig
+from repro.core.grammars import BUILTIN
+from repro.serving.async_engine import AsyncEngine
+from repro.serving.engine import Engine, Request
+from repro.spec import SpecConfig
+
+MAX_LEN = 160
+
+
+@pytest.fixture(scope="module")
+def engines(tokenizer, grammar_bundle):
+    from dataclasses import replace
+
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    bundles = {}
+    for name in BUILTIN:
+        g, tab, store, _ = grammar_bundle(name)
+        bundles[name] = (g, tab, store)
+    cfg = get_config("syncode-demo")
+    cfg = replace(cfg, vocab_size=tokenizer.vocab_size, num_layers=2,
+                  d_model=128, d_ff=256, num_heads=4, num_kv_heads=2,
+                  head_dim=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def make(**kw):
+        kw.setdefault("slots", 4)
+        return Engine(model, params, tokenizer, bundles, max_len=MAX_LEN,
+                      **kw)
+
+    return make(), make(paged=True, page_size=8), make
+
+
+def _reqs(grammar, n=3, max_new=14, method="sample", temperature=1.0,
+          prompt=b"Q: generate. A:", seed0=0, deadline=None):
+    return [Request(rid=i, prompt=prompt, grammar=grammar,
+                    max_new_tokens=max_new,
+                    decode=DecodeConfig(method=method,
+                                        temperature=temperature),
+                    seed=seed0 + i, deadline=deadline) for i in range(n)]
+
+
+def _assert_identical(sync_states, async_states):
+    assert len(sync_states) == len(async_states)
+    by_rid = {s.req.rid: s for s in async_states}
+    for a in sync_states:
+        b = by_rid[a.req.rid]
+        assert a.token_ids == b.token_ids, (a.req.rid, a.generated,
+                                            b.generated)
+        assert a.finish_reason == b.finish_reason
+
+
+def _run_async(engine, reqs, **kw):
+    async def go():
+        aeng = AsyncEngine(engine, **kw)
+        try:
+            return await aeng.generate(reqs)
+        finally:
+            await aeng.drain()
+    return asyncio.run(go())
+
+
+# ------------------------- mode equivalence ----------------------------
+
+def test_async_dense_identical_to_sync(engines):
+    dense, _, _ = engines
+    for gname in ("json", "calc"):
+        ss, _ = dense.generate(_reqs(gname))
+        as_, _ = _run_async(dense, _reqs(gname))
+        _assert_identical(ss, as_)
+
+
+def test_async_dense_greedy_all_grammars(engines):
+    dense, _, _ = engines
+    for gname in BUILTIN:
+        ss, _ = dense.generate(_reqs(gname, method="greedy"))
+        as_, _ = _run_async(dense, _reqs(gname, method="greedy"))
+        _assert_identical(ss, as_)
+
+
+def test_async_paged_identical_to_sync(engines):
+    _, paged, _ = engines
+    ss, _ = paged.generate(_reqs("json", n=6, seed0=3))
+    as_, _ = _run_async(paged, _reqs("json", n=6, seed0=3))
+    _assert_identical(ss, as_)
+
+
+def test_async_spec_greedy_identical_to_sync(engines):
+    dense, paged, _ = engines
+    spec = SpecConfig(literal_jump=False)
+    for eng in (dense, paged):
+        ss, _ = eng.generate_speculative(_reqs("jsonmsg", method="greedy"),
+                                         spec=spec)
+        as_, stats = _run_async(eng, _reqs("jsonmsg", method="greedy"),
+                                spec=spec)
+        _assert_identical(ss, as_)
+    assert stats.jump_tokens >= 0
+
+
+def test_async_more_requests_than_slots(engines):
+    dense, _, _ = engines
+    n = 2 * dense.slots + 3
+    ss, _ = dense.generate(_reqs("json", n=n, seed0=20))
+    as_, stats = _run_async(dense, _reqs("json", n=n, seed0=20))
+    _assert_identical(ss, as_)
+    assert stats.requests == n
+
+
+# --------------------- overlap on/off equivalence ----------------------
+
+def test_overlap_identical_to_no_overlap(engines):
+    _, _, make = engines
+    on, off = make(overlap=True), make(overlap=False)
+    for gname in ("json", "jsonmsg"):
+        a, sa = on.generate(_reqs(gname, n=5, max_new=16))
+        b, sb = off.generate(_reqs(gname, n=5, max_new=16))
+        _assert_identical(a, b)
+    assert sa.overlap_dispatched > 0
+    assert sb.overlap_dispatched == 0
+
+
+def test_overlap_speculative_forwards_reused(engines):
+    """Steady-state greedy decoding validates nearly always: most
+    speculative forwards must be consumed, not discarded."""
+    _, _, make = engines
+    eng = make(overlap=True, slots=2)
+    _, stats = eng.generate(_reqs("json", n=2, max_new=24,
+                                  method="greedy"))
+    assert stats.overlap_dispatched > 0
+    assert stats.overlap_hits > stats.overlap_dispatched // 2
+
+
+# ------------------------------ streaming ------------------------------
+
+def test_streamed_tokens_match_batch_output(engines):
+    dense, _, _ = engines
+    sync_states, _ = dense.generate(_reqs("json", n=3, seed0=7))
+    by_rid = {s.req.rid: s for s in sync_states}
+
+    async def go():
+        aeng = AsyncEngine(dense)
+        handles = [aeng.submit(r) for r in _reqs("json", n=3, seed0=7)]
+        try:
+            for h in handles:
+                ids, text = [], b""
+                async for tid, tb in h.tokens():
+                    ids.append(tid)
+                    text += tb
+                st = await h.result()
+                ref = by_rid[h.req.rid]
+                assert text == ref.generated == st.generated
+                from repro.core.tokenizer import EOS_ID
+                assert ids == [t for t in ref.token_ids[len(
+                    dense._request_ids(h.req)):] if t != EOS_ID]
+        finally:
+            await aeng.drain()
+    asyncio.run(go())
+
+
+def test_live_admission_between_batches(engines):
+    """The persistent loop idles between submissions and serves later
+    ones identically (no per-call state leaks across waves)."""
+    dense, _, _ = engines
+    s1, _ = dense.generate(_reqs("calc", n=2, seed0=40))
+    s2, _ = dense.generate(_reqs("json", n=2, seed0=50))
+
+    async def go():
+        aeng = AsyncEngine(dense)
+        try:
+            a1, _ = await aeng.generate(_reqs("calc", n=2, seed0=40))
+            await asyncio.sleep(0.3)        # loop goes idle
+            a2, _ = await aeng.generate(_reqs("json", n=2, seed0=50))
+            return a1, a2
+        finally:
+            await aeng.drain()
+    a1, a2 = asyncio.run(go())
+    _assert_identical(s1, a1)
+    _assert_identical(s2, a2)
+
+
+# ------------------------ cancellation / deadlines ---------------------
+
+def test_cancel_mid_decode_frees_slot(engines):
+    dense, _, _ = engines
+
+    async def go():
+        aeng = AsyncEngine(dense)
+        try:
+            long = Request(rid=0, prompt=b"Q:", grammar="json",
+                           max_new_tokens=120,
+                           decode=DecodeConfig(method="sample",
+                                               temperature=1.0), seed=1)
+            h = aeng.submit(long)
+            seen = 0
+            async for _tid, _tb in h.tokens():
+                seen += 1
+                if seen == 3:
+                    h.cancel()
+            st = await h.result()
+            assert st.finish_reason == "cancelled"
+            assert st.steps < 120
+            # the slot is free again: a fresh request admits and runs
+            ss, _ = await aeng.generate(_reqs("json", n=2, seed0=60))
+            assert all(s.finish_reason in ("eos", "length", "max_len")
+                       for s in ss)
+            return st
+        finally:
+            await aeng.drain()
+    asyncio.run(go())
+
+
+def test_cancel_paged_frees_kv_pages(engines):
+    """Cancellation releases the slot's page table immediately;
+    refcounts stay consistent (a follow-up wave reuses the pool and
+    matches the sync engine exactly)."""
+    _, paged, _ = engines
+    sync_states, _ = paged.generate(_reqs("json", n=3, seed0=70))
+
+    async def go():
+        aeng = AsyncEngine(paged)
+        try:
+            h = aeng.submit(Request(
+                rid=999, prompt=b"Q: generate. A:", grammar="json",
+                max_new_tokens=120,
+                decode=DecodeConfig(method="sample", temperature=1.0),
+                seed=5))
+            async for _tid, _tb in h.tokens():
+                h.cancel()                   # cancel after first token
+            st = await h.result()
+            assert st.finish_reason == "cancelled"
+            alloc = aeng._loop_obj.mode.alloc
+            # per-slot page tables all empty once the slot released
+            assert all(len(t) == 0 for t in alloc.tables)
+            # every still-referenced page is cache-held, refcount-sane
+            assert all(rc >= 0 for rc in alloc.refcount)
+            a, _ = await aeng.generate(_reqs("json", n=3, seed0=70))
+            return a
+        finally:
+            await aeng.drain()
+    a = asyncio.run(go())
+    _assert_identical(sync_states, a)
+
+
+def test_cancel_queued_request_never_admits(engines):
+    dense, _, _ = engines
+
+    async def go():
+        aeng = AsyncEngine(dense)
+        try:
+            # fill every slot with long requests, then queue one more
+            longs = [aeng.submit(r) for r in _reqs(
+                "json", n=dense.slots, max_new=60, seed0=80)]
+            queued = aeng.submit(Request(
+                rid=500, prompt=b"Q:", grammar="json", max_new_tokens=5,
+                decode=DecodeConfig(method="greedy"), seed=0))
+            queued.cancel()
+            st = await queued.result()
+            assert st.finish_reason == "cancelled"
+            assert st.steps == 0 and st.generated == b""
+            for h in longs:
+                h.cancel()
+        finally:
+            await aeng.drain()
+    asyncio.run(go())
+
+
+def test_deadline_finishes_with_distinct_reason(engines):
+    dense, _, _ = engines
+
+    async def go():
+        aeng = AsyncEngine(dense)
+        try:
+            h = aeng.submit(Request(
+                rid=0, prompt=b"Q:", grammar="json", max_new_tokens=500,
+                decode=DecodeConfig(method="sample", temperature=1.0),
+                seed=3, deadline=0.05))
+            st = await h.result()
+            assert st.finish_reason == "deadline"
+            assert st.steps < 500
+            # deadline of a finished-in-time request never fires
+            ok = aeng.submit(Request(
+                rid=1, prompt=b"Q:", grammar="calc", max_new_tokens=4,
+                decode=DecodeConfig(method="greedy"), seed=0,
+                deadline=60.0))
+            st2 = await ok.result()
+            assert st2.finish_reason in ("eos", "length", "max_len")
+        finally:
+            await aeng.drain()
+    asyncio.run(go())
+
+
+def test_abort_cancels_everything(engines):
+    dense, _, _ = engines
+
+    async def go():
+        aeng = AsyncEngine(dense)
+        # unconstrained greedy decoding is deterministic and (checked)
+        # does not emit EOS this quickly, so nothing finishes early
+        hs = [aeng.submit(Request(rid=i, prompt=b"Q%d:" % i, grammar=None,
+                                  max_new_tokens=4000,
+                                  decode=DecodeConfig(method="greedy"),
+                                  seed=90 + i)) for i in range(6)]
+        await asyncio.sleep(0.1)
+        await aeng.abort()
+        for h in hs:
+            st = await h.result()
+            assert st.finish_reason == "cancelled"
+    asyncio.run(go())
+
+
+# ----------------------------- HTTP server -----------------------------
+
+async def _http(host, port, method, path, body=b""):
+    reader, writer = await asyncio.open_connection(host, port)
+    req = (f"{method} {path} HTTP/1.1\r\nHost: x\r\n"
+           f"Content-Length: {len(body)}\r\n\r\n").encode() + body
+    writer.write(req)
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionError, BrokenPipeError):
+        pass
+    head, _, rest = data.partition(b"\r\n\r\n")
+    status = int(head.split(b" ")[1])
+    if b"chunked" in head.lower():
+        out, rem = b"", rest
+        while rem:
+            size, _, rem = rem.partition(b"\r\n")
+            n = int(size, 16)
+            if n == 0:
+                break
+            out += rem[:n]
+            rem = rem[n + 2:]
+        return status, out
+    return status, rest
+
+
+def test_server_streams_and_matches_sync(engines):
+    from repro.serving.server import EngineServer
+    dense, _, _ = engines
+    sync_states, _ = dense.generate(
+        [Request(rid=0, prompt=b"say:", grammar="json", max_new_tokens=10,
+                 decode=DecodeConfig(method="sample", temperature=1.0),
+                 seed=0)])
+
+    async def go():
+        aeng = AsyncEngine(dense)
+        srv = EngineServer(aeng)
+        host, port = await srv.start(port=0)
+        try:
+            status, body = await _http(
+                host, port, "GET", "/healthz")
+            assert status == 200
+            assert json.loads(body)["ok"] is True
+
+            status, body = await _http(
+                host, port, "POST", "/generate",
+                json.dumps({"prompt": "say:", "grammar": "json",
+                            "max_new_tokens": 10, "method": "sample",
+                            "temperature": 1.0, "seed": 0}).encode())
+            assert status == 200
+            lines = [json.loads(l) for l in body.splitlines() if l]
+            final = lines[-1]
+            assert final["done"] is True
+            streamed = "".join(l["text"] for l in lines[:-1])
+            assert streamed == final["text"]
+            assert final["text"] == sync_states[0].generated.decode()
+            assert final["finish_reason"] == sync_states[0].finish_reason
+
+            status, body = await _http(
+                host, port, "POST", "/generate",
+                json.dumps({"grammar": "nope"}).encode())
+            assert status == 400
+        finally:
+            await srv.stop(drain=False)
+    asyncio.run(go())
+
+
+def test_server_disconnect_cancels_request(engines):
+    from repro.serving.server import EngineServer
+    dense, _, _ = engines
+
+    async def go():
+        aeng = AsyncEngine(dense)
+        srv = EngineServer(aeng)
+        host, port = await srv.start(port=0)
+        try:
+            reader, writer = await asyncio.open_connection(host, port)
+            body = json.dumps({"prompt": "Q:", "grammar": "json",
+                               "max_new_tokens": 400, "method": "sample",
+                               "temperature": 1.0}).encode()
+            writer.write((f"POST /generate HTTP/1.1\r\nHost: x\r\n"
+                          f"Content-Length: {len(body)}\r\n\r\n"
+                          ).encode() + body)
+            await writer.drain()
+            await reader.readline()          # status line arrives
+            writer.close()                   # client walks away
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, BrokenPipeError):
+                pass
+            # the request must get cancelled and its slot freed
+            for _ in range(300):
+                await asyncio.sleep(0.02)
+                if not aeng._loop_obj.active() and not aeng._handles:
+                    break
+            assert not aeng._loop_obj.active()
+        finally:
+            await srv.stop(drain=False)
+    asyncio.run(go())

@@ -295,3 +295,21 @@ def test_kv_oom_baseline_fuzz(engines, num_pages, seed0):
         from repro.serving.kvpool import PoolExhausted
         assert isinstance(e, PoolExhausted)
     _assert_pool_at_baseline(box["alloc"])
+
+
+def test_paged_repeated_runs_identical(engines):
+    """Regression for the feed_pos zero-copy aliasing race (PR 5
+    addendum in CHANGES.md): chunked-prefill steps used to mutate the
+    live feed_pos array while the async span feed could still alias it,
+    corrupting the prefill region's logits on some executions. Repeated
+    runs of the same shared-prefix workload must be token-identical."""
+    _, paged, _, _ = engines
+    prompt = (b'{"type": "msg", "seq": 1, "body": "hello"} ' * 3)[:100]
+    ref = None
+    for _ in range(3):
+        states, _ = paged.generate(_reqs("json", n=4, max_new=8,
+                                         prompt=prompt))
+        sig = [s.token_ids for s in states]
+        if ref is None:
+            ref = sig
+        assert sig == ref, "paged engine nondeterministic across runs"

@@ -218,3 +218,73 @@ def test_mesh2_store_is_sharded(harness):
     spec = sh.spec
     assert spec[1] == "model", spec
     assert eng.params["embed_block"]["embed"].sharding.spec[0] == "model"
+
+
+# --------------------- async engine on the mesh ----------------------------
+# The AsyncEngine drives the same StepLoop as the sync entry points, so
+# mesh identity must survive the async front-end too (the CI host-mesh
+# job runs these alongside the sync determinism tests above).
+
+def _async_generate(engine, reqs):
+    import asyncio
+
+    from repro.serving.async_engine import AsyncEngine
+
+    async def go():
+        aeng = AsyncEngine(engine)
+        try:
+            return await aeng.generate(reqs)
+        finally:
+            await aeng.drain()
+    return asyncio.run(go())
+
+
+def test_mesh1_async_generate_identical(harness):
+    """Always-on: async + overlap on a 1-device mesh matches the
+    unsharded sync baseline token-for-token."""
+    make, _ = harness
+    bs, _ = make().generate(_reqs("json", method="sample"))
+    ms, stats = _async_generate(make(1), _reqs("json", method="sample"))
+    _assert_identical(bs, ms)
+    assert stats.mesh_devices == 1
+
+
+@needs2
+@pytest.mark.parametrize("gname", sorted(BUILTIN))
+def test_mesh2_async_generate_identical(harness, gname):
+    make, _ = harness
+    bs, _ = make().generate(_reqs(gname, method="sample",
+                                  temperature=1.0))
+    ms, stats = _async_generate(make(2), _reqs(gname, method="sample",
+                                               temperature=1.0))
+    _assert_identical(bs, ms)
+    assert stats.mesh_devices == 2
+
+
+@needs2
+def test_mesh2_async_paged_identical(harness):
+    make, _ = harness
+    bs, _ = make().generate(_reqs("json", n=5, max_new=10))
+    ms, _ = _async_generate(make(2, paged=True, page_size=8),
+                            _reqs("json", n=5, max_new=10))
+    _assert_identical(bs, ms)
+
+
+@needs2
+def test_mesh2_async_speculative_identical(harness):
+    import asyncio
+
+    from repro.serving.async_engine import AsyncEngine
+    from repro.spec import SpecConfig
+    make, _ = harness
+    bs, _ = make().generate_speculative(_reqs("jsonmsg"),
+                                        spec=SpecConfig())
+
+    async def go():
+        aeng = AsyncEngine(make(2), spec=SpecConfig())
+        try:
+            return await aeng.generate(_reqs("jsonmsg"))
+        finally:
+            await aeng.drain()
+    ms, _ = asyncio.run(go())
+    _assert_identical(bs, ms)
