@@ -12,6 +12,7 @@ bench:             ## paper-table + engine benchmarks (CSV to stdout)
 
 bench-smoke:       ## seconds-scale paged + sharded + async engine smoke runs (CI gate)
 	PYTHONPATH=src $(PY) -m benchmarks.bench_smoke
+	PYTHONPATH=src $(PY) -m benchmarks.bench_table1 --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.bench_sharded --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.bench_async --smoke
 

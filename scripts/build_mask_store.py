@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Parallel offline mask-store builder (paper §6.4: one-time costs).
+
+Builds the packed dual-family (grammar_mask + grammar_strict) mask store
+for one or more grammars and publishes it through the fingerprinted disk
+cache that `build_mask_store` / the serving engine read at startup — or
+that `POST /grammars` hot-loads into a live engine.
+
+The per-DFA-state build is embarrassingly parallel: the global state
+range [0, total_dfa_states) is split into shards, each worker process
+computes `build_rows_shard(lo, hi)` against the shared precomputation
+(token byte-matrix + suffix-pmatch tables, built once in the parent and
+inherited by fork), and the parent concatenates shard outputs in
+global-state order — bit-for-bit identical to the serial build — then
+publishes atomically (temp file + os.replace, safe under concurrent
+builders).
+
+  PYTHONPATH=src python scripts/build_mask_store.py \
+      --grammar python_mini --vocab 1024 --workers 8 \
+      --cache-dir ~/.cache/repro-maskstores [--verify]
+
+`--verify` additionally runs the serial builder and asserts the packed
+arrays are identical (used by the CI grammar-build job).
+"""
+from __future__ import annotations
+
+import argparse
+import multiprocessing as mp
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+# worker state: populated in the parent BEFORE the fork so workers
+# inherit the compiled grammar + shared precomputation by COW instead of
+# pickling the (large) suffix tables per task
+_SHARED: dict = {}
+
+
+def _run_shard(bounds):
+    lo, hi = bounds
+    from repro.core.mask_store import build_rows_shard
+    return build_rows_shard(_SHARED["grammar"], _SHARED["tokenizer"],
+                            lo, hi, _SHARED["prep"])
+
+
+def _shards(total: int, n: int) -> list[tuple[int, int]]:
+    """Split [0, total) into n contiguous shards (last absorbs the rest).
+    Over-split ~2x the worker count for load balance: terminals' DFAs
+    differ wildly in live-state density, so equal state ranges are not
+    equal work."""
+    n = max(1, min(n, total))
+    step = max(1, total // n)
+    cuts = list(range(0, total, step)) + [total]
+    return [(cuts[i], cuts[i + 1]) for i in range(len(cuts) - 1)
+            if cuts[i] < cuts[i + 1]]
+
+
+def build_parallel(name: str, vocab: int, workers: int,
+                   cache_dir: str | None, verify: bool = False,
+                   verbose: bool = True):
+    import numpy as np
+
+    from repro.core.grammars import load_grammar
+    from repro.core.mask_store import (_prep, assemble_store,
+                                       build_rows_shard, load_cached_store)
+    from repro.core.tokenizer import ByteTokenizer
+
+    tok = ByteTokenizer(vocab)
+    g, _ = load_grammar(name)
+    cached = load_cached_store(g, tok, cache_dir)
+    if cached is not None and not verify:
+        if verbose:
+            print(f"[{name}] cache hit: {cached.meta['path']}")
+        return cached
+
+    t0 = time.time()
+    prep = _prep(g, tok)
+    total = g.total_dfa_states
+    bounds = _shards(total, workers * 2)
+    if workers > 1 and len(bounds) > 1:
+        _SHARED.update(grammar=g, tokenizer=tok, prep=prep)
+        # fork: workers inherit _SHARED; spawn would re-pickle the prep
+        # tables per worker and re-import jax in each child
+        with mp.get_context("fork").Pool(workers) as pool:
+            parts = pool.map(_run_shard, bounds)
+        _SHARED.clear()
+    else:
+        parts = [build_rows_shard(g, tok, lo, hi, prep)
+                 for lo, hi in bounds]
+    store = assemble_store(g, tok, parts, cache_dir=cache_dir,
+                           verbose=verbose, t0=t0)
+    if verify:
+        serial = build_rows_shard(g, tok, 0, total, prep)
+        want = np.concatenate([serial[0], serial[1]], axis=0)
+        if not np.array_equal(store.packed, want):
+            raise SystemExit(f"[{name}] FAIL: parallel build does not "
+                             f"match the serial build")
+        if verbose:
+            print(f"[{name}] verify: parallel == serial "
+                  f"({len(bounds)} shards, bit-exact)")
+    return store
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--grammar", action="append", default=None,
+                    help="grammar name (repeatable; default: all builtin)")
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--workers", type=int,
+                    default=max(1, (os.cpu_count() or 2) - 1))
+    ap.add_argument("--cache-dir", default=None,
+                    help="publish stores here (default: build only)")
+    ap.add_argument("--verify", action="store_true",
+                    help="also run the serial builder and assert the "
+                         "packed stores are bit-identical")
+    args = ap.parse_args(argv)
+
+    from repro.core.grammars import BUILTIN
+    names = args.grammar or list(BUILTIN)
+    for name in names:
+        store = build_parallel(name, args.vocab, args.workers,
+                               args.cache_dir, verify=args.verify)
+        meta = store.meta
+        if meta.get("cached"):
+            continue
+        print(f"[{name}] {meta['rows']} rows ({store.num_words} words), "
+              f"{meta['bytes'] / 1e6:.1f} MB, "
+              f"{meta['build_seconds']:.1f}s with {args.workers} workers"
+              + (f" -> {meta['path']}" if "path" in meta else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,12 @@ and applying them to the logits — runs on the accelerator
 (§5 Baselines, Beurer-Kellner et al. 2024): first let the model propose a
 token, and only compute the full mask if the proposal is syntactically
 invalid.
+
+Two mask modes select between the store's row families
+(docs/grammars.md): `grammar_mask` (default — the paper's sound
+overapproximation) and `grammar_strict` (terminal-boundary-aligned
+underapproximation; strict ⊆ mask bitwise). The mode is a single row-id
+offset added in `step_rows`; everything downstream is mode-oblivious.
 """
 from __future__ import annotations
 
@@ -59,14 +65,27 @@ class StepMask:
 class GrammarConstraint:
     """Per-sequence constrained-decoding state (owns an incremental parser)."""
 
+    MODES = ("grammar_mask", "grammar_strict")
+
     def __init__(self, grammar: Grammar, table: LRTable, store: MaskStore,
-                 tokenizer: ByteTokenizer, max_accept: int = MAX_ACCEPT):
+                 tokenizer: ByteTokenizer, max_accept: int = MAX_ACCEPT,
+                 mode: str = "grammar_mask"):
+        if mode not in self.MODES:
+            raise ValueError(f"unknown grammar mode {mode!r}; "
+                             f"expected one of {self.MODES}")
         self.grammar = grammar
         self.store = store
         self.tokenizer = tokenizer
         self.parser = IncrementalParser(grammar, table)
         self.max_accept = max_accept
+        self.mode = mode
         self._stride = store.row_stride
+        # the two approximation families share state addressing; the mode
+        # only selects which half of the packed store the row ids hit, so
+        # everything downstream (batched row matrices, the device union
+        # kernel, jump-forward popcounts) is mode-oblivious
+        self._mode_offset = (store.strict_offset
+                             if mode == "grammar_strict" else 0)
 
     def reset(self):
         self.parser.reset_cache()
@@ -85,7 +104,8 @@ class GrammarConstraint:
             q = dfa.walk_live(dfa.start, r)
             if not dfa.live[q]:
                 continue
-            base = (self.grammar.state_offset[t1] + q) * self._stride
+            base = ((self.grammar.state_offset[t1] + q) * self._stride
+                    + self._mode_offset)
             if len(seq) == 1:
                 rid = base
             else:

@@ -14,6 +14,11 @@ Supported surface syntax (subset of Lark):
   %ignore TERMINAL | "lit" | /re/
   %declare NAME (accepted, declared terminals get an impossible-match DFA
                  unless defined elsewhere)
+  %indent NEWLINE_TERM INDENT_TERM DEDENT_TERM (opt into the layout-
+                 sensitive post-lex pass in core/lexer.py: the named
+                 NEWLINE terminal must have a lexer definition; the
+                 INDENT/DEDENT terminals are auto-%declare'd and are
+                 synthesized, never lexed)
   // comments
 """
 from __future__ import annotations
@@ -275,6 +280,9 @@ class Grammar:
         self.start = start
         self.terminals: dict[str, Terminal] = {}
         self.ignores: list[str] = []
+        # (newline_term, indent_term, dedent_term) when the grammar is
+        # layout-sensitive (%indent); None otherwise.
+        self.indent_spec: Optional[tuple[str, str, str]] = None
         self.productions: list[Production] = []
         self.nonterminals: set[str] = set()
         self._helper_counter = 0
@@ -305,6 +313,19 @@ class Grammar:
                     while p.peek()[0] == "NAME":
                         name = p.next()[1]
                         self._term_defs.setdefault(name, ([], 0))
+                elif v == "%indent":
+                    names = []
+                    while p.peek()[0] == "NAME":
+                        names.append(p.next()[1])
+                    if len(names) != 3:
+                        raise GrammarError(
+                            "%indent takes exactly three terminal names: "
+                            "NEWLINE INDENT DEDENT")
+                    self.indent_spec = tuple(names)
+                    # INDENT/DEDENT are synthesized by the post-lex pass;
+                    # they participate in parsing but never in lexing.
+                    for synth in names[1:]:
+                        self._term_defs.setdefault(synth, ([], 0))
                 elif v == "%import":
                     # consume rest of line
                     while p.peek()[0] not in ("NL", "EOF"):
@@ -341,6 +362,12 @@ class Grammar:
 
         if self.start not in self.nonterminals:
             raise GrammarError(f"no start rule {self.start!r}")
+        if self.indent_spec is not None:
+            nl_alts, _ = self._term_defs.get(self.indent_spec[0], ([], 0))
+            if not nl_alts:
+                raise GrammarError(
+                    f"%indent newline terminal {self.indent_spec[0]!r} "
+                    "has no lexer definition")
 
     def _atom_terminal_name(self, atom) -> str:
         kind = atom[0]
@@ -589,6 +616,8 @@ class Grammar:
         self.term_id = {t: i for i, t in enumerate(self.terminal_names)}
         self.parse_terminals = [t for t in self.terminal_names
                                 if t not in self.ignores]
+        self.synthetic_terminals = (frozenset(self.indent_spec[1:])
+                                    if self.indent_spec else frozenset())
         # global DFA state numbering for the mask store: concatenate all
         # terminal DFAs; states of terminal i are offset by state_offset[i]
         self.state_offset: dict[str, int] = {}

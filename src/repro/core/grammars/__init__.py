@@ -16,7 +16,7 @@ from .builtin_defs import EMBEDDED
 _DIR = os.path.dirname(__file__)
 _CACHE: dict[tuple[str, bool], tuple] = {}
 
-BUILTIN = ("json", "calc", "sql", "minilang", "jsonmsg")
+BUILTIN = ("json", "calc", "sql", "minilang", "jsonmsg", "python_mini")
 
 
 def grammar_text(name: str) -> str:

@@ -107,10 +107,87 @@ ARG: /"[a-z0-9_]{1,8}"/
 NUMBER: /[0-9]{1,4}/
 """
 
+PYTHON_MINI = r"""
+// A real-language target: a Python subset with layout-sensitive lexing
+// (%indent). Designed so that anything the masked decoder completes is
+// ast.parse()-able CPython:
+//   * assignment targets are NAME only (keeps the grammar LALR(1): '='
+//     appears nowhere else, '==' is the comparison operator);
+//   * 'return' is only reachable inside function suites (fstmt/fsuite
+//     mirror stmt/suite) — no return-outside-function SyntaxError;
+//   * non-grammar Python keywords are claimed by RESERVED (priority 2,
+//     referenced by an unreachable rule so it joins the lexer DFA) —
+//     'break = 1' is a lex-level dead end, not a generated program;
+//   * integer literals ban leading zeros; string escapes are a safe
+//     subset valid in str AND bytes literals; strings/comments are
+//     printable-ASCII, and no terminal matches TAB or CR, so the
+//     byte-level column count always agrees with CPython's tokenizer.
+start: program
+program: stmt*
+
+stmt: simple_stmt
+    | "if" test ":" suite ("elif" test ":" suite)* ["else" ":" suite]
+    | "while" test ":" suite
+    | "for" NAME "in" test ":" suite
+    | func_def
+    | class_def
+
+fstmt: fsimple_stmt
+    | "if" test ":" fsuite ("elif" test ":" fsuite)* ["else" ":" fsuite]
+    | "while" test ":" fsuite
+    | "for" NAME "in" test ":" fsuite
+    | func_def
+    | class_def
+
+simple_stmt: small_stmt NEWLINE
+fsimple_stmt: small_stmt NEWLINE | "return" [test] NEWLINE
+small_stmt: expr_stmt | "pass"
+expr_stmt: test | NAME "=" test
+
+func_def: "def" NAME "(" [params] ")" ":" fsuite
+params: NAME ("," NAME)*
+class_def: "class" NAME ["(" [args] ")"] ":" suite
+
+suite: simple_stmt | NEWLINE INDENT stmt+ DEDENT
+fsuite: fsimple_stmt | NEWLINE INDENT fstmt+ DEDENT
+
+test: or_test
+or_test: and_test ("or" and_test)*
+and_test: not_test ("and" not_test)*
+not_test: "not" not_test | comparison
+comparison: arith (comp_op arith)*
+comp_op: "==" | "!=" | "<" | ">" | "<=" | ">=" | "in" | "not" "in" | "is" | "is" "not"
+arith: term (("+" | "-") term)*
+term: factor (("*" | "/" | "//" | "%") factor)*
+factor: "+" factor | "-" factor | power
+power: atom_expr ["**" factor]
+atom_expr: atom trailer*
+trailer: "(" [args] ")" | "[" test "]" | "." NAME
+args: test ("," test)*
+atom: NAME | NUMBER | STRING | "True" | "False" | "None"
+    | "(" test ")" | "[" [args] "]"
+
+// unreachable: exists only so RESERVED participates in the lexer DFA
+reserved_unreachable: RESERVED
+
+NAME: /[A-Za-z_][A-Za-z0-9_]*/
+RESERVED.2: /as|assert|async|await|break|continue|del|except|finally|from|global|import|lambda|nonlocal|raise|try|with|yield/
+NUMBER: /(0|[1-9][0-9]*)([eE][+-]?[0-9]+)?|[0-9]+\.[0-9]*([eE][+-]?[0-9]+)?|\.[0-9]+([eE][+-]?[0-9]+)?/
+STRING: /(r|R|b|B|u|U|rb|rB|Rb|RB|br|bR|Br|BR)?("(\\[\\'"nrtfvab0]|[ !#-\[\]-~])*"|'(\\[\\'"nrtfvab0]|[ -&(-\[\]-~])*')/
+NEWLINE: /(\n[ ]*|#[ -~]*)+/
+WS: / +/
+LINE_CONT: /\\\n[ ]*/
+
+%indent NEWLINE INDENT DEDENT
+%ignore WS
+%ignore LINE_CONT
+"""
+
 EMBEDDED: dict[str, str] = {
     "json": JSON,
     "calc": CALC,
     "sql": SQL,
     "minilang": MINILANG,
     "jsonmsg": JSONMSG,
+    "python_mini": PYTHON_MINI,
 }

@@ -12,6 +12,25 @@ remainder cases:
 
 A dead suffix (no terminal can ever match) raises LexError — such a
 string is not in L_p(G) for any grammar over these terminals.
+
+For layout-sensitive grammars (`%indent NEWLINE INDENT DEDENT`),
+`postlex_indent` runs after `lex_partial` and synthesizes INDENT/DEDENT
+tokens around committed NEWLINE tokens, Python-tokenizer style:
+
+* the NEWLINE terminal's lexeme carries the following line's leading
+  spaces (and any comments / blank lines it absorbed); its indentation
+  column is compared against an indent stack;
+* a trailing NEWLINE whose lexeme may still grow (mid-generation the
+  text often ends inside `"\n    "`) is returned as *pending* — its
+  indent effect is deliberately uncommitted so partial inputs never
+  commit to an indent level the next token could still change;
+* NEWLINE tokens inside unclosed brackets are dropped (implicit line
+  joining);
+* leading blank/comment lines emit no NEWLINE.
+
+The indent stack counts leading spaces only; the column of a committed
+line that matches no enclosing level raises IndentationError (a
+LexError — such text is not in L_p(G)).
 """
 from __future__ import annotations
 
@@ -24,6 +43,10 @@ class LexError(ValueError):
     def __init__(self, msg, pos=None):
         super().__init__(msg)
         self.pos = pos
+
+
+class IndentationError_(LexError):
+    """Committed line indentation matches no enclosing level."""
 
 
 @dataclass
@@ -72,3 +95,115 @@ def lex_partial(grammar: Grammar, data: bytes):
         tokens.append(LexToken(last_tag, data[pos:last_acc], pos))
         pos = last_acc
     return tokens, b""
+
+
+# --------------------------------------------------------------------------
+# Indentation post-lex pass (%indent grammars)
+# --------------------------------------------------------------------------
+
+_OPENERS = (b"(", b"[", b"{")
+_CLOSERS = (b")", b"]", b"}")
+
+
+@dataclass
+class IndentResult:
+    """Output of `postlex_indent`.
+
+    tokens:  committed token stream with INDENT/DEDENT synthesized and
+             bracket-joined NEWLINEs dropped — safe to feed the parser.
+    pending: the trailing NEWLINE token whose lexeme may still grow
+             (partial input, bracket depth 0), indent effect NOT yet
+             applied; None when the tail is committed or at_eof.
+    levels:  the committed indent stack (always starts with 0).
+    paren:   unclosed-bracket depth over the committed tokens.
+    has_content: a committed non-ignored, non-synthetic token exists
+             (controls leading-NEWLINE suppression and the EOF closure).
+    """
+    tokens: list
+    pending: "LexToken | None"
+    levels: tuple
+    paren: int
+    has_content: bool
+
+
+def _indent_col(value: bytes) -> "int | None":
+    """Column opened by a committed NEWLINE lexeme: spaces after its last
+    newline byte. None when the lexeme holds no newline (a pure trailing
+    comment — only possible at the very end of the input)."""
+    i = value.rfind(b"\n")
+    if i < 0:
+        return None
+    col = 0
+    j = i + 1
+    while j < len(value) and value[j] == 0x20:
+        col += 1
+        j += 1
+    return col
+
+
+def postlex_indent(grammar: Grammar, toks: list, unlexed: bytes = b"",
+                   at_eof: bool = False) -> IndentResult:
+    """Synthesize INDENT/DEDENT for an `%indent` grammar.
+
+    Partial-input safety: a trailing NEWLINE token that could still be
+    extended by future bytes (more spaces deepen the line, a fresh
+    newline resets it entirely) is returned as `pending` instead of
+    committing an indent decision. Every non-trailing NEWLINE is
+    committed — its lexeme was terminated by a real token, so its column
+    can never change again.
+
+    With `at_eof=True` (whole-input recognition) the Python-tokenizer EOF
+    closure is applied instead: a final NEWLINE (the last logical line
+    needs no trailing newline byte) followed by one DEDENT per open
+    level.
+    """
+    nl_t, ind_t, ded_t = grammar.indent_spec
+    ignores = set(grammar.ignores)
+    out: list[LexToken] = []
+    levels = [0]
+    paren = 0
+    has_content = False
+    pending = None
+    n = len(toks)
+    for i, t in enumerate(toks):
+        if t.type == nl_t:
+            if paren > 0:
+                continue                    # implicit line joining
+            if i == n - 1 and not unlexed:
+                pending = t                 # open tail: defer the decision
+                break
+            end = t.pos + len(t.value)
+            if has_content:
+                out.append(t)
+            col = _indent_col(t.value)
+            if col is None:
+                continue
+            if col > levels[-1]:
+                levels.append(col)
+                out.append(LexToken(ind_t, b"", end))
+            else:
+                while col < levels[-1]:
+                    levels.pop()
+                    out.append(LexToken(ded_t, b"", end))
+                if col != levels[-1]:
+                    raise IndentationError_(
+                        f"unindent to column {col} at byte {t.pos} matches "
+                        f"no enclosing indentation level", pos=t.pos)
+            continue
+        out.append(t)
+        if t.type not in ignores:
+            has_content = True
+            if len(t.value) == 1:
+                if t.value in _OPENERS:
+                    paren += 1
+                elif t.value in _CLOSERS and paren > 0:
+                    paren -= 1
+    if at_eof:
+        end = (toks[-1].pos + len(toks[-1].value)) if toks else 0
+        if has_content and paren == 0:
+            out.append(LexToken(nl_t, b"", end))
+            while len(levels) > 1:
+                levels.pop()
+                out.append(LexToken(ded_t, b"", end))
+        pending = None
+    return IndentResult(out, pending, tuple(levels), paren, has_content)

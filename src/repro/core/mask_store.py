@@ -19,9 +19,31 @@ gather steps over the transition table. Complexity matches the paper's
 O(|Q_Ω|·|V|·|Γ|^α) with tiny constants; stores are cached on disk keyed by
 (grammar, vocab) fingerprints (paper §6.4 reports one-time costs only).
 
+The store holds TWO row families over the same state addressing:
+
+  * grammar_mask rows (the paper's dmatch, OVERapproximate): a token is
+    kept if any tokenization could keep the text in L_p(G) — including
+    tokens that overshoot a terminal boundary into arbitrary bytes
+    (cond 2 / the "rest of t is arbitrary" allowance of cond 3).
+  * grammar_strict rows (UNDERapproximate, terminal-boundary-aligned):
+    the overshoot allowances are dropped — a token survives only if its
+    bytes walk entirely inside the current terminal (cond 1), or split
+    exactly once at a final state of the current terminal with the rest
+    walking live inside the single lookahead terminal τ'. Strict masks
+    never admit a token the mask family bans (strict ⊆ mask, bitwise),
+    at the cost of banning some tokens an exact oracle would allow.
+
 Row layout (used by the serving kernel): row(q, α=0) = q·(|Γ|+1);
-row(q, τ') = q·(|Γ|+1) + 1 + tid(τ'). Packed as uint32 little-endian
-bit-words: word w bit b ⇔ token id w·32+b.
+row(q, τ') = q·(|Γ|+1) + 1 + tid(τ'). The strict family is the same
+layout shifted by `strict_offset` = total_states·(|Γ|+1); the packed
+array is [2R, W]. Packed as uint32 little-endian bit-words: word w bit
+b ⇔ token id w·32+b.
+
+The per-state build is shardable: `build_rows_shard` computes the rows
+for any global-state range (the offline parallel builder
+`scripts/build_mask_store.py` farms shards to worker processes) and
+`assemble_store` concatenates shard outputs and atomically publishes
+the store through the fingerprinted disk cache.
 """
 from __future__ import annotations
 
@@ -39,7 +61,7 @@ from .tokenizer import ByteTokenizer, EOS_ID, PAD_ID
 # whenever the packed representation changes (word dtype, bit order, row
 # addressing, padding) so stale caches written by an older layout MISS
 # instead of being loaded as garbage masks.
-STORE_LAYOUT_VERSION = 2
+STORE_LAYOUT_VERSION = 3
 
 
 class MaskStore:
@@ -51,6 +73,8 @@ class MaskStore:
         self.meta = meta
         self.num_terminals = len(grammar.terminal_names)
         self.row_stride = self.num_terminals + 1
+        # the strict family occupies the second half of the packed array
+        self.strict_offset = packed.shape[0] // 2
         self._row_pc = None             # lazy per-row popcounts (spec path)
         self._fb = None                 # lazy first-byte -> vocab bitmask
 
@@ -58,12 +82,16 @@ class MaskStore:
     def global_state(self, terminal: str, q: int) -> int:
         return self.grammar.state_offset[terminal] + q
 
-    def row_m0(self, terminal: str, q: int) -> int:
-        return self.global_state(terminal, q) * self.row_stride
+    def row_m0(self, terminal: str, q: int, strict: bool = False) -> int:
+        off = self.strict_offset if strict else 0
+        return self.global_state(terminal, q) * self.row_stride + off
 
-    def row_m1(self, terminal: str, q: int, next_terminal: str) -> int:
+    def row_m1(self, terminal: str, q: int, next_terminal: str,
+               strict: bool = False) -> int:
         tid = self.grammar.term_id[next_terminal]
-        return self.global_state(terminal, q) * self.row_stride + 1 + tid
+        off = self.strict_offset if strict else 0
+        return (self.global_state(terminal, q) * self.row_stride
+                + 1 + tid + off)
 
     # ---- host-side mask ops (reference; device path is in kernels/) ----
     def union_rows(self, rows) -> np.ndarray:
@@ -179,48 +207,50 @@ def _fingerprint(grammar: Grammar, tok: ByteTokenizer) -> str:
     return h.hexdigest()[:16]
 
 
-def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,
-                     cache_dir: str | None = None,
-                     verbose: bool = False) -> MaskStore:
-    fp = _fingerprint(grammar, tokenizer)
-    if cache_dir:
-        path = os.path.join(cache_dir, f"maskstore_{grammar.name}_{fp}.npz")
-        if os.path.exists(path):
-            z = np.load(path)
-            return MaskStore(grammar, tokenizer, z["packed"],
-                             {"cached": True, "path": path})
+class _Prep:
+    """Shared per-(grammar, vocab) precomputation reused by every shard:
+    the padded token byte-matrix and the packed suffix-pmatch tables for
+    both row families."""
+    __slots__ = ("V", "L", "T", "tok_len", "nonempty", "terms", "G",
+                 "stride", "lanes", "S_bits", "Ss_bits")
 
-    t0 = time.time()
-    V = tokenizer.vocab_size
+
+def _prep(grammar: Grammar, tokenizer: ByteTokenizer) -> _Prep:
+    p = _Prep()
+    V = p.V = tokenizer.vocab_size
     toks = tokenizer.token_bytes()
-    L = max(1, max(len(b) for b in toks))
-    T = np.zeros((V, L), dtype=np.int32)
-    tok_len = np.zeros(V, dtype=np.int32)
+    L = p.L = max(1, max(len(b) for b in toks))
+    if L + 1 > 64:
+        raise ValueError("token length > 63 unsupported by packed build")
+    T = p.T = np.zeros((V, L), dtype=np.int32)
+    tok_len = p.tok_len = np.zeros(V, dtype=np.int32)
     for i, b in enumerate(toks):
         tok_len[i] = len(b)
         if b:
             T[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
     # special tokens (len 0) must never be "valid": we make their rows 0
-    nonempty = tok_len > 0
+    nonempty = p.nonempty = tok_len > 0
 
-    terms = grammar.terminal_names
-    G = len(terms)
-    stride = G + 1
+    terms = p.terms = grammar.terminal_names
+    G = p.G = len(terms)
+    p.stride = G + 1
 
-    # ---- per-terminal suffix pmatch table S[g, v, i] =
-    #      dmatch(t[i:], start(τ_g), ()) for i in 0..L  (i > len -> False)
-    # Packed over the split index i into uint64 bit-lanes so the per-state
-    # M1 computation is a single AND+nonzero over [G, V] (instead of a
-    # [G, V, L] reduction) — TPU-thinking applied to the host build.
-    if L + 1 > 64:
-        raise ValueError("token length > 63 unsupported by packed build")
+    # ---- per-terminal suffix pmatch tables S[g, v, i]:
+    #   mask family   — dmatch(t[i:], start(τ_g), ()) (end live OR a
+    #                   proper prefix of the suffix lands in F)
+    #   strict family — the suffix's ENTIRE walk stays live (no
+    #                   overshoot past a terminal boundary)
+    # for i in 0..L (i > len -> False). Packed over the split index i
+    # into uint64 bit-lanes so the per-state M1 computation is a single
+    # AND+nonzero over [G, V] (instead of a [G, V, L] reduction) —
+    # TPU-thinking applied to the host build.
     S = np.zeros((G, V, L + 1), dtype=bool)
+    Ss = np.zeros((G, V, L + 1), dtype=bool)
     for g, name in enumerate(terms):
         dfa = grammar.terminals[name].dfa
         trans, finals, live = dfa.trans, dfa.finals, dfa.live
-        # suffix walk: states[v, i] after consuming t[i:]? Cheaper: for each
-        # start position i, walk from q0 over t[i:]. We do it by iterating
-        # start positions; each walk is <= L steps over [V] vectors.
+        # suffix walk: for each start position i, walk from q0 over
+        # t[i:]; each walk is <= L steps over [V] vectors.
         for i in range(L + 1):
             ok = tok_len >= i
             st = np.full(V, dfa.start, dtype=np.int32)
@@ -231,27 +261,57 @@ def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,
                 st_new = trans[st, T[:, j]]
                 st = np.where(act, st_new, st)
             end_live = live[st]
-            # dmatch(suffix, q0, ()) = end live (cond1) or proper-prefix in F
-            # (cond2, needs nonempty rest which "strictly before end" gives)
-            S[g, :, i] = ok & nonempty & (end_live | hitF)
+            base_ok = ok & nonempty
+            # mask: dmatch(suffix, q0, ()) = end live (cond1) or
+            # proper-prefix in F (cond2); strict: end live only
+            S[g, :, i] = base_ok & (end_live | hitF)
+            Ss[g, :, i] = base_ok & end_live
             # note: empty suffix (i == len): cond1 with ε -> q0 live == True
-            isempty = tok_len == i
-            S[g, :, i] |= isempty & live[dfa.start]
+            isempty = (tok_len == i) & live[dfa.start]
+            S[g, :, i] |= isempty
+            Ss[g, :, i] |= isempty
         # tokens shorter than i already masked by ok
 
     # bit-pack S over the split axis: S_bits[g, v] bit i <-> S[g, v, i]
-    lanes = (np.uint64(1) << np.arange(L + 1, dtype=np.uint64))
-    S_bits = (S.astype(np.uint64) * lanes[None, None, :]).sum(axis=2,
-                                                              dtype=np.uint64)
+    lanes = p.lanes = (np.uint64(1) << np.arange(L + 1, dtype=np.uint64))
+    p.S_bits = (S.astype(np.uint64) * lanes[None, None, :]).sum(
+        axis=2, dtype=np.uint64)
+    p.Ss_bits = (Ss.astype(np.uint64) * lanes[None, None, :]).sum(
+        axis=2, dtype=np.uint64)
+    return p
 
-    # ---- per-state rows
-    total_states = grammar.total_dfa_states
-    rows = np.zeros((total_states * stride, V), dtype=bool)
-    for name in terms:
+
+def _pack_rows(rows: np.ndarray, V: int) -> np.ndarray:
+    """[rows, V] bool -> [rows, W] uint32, little-endian bit-words."""
+    Wbits = ((V + 31) // 32) * 32
+    padded = np.zeros((rows.shape[0], Wbits), dtype=bool)
+    padded[:, :V] = rows
+    packed = np.packbits(padded, axis=1, bitorder="little")
+    return np.ascontiguousarray(packed).view(np.uint32)
+
+
+def build_rows_shard(grammar: Grammar, tokenizer: ByteTokenizer,
+                     lo: int, hi: int, prep: _Prep | None = None):
+    """Packed rows for the global DFA states [lo, hi).
+
+    Returns (mask_packed, strict_packed), each uint32 of shape
+    [(hi-lo)·stride, W]. Shards concatenated in global-state order
+    reproduce the full store bit-for-bit regardless of how the range
+    [0, total_dfa_states) was split — the parallel offline builder
+    relies on this.
+    """
+    p = prep if prep is not None else _prep(grammar, tokenizer)
+    V, L, T, tok_len = p.V, p.L, p.T, p.tok_len
+    nonempty, G, stride, lanes = p.nonempty, p.G, p.stride, p.lanes
+    n = hi - lo
+    mask_rows = np.zeros((n * stride, V), dtype=bool)
+    strict_rows = np.zeros((n * stride, V), dtype=bool)
+    pos = np.arange(L + 1)[None, :]
+    for name in p.terms:
         dfa = grammar.terminals[name].dfa
         trans, finals, live = dfa.trans, dfa.finals, dfa.live
         off = grammar.state_offset[name]
-        for q in range(dfa.num_states):
+        for q in range(max(0, lo - off), min(dfa.num_states, hi - off)):
             if not live[q]:
                 continue  # dead-state rows stay all-zero (never queried)
             st = np.full(V, q, dtype=np.int32)
@@ -264,36 +324,43 @@ def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,
                 st = np.where(act, st_new, st)
                 hitF_at[:, j + 1] = act & finals[st]
             end_live = live[st] & nonempty
-            pos = np.arange(L + 1)[None, :]
-            valid_split = pos <= tok_len[:, None]
             proper = hitF_at & (pos < tok_len[:, None])   # strict prefix in F
-            anyF = hitF_at & valid_split                  # any prefix incl. full
-            base = off + q
-            # M0: cond1 | cond2
-            rows[base * stride] = end_live | proper.any(axis=1)
-            # M1[τ']: cond1 | (split in F and suffix pmatches τ')
+            anyF = hitF_at & (pos <= tok_len[:, None])    # any prefix incl. full
             anyF_bits = (anyF.astype(np.uint64) *
                          lanes[None, :]).sum(axis=1, dtype=np.uint64)
-            m1 = (S_bits & anyF_bits[None, :]) != 0
-            rows[base * stride + 1: base * stride + 1 + G] = m1 | end_live
+            r0 = (off + q - lo) * stride
+            # mask M0: cond1 | cond2; strict M0: cond1 only (the token
+            # must stay inside the current terminal)
+            mask_rows[r0] = end_live | proper.any(axis=1)
+            strict_rows[r0] = end_live
+            # M1[τ']: cond1 | (split in F and suffix pmatches τ'), with
+            # the family's own suffix table
+            m1 = (p.S_bits & anyF_bits[None, :]) != 0
+            m1s = (p.Ss_bits & anyF_bits[None, :]) != 0
+            mask_rows[r0 + 1: r0 + 1 + G] = m1 | end_live
+            strict_rows[r0 + 1: r0 + 1 + G] = m1s | end_live
 
     # never allow specials through the grammar mask (EOS handled separately)
-    rows[:, ~nonempty] = False
+    mask_rows[:, ~nonempty] = False
+    strict_rows[:, ~nonempty] = False
+    return _pack_rows(mask_rows, V), _pack_rows(strict_rows, V)
 
-    # pack little-endian
-    Wbits = ((V + 31) // 32) * 32
-    padded = np.zeros((rows.shape[0], Wbits), dtype=bool)
-    padded[:, :V] = rows
-    packed = np.packbits(padded, axis=1, bitorder="little")
-    packed = packed.view(np.uint32) if packed.flags["C_CONTIGUOUS"] else \
-        np.ascontiguousarray(packed).view(np.uint32)
 
+def assemble_store(grammar: Grammar, tokenizer: ByteTokenizer, parts,
+                   cache_dir: str | None = None, verbose: bool = False,
+                   t0: float | None = None) -> MaskStore:
+    """Concatenate shard outputs (in global-state order, covering the
+    whole state space) into the [2R, W] packed array and publish it
+    atomically through the disk cache."""
+    fp = _fingerprint(grammar, tokenizer)
+    packed = np.concatenate([part[0] for part in parts] +
+                            [part[1] for part in parts], axis=0)
     meta = {
-        "build_seconds": time.time() - t0,
-        "rows": rows.shape[0],
+        "build_seconds": time.time() - (t0 if t0 is not None else time.time()),
+        "rows": int(packed.shape[0]),
         "bytes": int(packed.nbytes),
         "grammar": grammar.name,
-        "vocab": V,
+        "vocab": tokenizer.vocab_size,
         "cached": False,
     }
     if verbose:
@@ -302,6 +369,7 @@ def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,
               f"{meta['build_seconds']:.1f}s")
     if cache_dir:
         os.makedirs(cache_dir, exist_ok=True)
+        path = os.path.join(cache_dir, f"maskstore_{grammar.name}_{fp}.npz")
         # atomic publish, safe under concurrent multi-process (and
         # multi-thread) builds: mkstemp gives each writer a private
         # temp file in the SAME directory (os.replace must not cross
@@ -325,3 +393,31 @@ def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,
                 pass
         meta["path"] = path
     return MaskStore(grammar, tokenizer, packed, meta)
+
+
+def load_cached_store(grammar: Grammar, tokenizer: ByteTokenizer,
+                      cache_dir: str | None) -> "MaskStore | None":
+    """The cache-hit path, shared by the serial and parallel builders."""
+    if not cache_dir:
+        return None
+    fp = _fingerprint(grammar, tokenizer)
+    path = os.path.join(cache_dir, f"maskstore_{grammar.name}_{fp}.npz")
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    return MaskStore(grammar, tokenizer, z["packed"],
+                     {"cached": True, "path": path})
+
+
+def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,
+                     cache_dir: str | None = None,
+                     verbose: bool = False) -> MaskStore:
+    cached = load_cached_store(grammar, tokenizer, cache_dir)
+    if cached is not None:
+        return cached
+    t0 = time.time()
+    prep = _prep(grammar, tokenizer)
+    part = build_rows_shard(grammar, tokenizer, 0,
+                            grammar.total_dfa_states, prep)
+    return assemble_store(grammar, tokenizer, [part],
+                          cache_dir=cache_dir, verbose=verbose, t0=t0)

@@ -15,7 +15,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .grammar import END, Grammar
-from .lexer import LexError, LexToken, lex_partial
+from .lexer import LexError, LexToken, lex_partial, postlex_indent
 from .lr import LRTable, build_lr_table
 
 
@@ -130,6 +130,8 @@ class IncrementalParser:
 
     def partial_parse(self, data: bytes, incremental: bool = True) -> ParseResult:
         toks, unlexed = lex_partial(self.grammar, data)
+        if self.grammar.indent_spec is not None:
+            return self._partial_parse_indent(toks, unlexed, incremental)
         ignores = self.ignores
 
         if unlexed:
@@ -192,6 +194,136 @@ class IncrementalParser:
         return ParseResult(self._cap(seqs), lf.value, eos_allowed=eos,
                            tokens=toks, case=1)
 
+    # ---------------- indent-aware partial parse (%indent grammars) -------
+
+    def _indent_eof_ok(self, stack: tuple, levels: tuple, paren: int,
+                       has_content: bool) -> bool:
+        """EOF closure: the last logical line needs no trailing newline
+        byte — emit an implicit NEWLINE (when any content exists), then
+        one DEDENT per open level, then END must be shiftable."""
+        if paren > 0:
+            return False
+        nl_t, _ind_t, ded_t = self.grammar.indent_spec
+        s = list(stack)
+        if has_content and not self._shift(s, nl_t):
+            return False
+        for _ in range(len(levels) - 1):
+            if not self._shift(s, ded_t):
+                return False
+        return self._can_shift(tuple(s), END)
+
+    def _partial_parse_indent(self, toks: list, unlexed: bytes,
+                              incremental: bool) -> ParseResult:
+        g = self.grammar
+        nl_t, ind_t, ded_t = g.indent_spec
+        synth = g.synthetic_terminals
+        res = postlex_indent(g, toks, unlexed)
+        parse_all = [t for t in res.tokens if t.type not in self.ignores]
+
+        def accepts(stack: tuple) -> list:
+            # INDENT/DEDENT are zero-width — they never head an accept
+            # sequence (no byte can lex into them); the pending-NEWLINE
+            # branch expansion below accounts for them instead.
+            return [t for t in self.accept_terminals(stack)
+                    if t not in synth]
+
+        def parse(ts):
+            return (self._parse_tokens(ts) if incremental
+                    else self.parse_from_scratch_stack(ts))
+
+        if unlexed:
+            # Case 2: everything lexed is committed (new bytes extend the
+            # unlexed suffix, never a committed token).
+            stack = parse(parse_all)
+            seqs = [(t,) for t in accepts(stack)]
+            seqs += [(ig,) for ig in g.ignores]
+            return ParseResult(self._cap(seqs), unlexed, eos_allowed=False,
+                               tokens=toks, case=2)
+
+        if res.pending is not None:
+            # Trailing NEWLINE with its indent level still open: the next
+            # line may land on the current level, one deeper (INDENT), or
+            # any enclosing one (DEDENT+) — and more newline/comment bytes
+            # may extend the lexeme first. Union the accept sets over all
+            # reachable branches; the exact oracle re-checks on commit.
+            stack0 = parse(parse_all)
+            has = any(t.type not in synth for t in parse_all)
+            if has:
+                s = list(stack0)
+                if not self._shift(s, nl_t):
+                    raise ParseError(
+                        f"unexpected {nl_t} at byte {res.pending.pos}")
+                s1 = tuple(s)
+            else:
+                s1 = stack0     # leading blank/comment lines: no NEWLINE
+            branch = list(accepts(s1))
+            s = list(s1)
+            if self._shift(s, ind_t):
+                branch += accepts(tuple(s))
+            s = list(s1)
+            for _ in range(len(res.levels) - 1):
+                if not self._shift(s, ded_t):
+                    break
+                branch += accepts(tuple(s))
+            seqs = [(nl_t, t1) for t1 in dict.fromkeys(branch)]
+            seqs += [(nl_t, ig) for ig in g.ignores]
+            eos = self._indent_eof_ok(stack0, res.levels, res.paren, has)
+            return ParseResult(self._cap(seqs), res.pending.value,
+                               eos_allowed=eos, tokens=toks, case=1)
+
+        if toks and toks[-1].type == nl_t and res.paren > 0:
+            # Trailing NEWLINE inside brackets: dropped from the parse
+            # (implicit line joining) but still the lexical remainder.
+            stack0 = parse(parse_all)
+            seqs = [(nl_t, t1) for t1 in accepts(stack0)]
+            seqs += [(nl_t, ig) for ig in g.ignores]
+            return ParseResult(self._cap(seqs), toks[-1].value,
+                               eos_allowed=False, tokens=toks, case=1)
+
+        if not toks:
+            stack = parse([])
+            a0 = accepts(stack)
+            seqs = [(t,) for t in a0] + [(ig,) for ig in g.ignores]
+            return ParseResult(self._cap(seqs), b"",
+                               eos_allowed=self._can_shift(stack, END),
+                               tokens=toks, case=1)
+
+        # Case 1 with a real (or ignored) final token: identical to the
+        # flat-grammar path, except the head went through the post-lexer
+        # and EOS uses the EOF closure.
+        lf = toks[-1]
+        head_parse = [t for t in res.tokens[:-1] if t.type not in self.ignores]
+        stack0 = parse(head_parse)
+        a0 = accepts(stack0)
+        has_head = any(t.type not in synth for t in head_parse)
+
+        shifted = True
+        if lf.type in self.ignores:
+            eos = self._indent_eof_ok(stack0, res.levels, res.paren, has_head)
+            a1 = a0
+        else:
+            s = list(stack0)
+            if self._shift(s, lf.type):
+                stack1 = tuple(s)
+                eos = self._indent_eof_ok(stack1, res.levels, res.paren, True)
+                a1 = accepts(stack1)
+            else:
+                shifted = False
+                eos = False
+                a1 = []
+                if not a0:
+                    raise ParseError(
+                        f"unexpected {lf.type} ({lf.value!r}) at byte "
+                        f"{lf.pos}: no acceptable terminals")
+
+        seqs = []
+        if shifted:
+            seqs += [(lf.type, t1) for t1 in a1]
+            seqs += [(lf.type, ig) for ig in g.ignores]
+        seqs += [(t0,) for t0 in a0 if t0 != lf.type]
+        return ParseResult(self._cap(seqs), lf.value, eos_allowed=eos,
+                           tokens=toks, case=1)
+
     def _cap(self, seqs):
         # dedupe, keep order
         seen = set()
@@ -214,6 +346,14 @@ class IncrementalParser:
             return False
         if unlexed:
             return False
+        if self.grammar.indent_spec is not None:
+            try:
+                res = postlex_indent(self.grammar, toks, b"", at_eof=True)
+            except LexError:
+                return False
+            if res.paren > 0:
+                return False
+            toks = res.tokens
         parse_toks = [t for t in toks if t.type not in self.ignores]
         stack = [self.table.start_state]
         for t in parse_toks:

@@ -101,10 +101,31 @@ class GrammarSampler:
         self.min_depth = _min_depths(grammar)
         self.max_terminal_len = max_terminal_len
         self._needs_space_cache: dict[tuple, bool] = {}
+        # layout-sensitive (%indent) grammars: INDENT/DEDENT are synthetic
+        # (no lexeme of their own) and NEWLINE lexemes must carry the
+        # following line's indentation, so the sampler renders them
+        # canonically instead of sampling their DFAs.
+        self._indent = grammar.indent_spec
+        self._level = 0
+        self._nl_buf = b""
 
     def _expand(self, sym: str, budget: int, out: list[bytes]):
         g = self.grammar
         if sym not in g.nonterminals:
+            if self._indent is not None:
+                nl_t, ind_t, ded_t = self._indent
+                if sym == ind_t:
+                    self._level += 4
+                    return
+                if sym == ded_t:
+                    self._level = max(0, self._level - 4)
+                    return
+                if sym == nl_t:
+                    # buffered: the newline and the next line's indent must
+                    # reach the glue step as ONE piece, so no separator can
+                    # be inserted inside the NEWLINE lexeme
+                    self._nl_buf = b"\n"
+                    return
             dfa = g.terminals[sym].dfa
             from .lexer import LexError, lex_partial
             for _ in range(50):
@@ -117,6 +138,9 @@ class GrammarSampler:
                 except LexError:
                     continue
                 if not rem and len(toks) == 1 and toks[0].type == sym:
+                    if self._indent is not None and self._nl_buf:
+                        s = self._nl_buf + b" " * self._level + s
+                        self._nl_buf = b""
                     out.append(s)
                     return
             raise RuntimeError(f"cannot sample terminal {sym}")
@@ -150,6 +174,8 @@ class GrammarSampler:
         b = budget
         for _ in range(16):
             pieces: list[bytes] = []
+            self._level = 0
+            self._nl_buf = b""
             self._expand(self.grammar.start, b, pieces)
             s = self._glue(pieces)
             if max_bytes is None or len(s) <= max_bytes:
@@ -175,9 +201,19 @@ class GrammarSampler:
             if not out:
                 out += piece
                 continue
-            tail = bytes(out[-16:])
-            sig_glued = self._lex_sig(tail + piece)
-            sig_spaced = self._lex_sig(tail + b" " + piece)
+            w = 16
+            while True:
+                tail = bytes(out[-w:])
+                sig_glued = self._lex_sig(tail + piece)
+                sig_spaced = self._lex_sig(tail + b" " + piece)
+                if sig_glued is not None or sig_spaced is not None:
+                    break
+                if w >= len(out):
+                    break
+                # the window started mid-token (e.g. inside a string
+                # literal with bytes that are dead outside strings) and
+                # nothing lexes: widen until the boundary re-lex is honest
+                w *= 2
             if sig_glued is not None and sig_glued == sig_spaced:
                 out += piece
             elif sig_spaced is None:

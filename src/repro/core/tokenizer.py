@@ -31,6 +31,11 @@ _KEYWORDS = [
     "MAX", "DISTINCT", "BETWEEN", "LIKE", "EXISTS", "UNION",
     "name", "value", "type", "id", "key", "data", "list", "item", "index",
     "result", "args", "len", "total", "self", "this", "print", "range",
+    # python keywords (python_mini): make real token/terminal misalignment
+    # — "def" is one token but also a NAME prefix ("define"), "None"/"True"
+    # straddle the keyword-vs-NAME choice the mask must keep open
+    "def", "class", "elif", "pass", "None", "True", "False", "import",
+    "lambda", "yield", "def ", "return ", "    ",
 ]
 _PUNCT_MERGES = [
     '":', '",', '" ', ' "', '{"', '"}', '):', ');', ')(', '()', '())',

@@ -109,6 +109,10 @@ def _jit_target(model, mode, specs, mesh, microbatch: int = 1):
 
         o_sh = opt_state_shardings(specs["opt_state"], mesh)
         b_sh = batch_shardings(specs["batch"], mesh)
+        # donation here shapes the MEMORY ANALYSIS only: args are
+        # ShapeDtypeStructs (AOT lower/compile, never executed), so no
+        # host buffer exists to alias — unlike the serving dispatch
+        # sites, which must .copy() (serving/loop.py)
         fn = jax.jit(train_step, in_shardings=(p_sh, o_sh, b_sh),
                      donate_argnums=(0, 1))
         args = (specs["params"], specs["opt_state"], specs["batch"])

@@ -3,6 +3,7 @@
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --grammar json -n 4 \
       --max-new 80 --temperature 0.8 --slots 4 \
+      [--grammar-mode grammar_mask|grammar_strict] \
       [--sequential] [--opportunistic] [--checkpoint ckpt] \
       [--speculative] [--literal-jump] [--draft-k K] [--max-jump J]
 
@@ -48,7 +49,8 @@ def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
                  max_len=512, opportunistic=False, checkpoint=None,
                  seed=0, slots=4, paged=False, page_size=16,
                  num_pages=None, prefill_chunk=32, mesh=None,
-                 trunk_shard=False, overlap=True):
+                 trunk_shard=False, overlap=True,
+                 grammar_mode="grammar_mask"):
     """mesh: None | int (model-parallel degree; 1 = single device) | a
     prebuilt jax Mesh with a "model" axis. See docs/sharding.md."""
     cfg = get_config(arch)
@@ -75,13 +77,21 @@ def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
                   opportunistic=opportunistic, slots=slots, paged=paged,
                   page_size=page_size, num_pages=num_pages,
                   prefill_chunk=prefill_chunk, mesh=mesh,
-                  trunk_shard=trunk_shard, overlap=overlap), bundles, tok
+                  trunk_shard=trunk_shard, overlap=overlap,
+                  grammar_mode=grammar_mode), bundles, tok
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="syncode-demo")
     ap.add_argument("--grammar", default="json", choices=list(BUILTIN))
+    ap.add_argument("--grammar-mode", default="grammar_mask",
+                    choices=("grammar_mask", "grammar_strict"),
+                    help="mask approximation family (docs/grammars.md): "
+                         "grammar_mask over-approximates (never bans a "
+                         "valid token); grammar_strict under-approximates "
+                         "(only tokens ending exactly on terminal "
+                         "boundaries or inside one terminal)")
     ap.add_argument("-n", "--num-requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=80)
     ap.add_argument("--temperature", type=float, default=0.8)
@@ -142,7 +152,8 @@ def main(argv=None):
         opportunistic=args.opportunistic, checkpoint=args.checkpoint,
         slots=args.slots, paged=args.paged, page_size=args.page_size,
         num_pages=args.num_pages, mesh=args.mesh,
-        trunk_shard=args.trunk_shard, overlap=not args.no_overlap)
+        trunk_shard=args.trunk_shard, overlap=not args.no_overlap,
+        grammar_mode=args.grammar_mode)
 
     if args.serve:
         import asyncio

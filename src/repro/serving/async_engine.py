@@ -190,9 +190,13 @@ class AsyncEngine:
     def _dispatch_finish(self, st: RequestState) -> None:
         h = self._handle_for(st)
         if h is not None:
-            h._on_finish(st)
+            # Pop BEFORE signalling the finish: `result()` returning must
+            # imply the rid is free for re-submission (the pop runs on the
+            # loop thread; the finish event fires later on the asyncio
+            # thread, so the reverse order races with a fresh submit()).
             with self._hlock:
                 self._handles.pop(st.req.rid, None)
+            h._on_finish(st)
 
     # ---------------------------- interface ---------------------------
 
@@ -230,6 +234,48 @@ class AsyncEngine:
     def next_rid(self) -> int:
         self._next_rid += 1
         return self._next_rid - 1
+
+    async def load_grammar(self, name: str, bundle) -> None:
+        """Hot-load a freshly compiled (grammar, table, store) bundle
+        into the LIVE engine — no restart, no dropped requests.
+
+        The registration itself (growing the concatenated device store)
+        runs on the step-loop thread between steps via the loop's
+        control queue; this coroutine resolves once it has been applied,
+        after which `name` is valid in Request.grammar. If the loop
+        thread has not started yet (nothing submitted so far), the
+        engine is mutated directly — there is no concurrent step to
+        race with.
+        """
+        if self._loop_error is not None:
+            raise RuntimeError("step loop died") from self._loop_error
+        if self._thread is None or not self._thread.is_alive():
+            self.engine.register_grammar(name, bundle)
+            return
+        aio = asyncio.get_running_loop()
+        done = asyncio.Event()
+        box: list = [None]
+
+        def apply():
+            try:
+                self.engine.register_grammar(name, bundle)
+            except BaseException as e:     # deliver to the awaiting caller
+                box[0] = e
+            aio.call_soon_threadsafe(done.set)
+
+        self._loop_obj.post_control(apply)
+        while not done.is_set():
+            try:
+                await asyncio.wait_for(done.wait(), timeout=0.2)
+            except asyncio.TimeoutError:
+                if not self._thread.is_alive() and not done.is_set():
+                    # the loop exited (drain/death) without running the
+                    # control: no concurrent steps remain, apply directly
+                    if name not in self.engine.bundles:
+                        self.engine.register_grammar(name, bundle)
+                    return
+        if box[0] is not None:
+            raise box[0]
 
     async def generate(self, requests: list[Request]):
         """Async twin of Engine.generate/generate_speculative: submit

@@ -73,6 +73,10 @@ class Request:
     rid: int
     prompt: bytes = b""
     grammar: Optional[str] = None           # None = unconstrained
+    grammar_mode: Optional[str] = None      # "grammar_mask" (overapprox.) |
+                                            # "grammar_strict" (underapprox.,
+                                            # terminal-boundary-aligned);
+                                            # None = engine default
     max_new_tokens: int = 128
     decode: DecodeConfig = field(default_factory=DecodeConfig)
     seed: int = 0
@@ -188,7 +192,8 @@ class Engine:
                  slots: int = 4, paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None, prefill_chunk: int = 32,
                  attn_backend: str = "auto", mesh=None,
-                 trunk_shard: bool = False, overlap: bool = True):
+                 trunk_shard: bool = False, overlap: bool = True,
+                 grammar_mode: str = "grammar_mask"):
         """grammar_bundles: name -> (grammar, table, store).
         slots: decode-pool width B of the batched scheduler.
         paged: serve KV through the paged pool (docs/kv_paging.md) —
@@ -209,11 +214,19 @@ class Engine:
         step k+1's forward with the on-device sampled ids while the
         host validates step k and builds step k+1's mask rows
         (serving/loop.py). Token-for-token identical; auto-disabled
-        for recurrent archs and under opportunistic masking."""
+        for recurrent archs and under opportunistic masking.
+        grammar_mode: default approximation family for requests that
+        don't set one — "grammar_mask" (the paper's overapproximating
+        dmatch rows) or "grammar_strict" (underapproximating,
+        terminal-boundary-aligned rows)."""
+        if grammar_mode not in GrammarConstraint.MODES:
+            raise ValueError(f"unknown grammar_mode {grammar_mode!r}; "
+                             f"expected one of {GrammarConstraint.MODES}")
         self.model = model
         self.params = params
         self.tok = tokenizer
-        self.bundles = grammar_bundles
+        self.bundles = dict(grammar_bundles)
+        self.grammar_mode = grammar_mode
         self.max_len = max_len
         self.opportunistic = opportunistic
         self.mask_backend = mask_backend
@@ -258,12 +271,20 @@ class Engine:
         # by the batched and sequential paths — the store lives on device
         # exactly once)
         self._row_offset: dict[str, int] = {}
+        self._rebuild_store_cat()
+        self._build_batched_fns()
+
+    def _rebuild_store_cat(self):
+        """(Re)build the concatenated device store from self.bundles.
+        Insertion order fixes each grammar's block, so registering a new
+        grammar appends a block without moving existing offsets."""
+        self._row_offset = {}
         parts, off = [], 0
-        for name, b in grammar_bundles.items():
+        for name, b in self.bundles.items():
             self._row_offset[name] = off
             parts.append(b[2].packed)
             off += b[2].packed.shape[0]
-        words = (tokenizer.vocab_size + 31) // 32
+        words = (self.tok.vocab_size + 31) // 32
         cat = (np.concatenate(parts, axis=0) if parts
                else np.zeros((1, words), np.uint32))
         if self.mesh is not None:
@@ -275,7 +296,27 @@ class Engine:
                 cat, serving_store_sharding(self.mesh, cat.shape[1]))
         else:
             self._store_cat = jnp.asarray(cat)
-        self._build_batched_fns()
+
+    def register_grammar(self, name: str, bundle) -> None:
+        """Hot-register a freshly compiled (grammar, table, store) bundle.
+
+        Appends the store's rows to the concatenated device store and
+        makes `name` servable by subsequent requests — no engine restart.
+        NOT safe concurrent with a running step: callers must invoke it
+        between steps (AsyncEngine.load_grammar posts it onto the step
+        loop's control queue, which drains at the top of each loop
+        iteration). Jitted mask fns take the store as a call argument,
+        so the grown array just triggers one benign retrace.
+        """
+        if name in self.bundles:
+            raise ValueError(f"grammar {name!r} already registered")
+        store = bundle[2]
+        if store.packed.shape[1] * 32 < self.tok.vocab_size:
+            raise ValueError(
+                f"store for {name!r} built for a smaller vocab "
+                f"({store.packed.shape[1] * 32} < {self.tok.vocab_size})")
+        self.bundles[name] = bundle
+        self._rebuild_store_cat()
 
     def _shard_jit(self, fn):
         """jit, plus (when a mesh is configured) the serving
@@ -381,7 +422,8 @@ class Engine:
         if req.grammar is None:
             return None
         g, tab, store = self.bundles[req.grammar]
-        return GrammarConstraint(g, tab, store, self.tok)
+        return GrammarConstraint(g, tab, store, self.tok,
+                                 mode=req.grammar_mode or self.grammar_mode)
 
     def _request_ids(self, req: Request) -> list[int]:
         ids = self._prompt_ids(req)

@@ -176,6 +176,13 @@ class StepLoop:
         self.ids_cache: dict[int, list] = {}
         self.stall = 0
 
+        # control queue: closures posted from other threads, executed on
+        # the loop thread between steps (hot grammar registration — the
+        # engine's concatenated device store must never change while a
+        # step that read it is in flight)
+        self._controls: deque = deque()
+        self._ctl_lock = threading.Lock()
+
         # cumulative counters (stats() snapshots them)
         self.t0 = time.perf_counter()
         self.all_states: list = []
@@ -257,6 +264,23 @@ class StepLoop:
         if self.on_finish:
             self.on_finish(st)
 
+    # --------------------------- control queue ------------------------
+
+    def post_control(self, fn: Callable[[], None]) -> None:
+        """Run fn() on the loop thread before the next step (thread-safe,
+        FIFO). fn must do its own error handling — an exception escaping
+        a control kills the loop like any other step error."""
+        with self._ctl_lock:
+            self._controls.append(fn)
+
+    def _drain_controls(self) -> None:
+        while True:
+            with self._ctl_lock:
+                fn = self._controls.popleft() if self._controls else None
+            if fn is None:
+                return
+            fn()
+
     # --------------------- cancellation / deadlines -------------------
 
     def _sweep(self) -> None:
@@ -283,6 +307,7 @@ class StepLoop:
         path; for a QueueSource it is the persistent serving loop (idles
         between requests, exits on close())."""
         while True:
+            self._drain_controls()
             self._sweep()
             for b in range(self.B):
                 if self.slot_state[b] is not None:
@@ -395,6 +420,7 @@ class DenseMode(_ModeBase):
     OVERLAP_MIN_RATE = 0.5      # windowed hits/dispatches to keep going
     OVERLAP_WINDOW = 64         # halve counters at this many dispatches
     OVERLAP_PROBE = 16          # gated-off steps between re-probes
+    OVERLAP_WARMUP = 8          # unconditional dispatches before gating
 
     def __init__(self, engine, overlap: Optional[bool] = None):
         self.eng = engine
@@ -494,7 +520,7 @@ class DenseMode(_ModeBase):
             self.pending_logits = spec_logits
 
     def _speculate_now(self) -> bool:
-        if self._disp_w < 8:            # warm-up: always try
+        if self._disp_w < self.OVERLAP_WARMUP:      # warm-up: always try
             return True
         if self._hit_w / self._disp_w >= self.OVERLAP_MIN_RATE:
             return True

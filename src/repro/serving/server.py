@@ -6,6 +6,7 @@ commit — the paper's constrained decoding, served live:
 
   POST /generate
       {"prompt": "...", "grammar": "json" | null,
+       "grammar_mode": "grammar_mask" | "grammar_strict" | null,
        "max_new_tokens": 64, "method": "greedy" | "sample",
        "temperature": 1.0, "top_k": 0, "top_p": 1.0, "seed": 0,
        "deadline": null | seconds, "stream": true}
@@ -16,9 +17,19 @@ commit — the paper's constrained decoding, served live:
 
   `"stream": false` returns only the terminal line. Disconnecting
   mid-stream cancels the request — its slot and KV pages free at the
-  next engine step.
+  next engine step. `"grammar_mode"` null/omitted uses the engine
+  default (--grammar-mode).
 
-  GET /healthz -> {"ok": true, "slots": B, "active": n}
+  POST /grammars
+      {"name": "my_dsl", "text": "<lark grammar source>"}
+  ->  {"ok": true, "grammar": "my_dsl", "terminals": n, "rows": r}
+
+  compiles the grammar, builds its mask store, and hot-loads it into
+  the live engine between steps (AsyncEngine.load_grammar) — requests
+  already streaming keep running; the next /generate may use it.
+
+  GET /healthz -> {"ok": true, "slots": B, "active": n,
+                   "grammars": [...]}
 
 The HTTP layer is deliberately tiny (HTTP/1.1, Content-Length bodies,
 chunked responses); production fronting belongs in a real proxy — this
@@ -31,6 +42,7 @@ import asyncio
 import json
 from typing import Optional
 
+from repro.core.constrain import GrammarConstraint
 from repro.core.decoding import DecodeConfig
 from repro.serving.async_engine import AsyncEngine
 from repro.serving.engine import Request
@@ -103,6 +115,10 @@ def _parse_generate(body: bytes, grammars, rid: int) -> tuple[Request, bool]:
     if grammar is not None and grammar not in grammars:
         raise ServerError(400, f"unknown grammar {grammar!r}; "
                                f"have {sorted(grammars)}")
+    gmode = spec.get("grammar_mode")
+    if gmode is not None and gmode not in GrammarConstraint.MODES:
+        raise ServerError(400, f"bad grammar_mode {gmode!r}; expected "
+                               f"one of {list(GrammarConstraint.MODES)}")
     method = spec.get("method", "greedy")
     if method not in ("greedy", "sample"):
         raise ServerError(400, f"bad method {method!r}")
@@ -114,6 +130,7 @@ def _parse_generate(body: bytes, grammars, rid: int) -> tuple[Request, bool]:
     req = Request(rid=rid,
                   prompt=str(spec.get("prompt", "")).encode(),
                   grammar=grammar,
+                  grammar_mode=gmode,
                   max_new_tokens=int(spec.get("max_new_tokens", 64)),
                   decode=dc,
                   seed=int(spec.get("seed", 0)),
@@ -177,11 +194,54 @@ class EngineServer:
         finally:
             eof_watch.cancel()
 
+    async def _load_grammar(self, writer, body: bytes) -> None:
+        """Compile + hot-load a grammar into the live engine (no restart).
+
+        The compile and mask-store build run in a worker thread (they are
+        pure CPU and can take seconds); only the final registration —
+        growing the concatenated device store — crosses onto the step
+        loop's control queue between steps."""
+        try:
+            spec = json.loads(body.decode() or "{}")
+        except (ValueError, UnicodeDecodeError):
+            raise ServerError(400, "body is not JSON")
+        name = spec.get("name")
+        text = spec.get("text")
+        if not name or not isinstance(name, str):
+            raise ServerError(400, "missing grammar 'name'")
+        if not text or not isinstance(text, str):
+            raise ServerError(400, "missing grammar 'text'")
+        if name in self.aeng.engine.bundles:
+            raise ServerError(409, f"grammar {name!r} already loaded")
+
+        def compile_bundle():
+            from repro.core.grammar import Grammar
+            from repro.core.lr import build_lr_table
+            from repro.core.mask_store import build_mask_store
+            g = Grammar(text, name=name)
+            tab = build_lr_table(g)
+            store = build_mask_store(g, self.aeng.engine.tok)
+            return g, tab, store
+        try:
+            bundle = await asyncio.get_running_loop().run_in_executor(
+                None, compile_bundle)
+        except Exception as e:
+            raise ServerError(400, f"grammar compile failed: {e}")
+        await self.aeng.load_grammar(name, bundle)
+        g = bundle[0]
+        out = json.dumps({"ok": True, "grammar": name,
+                          "terminals": len(g.terminal_names),
+                          "rows": int(bundle[2].packed.shape[0])}).encode()
+        _start_response(writer, 200, "OK", "application/json",
+                        chunked=False, body=out)
+
     async def _healthz(self, writer) -> None:
         loop = self.aeng._loop_obj
         active = 0 if loop is None else len(loop.active())
         body = json.dumps({"ok": True, "slots": self.aeng.engine.slots,
-                           "active": active}).encode()
+                           "active": active,
+                           "grammars": sorted(self.aeng.engine.bundles)}
+                          ).encode()
         _start_response(writer, 200, "OK", "application/json",
                         chunked=False, body=body)
 
@@ -193,6 +253,8 @@ class EngineServer:
                 method, path, body = await _read_request(reader)
                 if method == "POST" and path == "/generate":
                     await self._generate(reader, writer, body)
+                elif method == "POST" and path == "/grammars":
+                    await self._load_grammar(writer, body)
                 elif method == "GET" and path == "/healthz":
                     await self._healthz(writer)
                 else:
@@ -251,5 +313,5 @@ async def run_server(async_engine: AsyncEngine, host: str = "127.0.0.1",
     srv = EngineServer(async_engine)
     addr = await srv.start(host, port)
     print(f"serving on http://{addr[0]}:{addr[1]} "
-          f"(POST /generate, GET /healthz)")
+          f"(POST /generate, POST /grammars, GET /healthz)")
     await srv.serve_forever()

@@ -5,6 +5,12 @@ into fixed-length training batches — a data pipeline that is actually
 *about* the paper: the LM learns the formal language whose grammar later
 constrains decoding. `RandomTokenPipeline` supplies shape-correct random
 batches for substrate benchmarks.
+
+Aliasing contract: every `__next__` returns FRESHLY ALLOCATED arrays
+(never a reused staging buffer). The training loop ships batches with
+`jnp.asarray`, which may zero-copy alias host memory on CPU — a reused
+buffer would be mutated under an in-flight async computation
+(tests/test_aliasing_guard.py enforces this).
 """
 from __future__ import annotations
 

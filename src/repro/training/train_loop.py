@@ -41,6 +41,11 @@ def train(model, params, data_iter, steps: int,
     t0 = time.time()
     for i in range(steps):
         batch = next(data_iter)
+        # jnp.asarray may zero-copy alias host memory on CPU (the hazard
+        # class fixed in serving/loop.py): safe here ONLY because every
+        # pipeline's __next__ returns freshly allocated arrays, never a
+        # reused staging buffer — tests/test_aliasing_guard.py holds the
+        # pipelines to that contract
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         if i % log_every == 0 or i == steps - 1:

@@ -1,0 +1,75 @@
+"""Zero-copy aliasing guards.
+
+On CPU, `jnp.asarray` may zero-copy alias host numpy memory. A host
+buffer that is mutated in place after being shipped to an ASYNC device
+computation is then mutated under the computation's feet — root-caused
+in PR 5 from a 5.47-magnitude logits drift in chunked-prefill runs.
+Two guards hold the line:
+
+ 1. the serving step-loop dispatch sites must keep shipping PRIVATE
+    copies of the long-lived, mutated-in-place cursor arrays
+    (cur_tok / feed_pos) — asserted against the source so a cleanup
+    that "removes the redundant .copy()" fails loudly with the story;
+ 2. the training pipelines must return freshly allocated batches (the
+    training loop ships them with a bare jnp.asarray on the strength
+    of that contract — see training/data.py).
+"""
+import re
+
+import numpy as np
+
+
+def _loop_source():
+    import inspect
+
+    import repro.serving.loop as loop
+    return inspect.getsource(loop)
+
+
+def test_step_loop_ships_copies_of_mutated_cursors():
+    """Every decode/feed dispatch that passes a long-lived, in-place
+    mutated cursor array through jnp.asarray must pass a .copy().
+
+    DenseMode.step mutates cur_tok and feed_pos right after the resolve
+    sync; PagedMode/SpecMode mutate feed_pos during prefill-drain steps
+    that never sync. If any of these sites loses its .copy(), the async
+    computation can read the NEXT step's cursors."""
+    src = _loop_source()
+    # dense decode: both cursors copied
+    assert re.search(r"jnp\.asarray\(self\.cur_tok\.copy\(\)\)", src), \
+        "DenseMode dispatch must ship cur_tok.copy()"
+    # feed_pos copies: dense decode + paged span feed + spec span feed
+    n_feed = len(re.findall(r"jnp\.asarray\((?:loop\.)?feed_pos\.copy\(\)\)",
+                            src))
+    assert n_feed >= 3, (
+        f"expected >= 3 feed_pos.copy() dispatch sites in serving/loop.py "
+        f"(dense, paged, spec), found {n_feed} — see the aliasing note at "
+        f"the paged span feed")
+    # the explanatory comment must survive too (it carries the root cause)
+    assert "zero-copy alias" in src
+
+
+def test_grammar_pipeline_batches_are_fresh(grammar_bundle, tokenizer):
+    """Successive GrammarDataPipeline batches must not share memory:
+    the training loop ships them with a bare jnp.asarray."""
+    from repro.training.data import GrammarDataPipeline
+    g, _, _, _ = grammar_bundle("calc")
+    pipe = GrammarDataPipeline(g, tokenizer, seq_len=16, batch_size=2,
+                               seed=0)
+    b1 = next(pipe)
+    snap = {k: v.copy() for k, v in b1.items()}
+    b2 = next(pipe)
+    for k in b1:
+        assert not np.shares_memory(b1[k], b2[k]), k
+        # producing the next batch must not have mutated the previous one
+        np.testing.assert_array_equal(b1[k], snap[k])
+
+
+def test_random_pipeline_batches_are_fresh():
+    from repro.configs import get_config
+    from repro.training.data import RandomTokenPipeline
+    pipe = RandomTokenPipeline(get_config("syncode-demo"), seq_len=8,
+                               batch_size=2, seed=0)
+    b1, b2 = next(pipe), next(pipe)
+    for k in b1:
+        assert not np.shares_memory(b1[k], b2[k]), k

@@ -1,0 +1,161 @@
+"""Indentation-aware lexing (%indent grammars, core/lexer.py).
+
+The post-lex pass synthesizes NEWLINE/INDENT/DEDENT for python_mini.
+Locked-in properties:
+
+  * partial-input safety — NO byte prefix of a valid program may raise:
+    a trailing NEWLINE whose lexeme can still grow stays `pending`
+    instead of committing an indent decision;
+  * commit monotonicity — the committed token stream of any prefix is a
+    prefix of the whole input's committed stream (what makes the
+    incremental parser's prefix-stack cache sound);
+  * INDENT/DEDENT balance at EOF — the closure drains every open level.
+"""
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade gracefully: only @given tests skip
+    from tests._hypothesis_stub import given, settings, st
+
+from repro.core.grammars import load_grammar
+from repro.core.lexer import (IndentationError_, LexError, lex_partial,
+                              postlex_indent)
+from repro.core.sampling import GrammarSampler
+
+PROGRAMS = [
+    b"x = 1\n",
+    b"def f(a, b):\n    return a + b\n",
+    b"if x:\n    y = 1\nelse:\n    y = 2\n",
+    b"while x < 3:\n    if y:\n        z = f(1)\n    x = x + 1\n",
+    b"class C(Base):\n    def m(self):\n        return 1\n    x = 2\n",
+    b"x = (1 +\n  2)\n",                     # implicit line joining
+    b"# leading comment\nx = 1  # trailing\n",
+    b"l = [1, 2,\n      3]\nfor i in l:\n    pass\n",
+    b"x = 1 + \\\n  2\n",                    # explicit line continuation
+    b"\n\n# blanks and comments first\n\nx = 'str'\n",
+]
+
+
+@pytest.fixture(scope="module")
+def pg():
+    g, _ = load_grammar("python_mini")
+    return g
+
+
+def _postlex(g, data: bytes, at_eof: bool = False):
+    toks, unlexed = lex_partial(g, data)
+    return postlex_indent(g, toks, unlexed=unlexed, at_eof=at_eof)
+
+
+def _synth(g):
+    return g.indent_spec  # (NEWLINE, INDENT, DEDENT) terminal names
+
+
+# ------------------------- partial-input safety -------------------------
+
+@pytest.mark.parametrize("prog", PROGRAMS)
+def test_every_prefix_lexes_without_raising(pg, prog):
+    for k in range(len(prog) + 1):
+        _postlex(pg, prog[:k])              # must not raise
+
+
+def _assert_monotone(part, full, ctx):
+    """part must be a prefix of full, EXCEPT its final token, which may
+    still be growing at the cut (lex_partial commits an in-progress
+    token once it sits in a final state — "1" before "12", "\\\n"
+    before "\\\n  "). Indent decisions (synthetic tokens) never flip."""
+    if part == full[:len(part)]:
+        return
+    assert part[:-1] == full[:len(part) - 1], ctx
+    # the divergent tail is a growing LEXEME, never a flipped synthetic
+    assert part[-1][1] != b"", ctx
+
+
+@pytest.mark.parametrize("prog", PROGRAMS)
+def test_commit_monotone_across_prefixes(pg, prog):
+    """Committed tokens of every prefix form a prefix of the whole
+    input's committed stream — indent decisions never flip."""
+    full = [(t.type, t.value) for t in _postlex(pg, prog, at_eof=True).tokens]
+    for k in range(len(prog) + 1):
+        part = [(t.type, t.value) for t in _postlex(pg, prog[:k]).tokens]
+        _assert_monotone(part, full, (k, prog[:k]))
+
+
+def test_open_suite_tail_is_pending_not_committed(pg):
+    """After "if x:\\n    " the indent decision must wait: more spaces
+    could deepen the line, a newline could blank it."""
+    nl_t, ind_t, _ = _synth(pg)
+    res = _postlex(pg, b"if x:\n    ")
+    assert res.pending is not None
+    assert res.pending.type == nl_t
+    assert all(t.type != ind_t for t in res.tokens)
+    assert res.levels == (0,)
+    # the same text terminated by a real token commits NEWLINE + INDENT
+    res2 = _postlex(pg, b"if x:\n    y")
+    assert res2.pending is None
+    types = [t.type for t in res2.tokens]
+    assert ind_t in types
+    assert res2.levels == (0, 4)
+
+
+# --------------------------- balance at EOF -----------------------------
+
+@pytest.mark.parametrize("prog", PROGRAMS)
+def test_indent_dedent_balance_at_eof(pg, prog):
+    nl_t, ind_t, ded_t = _synth(pg)
+    res = _postlex(pg, prog, at_eof=True)
+    types = [t.type for t in res.tokens]
+    assert types.count(ind_t) == types.count(ded_t), prog
+    assert res.levels == (0,), prog
+    # balance holds at every intermediate point too (DEDENT never
+    # outruns INDENT)
+    depth = 0
+    for t in res.tokens:
+        depth += (t.type == ind_t) - (t.type == ded_t)
+        assert depth >= 0
+    assert depth == 0
+
+
+def test_blank_and_comment_lines_emit_no_newline(pg):
+    nl_t, _, _ = _synth(pg)
+    res = _postlex(pg, b"\n\n# c\n\nx = 1\n", at_eof=True)
+    first_real = res.tokens[0]
+    assert first_real.type != nl_t          # leading NEWLINEs suppressed
+    assert first_real.value == b"x"
+
+
+def test_bracket_joined_newlines_are_dropped(pg):
+    nl_t, ind_t, _ = _synth(pg)
+    res = _postlex(pg, b"x = (1 +\n        2)\n", at_eof=True)
+    types = [t.type for t in res.tokens]
+    assert ind_t not in types               # deep continuation, no INDENT
+    assert types.count(nl_t) == 1           # only the closing NEWLINE
+
+
+def test_unmatched_unindent_raises(pg):
+    bad = b"if x:\n        y = 1\n    z = 2\n"
+    with pytest.raises(IndentationError_):
+        _postlex(pg, bad, at_eof=True)
+    # ... but only once the offending NEWLINE is COMMITTED; the prefix
+    # that ends inside the bad line's indentation is still open
+    _postlex(pg, bad[:bad.index(b"z")])     # pending, must not raise
+
+
+# --------------------- sampled programs (hypothesis) --------------------
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10 ** 6), st.data())
+def test_sampled_program_prefixes_safe(seed, data):
+    g, _ = load_grammar("python_mini")
+    gs = GrammarSampler(g, seed=seed)
+    prog = gs.sample(14, max_bytes=220)
+    full = _postlex(g, prog, at_eof=True)
+    nl_t, ind_t, ded_t = g.indent_spec
+    types = [t.type for t in full.tokens]
+    assert types.count(ind_t) == types.count(ded_t)
+    assert full.levels == (0,)
+    cut = data.draw(st.integers(0, len(prog)))
+    part = _postlex(g, prog[:cut])
+    committed = [(t.type, t.value) for t in part.tokens]
+    whole = [(t.type, t.value) for t in full.tokens]
+    _assert_monotone(committed, whole, (cut, prog))

@@ -104,7 +104,12 @@ def test_specials_never_allowed(grammar_bundle):
 
 def test_store_rows_layout(grammar_bundle, tokenizer):
     g, tab, store, gc = grammar_bundle("calc")
-    assert store.packed.shape[0] == g.total_dfa_states * (len(g.terminal_names) + 1)
+    # two row families (grammar_mask, grammar_strict) over the same
+    # state addressing; strict rows start at strict_offset
+    R = g.total_dfa_states * (len(g.terminal_names) + 1)
+    assert store.packed.shape[0] == 2 * R
+    assert store.strict_offset == R
+    assert store.row_m0("INT", 0, strict=True) == store.row_m0("INT", 0) + R
     assert store.packed.dtype == np.uint32
     assert store.packed.shape[1] * 32 >= tokenizer.vocab_size
 
