@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test bench bench-smoke docs-check
+.PHONY: test bench bench-smoke obs-smoke docs-check
 
 test:              ## tier-1 test suite (same command CI runs)
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -15,6 +15,9 @@ bench-smoke:       ## seconds-scale paged + sharded + async engine smoke runs (C
 	PYTHONPATH=src $(PY) -m benchmarks.bench_table1 --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.bench_sharded --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.bench_async --smoke
+
+obs-smoke:         ## end-to-end telemetry gate: HTTP server + /metrics + trace dump (CI gate)
+	PYTHONPATH=src $(PY) scripts/obs_smoke.py
 
 docs-check:        ## fail if src/repro packages are missing from README's module map
 	$(PY) scripts/docs_check.py

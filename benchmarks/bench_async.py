@@ -50,15 +50,32 @@ def _reqs(n, max_new, method, temperature=0.9):
 
 
 def _run_async(engine, reqs):
+    """Returns (states, stats, lifecycle_summary) — the summary carries
+    the per-request latency histograms (TTFT / inter-token / queue wait)
+    the CSV rows report as p50/p99 (docs/observability.md)."""
     from repro.serving.async_engine import AsyncEngine
 
     async def go():
         aeng = AsyncEngine(engine)
         try:
-            return await aeng.generate(reqs)
+            states, stats = await aeng.generate(reqs)
+            return states, stats, aeng.telemetry.lifecycle.summary()
         finally:
             await aeng.drain()
     return asyncio.run(go())
+
+
+def _lat_cols(summary) -> str:
+    """ttft/itl p50/p99 columns (ms) from a lifecycle summary."""
+    out = []
+    for key in ("ttft", "itl"):
+        h = summary.get(key) or {}
+        for q in ("p50", "p99"):
+            v = h.get(q)
+            out.append(f"{key}_{q}_ms="
+                       f"{v * 1e3:.2f}" if v is not None
+                       else f"{key}_{q}_ms=nan")
+    return ";".join(out)
 
 
 PAIRS = 5
@@ -96,16 +113,18 @@ def main(smoke: bool = False) -> int:
         rates = {"overlap_off": [], "overlap_on": []}
         ident = {"overlap_off": True, "overlap_on": True}
         stats_of = {}
+        lat_of = {}
         for _ in range(pairs):          # paired, interleaved trials
             for oname in ("overlap_off", "overlap_on"):
-                states, stats = _run_async(engines[oname],
-                                           _reqs(n, max_new, method))
+                states, stats, lat = _run_async(
+                    engines[oname], _reqs(n, max_new, method))
                 by_rid = {s.req.rid: s.token_ids for s in states}
                 identical = [by_rid[i] for i in range(n)] == want
                 ok = ok and identical
                 ident[oname] = ident[oname] and identical
                 rates[oname].append(stats.tokens_per_sec)
                 stats_of[oname] = stats
+                lat_of[oname] = lat
         for oname in ("overlap_off", "overlap_on"):
             stats = stats_of[oname]
             tok_s = _median(rates[oname])
@@ -115,6 +134,7 @@ def main(smoke: bool = False) -> int:
                  f"decode_steps={stats.decode_steps};"
                  f"overlap_hits={stats.overlap_hits}/"
                  f"{stats.overlap_dispatched};"
+                 f"{_lat_cols(lat_of[oname])};"
                  f"identical_to_sync={ident[oname]};"   # AND over trials
                  f"pairs={pairs};n={n}")
         speedup = _median([t / max(f, 1e-9) for f, t in

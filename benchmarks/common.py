@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import os
+import subprocess
 import sys
 import time
 
@@ -28,5 +29,31 @@ def timeit(fn, n=5, warmup=1):
     return (time.time() - t0) / n
 
 
+_RUN_META = None
+
+
+def run_meta() -> str:
+    """Provenance stamp appended to every CSV row: git SHA, jax version
+    and device kind — so bench trajectories stay attributable when
+    compared across commits and machines. Computed once per process;
+    ';'-joined key=value pairs matching the derived-column idiom."""
+    global _RUN_META
+    if _RUN_META is None:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+                capture_output=True, text=True, timeout=10,
+            ).stdout.strip() or "unknown"
+        except Exception:
+            sha = "unknown"
+        dev = jax.devices()[0].device_kind.replace(",", " ") \
+            .replace(";", " ").replace("=", " ").strip() or "unknown"
+        _RUN_META = (f"git={sha};jax={jax.__version__};"
+                     f"device={dev}")
+    return _RUN_META
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
+    derived = f"{derived};{run_meta()}" if derived else run_meta()
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,20 @@
+"""Serving telemetry: metrics registry, phase spans, request lifecycle,
+Perfetto trace export. Pure stdlib — importing repro.obs must never pull
+in jax or numpy (tests/test_obs.py asserts this), which is the
+structural guarantee that telemetry cannot add device synchronization.
+"""
+from .registry import (Counter, Gauge, Histogram, LATENCY_BUCKETS,
+                       MetricsRegistry, PHASE_BUCKETS, log_buckets)
+from .lifecycle import LifecycleTracker, NullLifecycle
+from .trace import Tracer, DEFAULT_CAPACITY
+from .telemetry import (DISABLED_SPAN_BUDGET_S, ENABLED_SPAN_BUDGET_S,
+                        NULL_SPAN, Telemetry)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "LATENCY_BUCKETS", "PHASE_BUCKETS", "log_buckets",
+    "LifecycleTracker", "NullLifecycle",
+    "Tracer", "DEFAULT_CAPACITY",
+    "Telemetry", "NULL_SPAN",
+    "DISABLED_SPAN_BUDGET_S", "ENABLED_SPAN_BUDGET_S",
+]

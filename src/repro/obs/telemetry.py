@@ -1,0 +1,206 @@
+"""Telemetry facade: one object the serving stack threads everywhere.
+
+`Telemetry` bundles the metrics registry, the trace ring buffer, and the
+request-lifecycle tracker behind a single `span()` API:
+
+    with tele.span("mask_dispatch") as sp:
+        ... host-side work already bracketed by perf_counter ...
+    st.mask_time += sp.dur
+
+Each span, on exit, adds its duration to the per-phase counter pair
+(`repro_step_phase_seconds_total{phase=...}` +
+`repro_step_phase_calls_total{phase=...}`), observes the per-phase
+histogram, and — only while a trace capture is active — records a
+Chrome-trace complete event. The span's measured duration (`sp.dur`) is
+what callers feed into the legacy per-slot accounting, so EngineStats
+and the registry are two views of the SAME perf_counter bracket and can
+never drift apart.
+
+Disabled fast path: `Telemetry(enabled=False).span(...)` returns one
+shared `_NullSpan` whose __enter__/__exit__ do nothing and whose `dur`
+is 0.0 — no perf_counter call, no dict lookups, no allocation. The
+overhead guard in tests/test_obs.py pins this below
+`DISABLED_SPAN_BUDGET_S`. Count-style instruments (tokens, mask
+computations, overlap outcomes) stay live even when disabled — they are
+plain float adds and EngineStats' exact count invariants depend on
+them.
+
+Pure stdlib — no jax/numpy anywhere in repro.obs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from .lifecycle import LifecycleTracker, NullLifecycle
+from .registry import PHASE_BUCKETS, MetricsRegistry
+from .trace import Tracer
+
+# Named overhead budgets (seconds), asserted by tests/test_obs.py.
+# DISABLED_SPAN_BUDGET_S: per span() call with telemetry off — must be
+# cheap enough to leave in every hot path unconditionally.
+# ENABLED_SPAN_BUDGET_S: per span with telemetry on but tracing off —
+# two perf_counter calls + a few float adds.
+DISABLED_SPAN_BUDGET_S = 2e-6
+ENABLED_SPAN_BUDGET_S = 25e-6
+
+
+class _NullSpan:
+    """Shared no-op span: telemetry disabled. dur is always 0.0."""
+    __slots__ = ()
+    dur = 0.0
+    t0 = 0.0
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("tele", "phase", "track", "args", "t0", "dur")
+
+    def __init__(self, tele: "Telemetry", phase: str,
+                 track: Optional[str], args: Optional[dict]):
+        self.tele = tele
+        self.phase = phase
+        self.track = track
+        self.args = args
+        self.t0 = 0.0
+        self.dur = 0.0
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.dur = dur = time.perf_counter() - self.t0
+        tele = self.tele
+        sec, calls, hist = tele._phase(self.phase)
+        sec.inc(dur)
+        calls.inc()
+        hist.observe(dur)
+        if tele.tracer.active:
+            tele.tracer.add(self.track or self.phase, self.phase,
+                            self.t0, dur, self.args)
+        return False
+
+
+class Telemetry:
+    """enabled=True: full spans/histograms/lifecycle/trace.
+    enabled=False: span() is a shared no-op and lifecycle hooks vanish;
+    the registry still exists so count-style instruments keep working."""
+
+    def __init__(self, enabled: bool = True,
+                 trace_capacity: Optional[int] = None):
+        self.enabled = bool(enabled)
+        self.registry = MetricsRegistry()
+        self.tracer = Tracer(**({} if trace_capacity is None
+                                else {"capacity": trace_capacity}))
+        self.lifecycle = (LifecycleTracker(self.registry)
+                          if self.enabled else NullLifecycle())
+        self.t_start = time.perf_counter()
+        self._phases: dict = {}
+        if self.enabled:
+            self.registry.gauge(
+                "repro_uptime_seconds", "seconds since telemetry start",
+                fn=lambda: time.perf_counter() - self.t_start)
+
+    # ------------------------------ spans ------------------------------
+
+    def _phase(self, phase: str):
+        tup = self._phases.get(phase)
+        if tup is None:
+            reg = self.registry
+            tup = self._phases[phase] = (
+                reg.counter("repro_step_phase_seconds_total",
+                            "cumulative host seconds per step phase",
+                            {"phase": phase}),
+                reg.counter("repro_step_phase_calls_total",
+                            "span count per step phase", {"phase": phase}),
+                reg.histogram("repro_step_phase_duration_seconds",
+                              "per-span duration by phase",
+                              PHASE_BUCKETS, {"phase": phase}),
+            )
+        return tup
+
+    def span(self, phase: str, track: Optional[str] = None,
+             args: Optional[dict] = None):
+        if not self.enabled:
+            return NULL_SPAN
+        return _Span(self, phase, track, args)
+
+    def phase_seconds(self, phase: str) -> float:
+        """Cumulative seconds recorded for a phase (0.0 if never hit)."""
+        if not self.enabled or phase not in self._phases:
+            return 0.0
+        return self._phases[phase][0].value
+
+    def phase_calls(self, phase: str) -> int:
+        if not self.enabled or phase not in self._phases:
+            return 0
+        return int(self._phases[phase][1].value)
+
+    # -------------------------- count helpers --------------------------
+    # Always-on (cheap float adds): exact token/count stats must hold
+    # with telemetry disabled, so these never go through the null path.
+
+    def counter(self, name: str, help: str = "",
+                labels: Optional[dict] = None):
+        return self.registry.counter(name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Optional[dict] = None, fn=None):
+        return self.registry.gauge(name, help, labels, fn=fn)
+
+    # --------------------------- integrations --------------------------
+
+    def register_kv(self, alloc) -> None:
+        """Callback gauges over a PagedAllocator — evaluated at scrape
+        time, never pushed from the step loop."""
+        reg = self.registry
+        g = reg.gauge
+
+        def metric(key):
+            return lambda: float(alloc.metrics()[key])
+
+        g("repro_kv_pages_total", "KV pool size in pages",
+          fn=metric("pages_total"))
+        g("repro_kv_pages_in_use", "KV pages currently referenced",
+          fn=metric("pages_in_use"))
+        g("repro_kv_pages_free", "KV pages on the free list",
+          fn=metric("pages_free"))
+        g("repro_kv_pages_cold", "evictable cached pages",
+          fn=metric("pages_cold"))
+        g("repro_kv_pages_peak", "high-water mark of pages in use",
+          fn=metric("peak_in_use"))
+        g("repro_kv_prefix_hit_rate", "prefix-cache token hit rate",
+          fn=metric("prefix_hit_rate"))
+        reg.counter("repro_kv_page_allocs_total", "pages ever allocated",
+                    fn=metric("page_allocs"))
+        reg.counter("repro_kv_evictions_total", "cold pages evicted",
+                    fn=metric("evictions"))
+        reg.counter("repro_kv_cow_copies_total", "copy-on-write page copies",
+                    fn=metric("cow_copies"))
+
+    # ------------------------------ views ------------------------------
+
+    def uptime(self) -> float:
+        return time.perf_counter() - self.t_start
+
+    def stats_json(self) -> dict:
+        """Everything /stats serves: registry snapshot + lifecycle
+        summary + trace state."""
+        return {
+            "enabled": self.enabled,
+            "uptime_seconds": self.uptime(),
+            "requests": self.lifecycle.summary(),
+            "metrics": self.registry.snapshot(),
+            "trace": {"active": self.tracer.active,
+                      "buffered_events": len(self.tracer),
+                      "dropped_events": self.tracer.dropped},
+        }

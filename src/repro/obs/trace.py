@@ -1,0 +1,111 @@
+"""Bounded span ring buffer + Perfetto/Chrome-trace JSON export.
+
+The step loop records phase spans (`Tracer.add`) and per-token instants
+(`Tracer.instant`) only while tracing is active (`start()`/`stop()`,
+driven by POST /trace on the HTTP server). Spans land in a bounded
+`deque` — steady-state tracing can run forever and the dump is always
+the most recent `capacity` events, never an unbounded buffer.
+
+`export_chrome()` emits the Chrome trace-event JSON flavour that
+ui.perfetto.dev (and chrome://tracing) loads directly: complete events
+(`"ph": "X"`) with microsecond timestamps, one *thread track per
+span-track name* — loop phases each get their own track, every slot gets
+a `slot N` track carrying its requests' lifetime spans and token
+instants — named via `thread_name` metadata events.
+
+Timestamps are raw `time.perf_counter()` values captured by the spans
+themselves; the exporter rebases them to the earliest event so the trace
+starts at t=0. Pure stdlib (no jax/numpy) — recording can never touch
+the device.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+DEFAULT_CAPACITY = 65536
+
+# stable tid ordering: known tracks first, in pipeline order; anything
+# else (slot tracks, custom tracks) sorts after them by name
+_TRACK_ORDER = ("step", "admit", "plan", "feed_build", "rows_build",
+                "mask_dispatch", "forward", "overlap_forward",
+                "select_resolve", "host_oracle", "opportunistic")
+
+
+class Tracer:
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        self.capacity = int(capacity)
+        self._ring: deque = deque(maxlen=self.capacity)
+        self.active = False
+        self.dropped = 0        # events pushed out of the ring (approx)
+        self._seen = 0
+
+    # ------------------------------ control ---------------------------
+
+    def start(self) -> None:
+        self.active = True
+
+    def stop(self) -> None:
+        self.active = False
+
+    def clear(self) -> None:
+        self._ring.clear()
+        self.dropped = 0
+        self._seen = 0
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    # ----------------------------- recording --------------------------
+    # Callers are expected to gate on `self.active` before building args
+    # dicts; add()/instant() re-check so a stop() between the check and
+    # the call just drops the event.
+
+    def add(self, track: str, name: str, t0: float, dur: float,
+            args: Optional[dict] = None) -> None:
+        if not self.active:
+            return
+        self._seen += 1
+        if len(self._ring) == self.capacity:
+            self.dropped += 1
+        self._ring.append(("X", track, name, t0, dur, args))
+
+    def instant(self, track: str, name: str, t: float,
+                args: Optional[dict] = None) -> None:
+        if not self.active:
+            return
+        self._seen += 1
+        if len(self._ring) == self.capacity:
+            self.dropped += 1
+        self._ring.append(("i", track, name, t, 0.0, args))
+
+    # ------------------------------ export ----------------------------
+
+    def export_chrome(self) -> dict:
+        """Chrome trace-event JSON: {"traceEvents": [...]} with one
+        process ("repro engine") and one named thread per track."""
+        events = list(self._ring)       # snapshot; recording continues
+        tracks = sorted({e[1] for e in events},
+                        key=lambda t: (_TRACK_ORDER.index(t)
+                                       if t in _TRACK_ORDER
+                                       else len(_TRACK_ORDER), t))
+        tid = {t: i + 1 for i, t in enumerate(tracks)}
+        t_base = min((e[3] for e in events), default=0.0)
+        out = [{"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+                "args": {"name": "repro engine"}}]
+        for t in tracks:
+            out.append({"ph": "M", "pid": 1, "tid": tid[t],
+                        "name": "thread_name", "args": {"name": t}})
+        for ph, track, name, t0, dur, args in events:
+            ev = {"ph": ph, "pid": 1, "tid": tid[track], "name": name,
+                  "cat": track, "ts": (t0 - t_base) * 1e6}
+            if ph == "X":
+                ev["dur"] = dur * 1e6
+            else:
+                ev["s"] = "t"           # instant scoped to its thread
+            if args:
+                ev["args"] = args
+            out.append(ev)
+        return {"traceEvents": out, "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self.dropped,
+                              "captured_events": self._seen}}

@@ -34,6 +34,7 @@ import threading
 from typing import AsyncIterator, Optional
 
 from repro.core.tokenizer import EOS_ID
+from repro.obs import Telemetry
 from repro.serving.engine import Engine, Request, RequestState
 from repro.serving.loop import QueueSource, StepLoop, make_mode
 from repro.spec.scheduler import SpecConfig
@@ -125,11 +126,18 @@ class AsyncEngine:
 
     def __init__(self, engine: Engine, spec: Optional[SpecConfig] = None,
                  speculative: bool = False,
-                 overlap: Optional[bool] = None, verbose: bool = False):
+                 overlap: Optional[bool] = None, verbose: bool = False,
+                 telemetry: Optional[Telemetry] = None):
         self.engine = engine
         self._mode = make_mode(engine, spec=spec, speculative=speculative,
                                overlap=overlap)
         self._verbose = verbose
+        # ONE persistent Telemetry for the engine's whole lifetime: the
+        # HTTP server scrapes it live (/metrics, /stats, /trace) while
+        # the loop streams — cumulative across requests, unlike the
+        # per-run instance a sync generate() call creates
+        self.telemetry = telemetry if telemetry is not None else \
+            Telemetry(enabled=engine.telemetry_enabled)
         self._source = QueueSource()
         self._handles: dict[int, AsyncRequest] = {}
         self._hlock = threading.Lock()
@@ -151,7 +159,8 @@ class AsyncEngine:
             on_token=self._dispatch_token,
             on_admit=self._dispatch_admit,
             on_finish=self._dispatch_finish,
-            keep_states=False)
+            keep_states=False,
+            telemetry=self.telemetry)
         self._thread = threading.Thread(
             target=self._run_loop, name="repro-step-loop", daemon=True)
         self._thread.start()
@@ -214,6 +223,7 @@ class AsyncEngine:
             if self._source.remove(req):
                 with self._hlock:
                     self._handles.pop(req.rid, None)
+                self.telemetry.lifecycle.on_finish(req.rid, "cancelled")
                 return True
             return False
         h._withdraw = withdraw
@@ -221,13 +231,17 @@ class AsyncEngine:
             if req.rid in self._handles:
                 raise ValueError(f"rid {req.rid} already in flight")
             self._handles[req.rid] = h
+        # enqueue-time stamp BEFORE the queue insert: the loop thread
+        # can admit the request the instant it lands in the source
+        self.telemetry.lifecycle.on_enqueue(req.rid)
         try:
             self._source.submit(req)
         except BaseException:
             # e.g. the source closed (drain) between checks: don't leak
-            # the registered handle
+            # the registered handle (or its lifecycle record)
             with self._hlock:
                 self._handles.pop(req.rid, None)
+            self.telemetry.lifecycle.on_finish(req.rid, "rejected")
             raise
         return h
 

@@ -59,8 +59,14 @@ from repro.distributed.sharding import (serving_cache_shardings,
                                         serving_store_sharding)
 from repro.kernels.masked_logits.ops import (apply_grammar_mask,
                                              apply_grammar_mask_span)
+from repro.obs import Telemetry
 from repro.serving.kvpool import PagedAllocator, PoolExhausted
 from repro.spec.scheduler import SPAN_BUCKETS, SlotPhase, SpecConfig
+
+# shared disabled telemetry: the `obs=None` default of the selection
+# helpers — span() returns the no-op NULL_SPAN, so un-instrumented
+# callers (tests poking _select_tokens directly) pay nothing
+_OBS_OFF = Telemetry(enabled=False)
 
 # span widths the paged feed path jits against (chunked prefill drains
 # prompt backlog through these; decode-only steps ride the width-1 bucket
@@ -115,6 +121,8 @@ class RequestState:
     cancelled: bool = False     # set from any thread; the loop frees the
                                 # slot (and its KV pages) next step
     deadline_at: Optional[float] = None     # perf_counter() expiry
+    admit_t: Optional[float] = None         # perf_counter() at admission
+                                            # (telemetry: slot trace span)
 
 
 @dataclass
@@ -183,6 +191,9 @@ class _SelectCtx:
     ok: object = None
     need_mask: object = None
     clean: bool = True
+    mask_elapsed: float = 0.0   # rows_build + mask_dispatch span seconds
+                                # (resolve adds its sync span, then
+                                # distributes the total per slot)
 
 
 class Engine:
@@ -193,7 +204,8 @@ class Engine:
                  num_pages: Optional[int] = None, prefill_chunk: int = 32,
                  attn_backend: str = "auto", mesh=None,
                  trunk_shard: bool = False, overlap: bool = True,
-                 grammar_mode: str = "grammar_mask"):
+                 grammar_mode: str = "grammar_mask",
+                 telemetry: bool = True):
         """grammar_bundles: name -> (grammar, table, store).
         slots: decode-pool width B of the batched scheduler.
         paged: serve KV through the paged pool (docs/kv_paging.md) —
@@ -218,7 +230,14 @@ class Engine:
         grammar_mode: default approximation family for requests that
         don't set one — "grammar_mask" (the paper's overapproximating
         dmatch rows) or "grammar_strict" (underapproximating,
-        terminal-boundary-aligned rows)."""
+        terminal-boundary-aligned rows).
+        telemetry: default for the step loop's observability layer
+        (docs/observability.md) — phase spans, latency histograms,
+        request lifecycle, trace capture. False keeps only the exact
+        count stats (tokens/mask computations/...); timing fields of
+        EngineStats then read 0. Token streams are identical either
+        way — instrumentation wraps host-side work only and never
+        adds a device synchronization."""
         if grammar_mode not in GrammarConstraint.MODES:
             raise ValueError(f"unknown grammar_mode {grammar_mode!r}; "
                              f"expected one of {GrammarConstraint.MODES}")
@@ -240,6 +259,7 @@ class Engine:
         self.mesh = mesh
         self.trunk_shard = bool(trunk_shard)
         self.overlap = bool(overlap)
+        self.telemetry_enabled = bool(telemetry)
         if mesh is not None:
             if "model" not in mesh.axis_names:
                 raise ValueError(
@@ -536,17 +556,20 @@ class Engine:
         return int(rng.choice(valid, p=p))
 
     def _select_dispatch(self, logits, slot_state, pending: set,
-                         seeds, greedy, temp, top_k, top_p):
+                         seeds, greedy, temp, top_k, top_p, obs=None):
         """Phase A of per-step token selection: the opportunistic fast
         path (host sync) and the fused mask+sample DISPATCH — no sync of
         the sampled ids. Returns a `_SelectCtx` whose `.ids` device array
         is what the overlap path feeds into the next forward before the
-        host ever sees it. `_select_resolve` is phase B."""
+        host ever sees it. `_select_resolve` is phase B. `obs` is the
+        step loop's Telemetry; its spans only bracket host work that was
+        already timed — no device sync is added."""
+        if obs is None:
+            obs = _OBS_OFF
         B = self.slots
         committed: dict[int, int] = {}
         pending = set(pending)
-        ctr = {"mask_time": 0.0, "mask_computations": 0,
-               "opportunistic_hits": 0}
+        ctr = {"mask_computations": 0, "opportunistic_hits": 0}
         salts = np.array([slot_state[b].steps if slot_state[b] else 0
                           for b in range(B)], np.uint32)
         ctx = _SelectCtx(committed=committed, pending=pending, ctr=ctr,
@@ -555,129 +578,137 @@ class Engine:
         # ---- opportunistic fast path (whole batch at once) ----------
         if self.opportunistic and any(
                 slot_state[b].constraint is not None for b in pending):
-            keys = self._step_keys(seeds, salts, 0)
-            prop = np.asarray(self._sample_plain(
-                logits, jnp.asarray(keys), jnp.asarray(greedy),
-                jnp.asarray(temp), jnp.asarray(top_k),
-                jnp.asarray(top_p)))
-            ctx.clean = False       # committed ids came from the
+            with obs.span("opportunistic"):
+                keys = self._step_keys(seeds, salts, 0)
+                prop = np.asarray(self._sample_plain(
+                    logits, jnp.asarray(keys), jnp.asarray(greedy),
+                    jnp.asarray(temp), jnp.asarray(top_k),
+                    jnp.asarray(top_p)))
+                ctx.clean = False   # committed ids came from the
                                     # unmasked proposal stream
-            for b in list(pending):
-                st = slot_state[b]
-                t = int(prop[b])
-                if st.constraint is None:
-                    committed[b] = t
-                    pending.discard(b)
-                elif st.constraint.is_valid_extension(st.generated, t):
-                    st.opportunistic_hits += 1
-                    ctr["opportunistic_hits"] += 1
-                    committed[b] = t
-                    pending.discard(b)
+                for b in list(pending):
+                    st = slot_state[b]
+                    t = int(prop[b])
+                    if st.constraint is None:
+                        committed[b] = t
+                        pending.discard(b)
+                    elif st.constraint.is_valid_extension(st.generated, t):
+                        st.opportunistic_hits += 1
+                        ctr["opportunistic_hits"] += 1
+                        committed[b] = t
+                        pending.discard(b)
 
         if not pending:
             return ctx
 
         # ---- fused mask + batched sample dispatch -------------------
-        t_mask = time.perf_counter()
-        cons = [slot_state[b].constraint
-                if (b in pending and slot_state[b] is not None)
-                else None for b in range(B)]
-        texts = [slot_state[b].generated if slot_state[b] else b""
-                 for b in range(B)]
-        offs = np.array(
-            [self._row_offset.get(slot_state[b].req.grammar, 0)
-             if slot_state[b] is not None else 0
-             for b in range(B)], np.int64)
-        rows, eos, _ = GrammarConstraint.step_rows_batch(
-            cons, texts, max_accept=MAX_ACCEPT, row_offsets=offs)
-        need_mask = np.array([c is not None for c in cons], bool)
-        keys = self._step_keys(seeds, salts, 1)
-        ctx.masked, ctx.ids, ctx.ok = self._mask_sample(
-            logits, self._store_cat, jnp.asarray(rows),
-            jnp.asarray(eos), jnp.asarray(need_mask),
-            jnp.asarray(greedy), jnp.asarray(temp),
-            jnp.asarray(top_k), jnp.asarray(top_p),
-            jnp.asarray(keys))
+        # The two spans partition the old single mask_time bracket:
+        # their sum (ctx.mask_elapsed) is byte-identical accounting.
+        with obs.span("rows_build") as sp_rows:
+            cons = [slot_state[b].constraint
+                    if (b in pending and slot_state[b] is not None)
+                    else None for b in range(B)]
+            texts = [slot_state[b].generated if slot_state[b] else b""
+                     for b in range(B)]
+            offs = np.array(
+                [self._row_offset.get(slot_state[b].req.grammar, 0)
+                 if slot_state[b] is not None else 0
+                 for b in range(B)], np.int64)
+            rows, eos, _ = GrammarConstraint.step_rows_batch(
+                cons, texts, max_accept=MAX_ACCEPT, row_offsets=offs)
+        with obs.span("mask_dispatch") as sp_disp:
+            need_mask = np.array([c is not None for c in cons], bool)
+            keys = self._step_keys(seeds, salts, 1)
+            ctx.masked, ctx.ids, ctx.ok = self._mask_sample(
+                logits, self._store_cat, jnp.asarray(rows),
+                jnp.asarray(eos), jnp.asarray(need_mask),
+                jnp.asarray(greedy), jnp.asarray(temp),
+                jnp.asarray(top_k), jnp.asarray(top_p),
+                jnp.asarray(keys))
         ctx.need_mask = need_mask
         ctr["mask_computations"] += int(need_mask.sum())
-        ctr["mask_time"] += time.perf_counter() - t_mask
+        ctx.mask_elapsed = sp_rows.dur + sp_disp.dur
         return ctx
 
     def _select_resolve(self, ctx, slot_state,
-                        seeds, greedy, temp, top_k, top_p):
+                        seeds, greedy, temp, top_k, top_p, obs=None):
         """Phase B: sync the sampled ids, verify against the exact
         oracle, demote+resample on device, exact-filter fallback.
         Returns (committed, counters); `ctx.clean` stays True only when
         every pending slot committed its FIRST-round device id — the
         overlap path's speculative forward is valid exactly then."""
+        if obs is None:
+            obs = _OBS_OFF
         B = self.slots
         committed, pending, ctr = ctx.committed, ctx.pending, ctx.ctr
         salts = ctx.salts
         if ctx.ids is None:
             return committed, ctr
-        t_mask = time.perf_counter()
         masked = ctx.masked
-        ids_h, ok_h = np.asarray(ctx.ids), np.asarray(ctx.ok)
+        with obs.span("select_resolve") as sp_sync:
+            ids_h, ok_h = np.asarray(ctx.ids), np.asarray(ctx.ok)
         n_masked = int(ctx.need_mask.sum())
-        elapsed = (time.perf_counter() - t_mask) + \
-            ctr["mask_time"]        # rows build + dispatch + sync
+        # rows build + dispatch + sync — the historical mask_time
+        # definition (the oracle loop below was never part of it)
+        elapsed = sp_sync.dur + ctx.mask_elapsed
         for b in np.where(ctx.need_mask)[0]:
             slot_state[b].mask_computations += 1
             slot_state[b].mask_time += elapsed / max(n_masked, 1)
-        ctr["mask_time"] = elapsed
 
         # rejection wrapper: the α<=1 mask is sound but over-
         # approximate; verify with the exact oracle, demote invalid
         # picks on device, resample only the affected rows. Only
         # [B] ids/flags ever cross back to the host here.
-        for attempt in range(2, 6):
-            redo = np.zeros(B, bool)
-            ban = np.zeros(B, np.int32)
-            for b in sorted(pending):
-                st = slot_state[b]
-                if st.constraint is None:
-                    committed[b] = int(ids_h[b])
-                    pending.discard(b)
-                    continue
-                if not ok_h[b]:
-                    ctx.clean = False
-                    continue        # mask exhausted -> fallback
-                t = int(ids_h[b])
-                if t == EOS_ID or st.constraint.is_valid_extension(
-                        st.generated, t):
-                    committed[b] = t
-                    pending.discard(b)
-                else:
-                    redo[b] = True
-                    ban[b] = t
-            if not redo.any():
-                break
-            ctx.clean = False
-            keys = self._step_keys(seeds, salts, attempt)
-            masked, ids, ok = self._resample(
-                masked, jnp.asarray(ban), jnp.asarray(redo),
-                jnp.asarray(greedy), jnp.asarray(temp),
-                jnp.asarray(top_k), jnp.asarray(top_p),
-                jnp.asarray(keys))
-            ids_h, ok_h = np.asarray(ids), np.asarray(ok)
+        with obs.span("host_oracle"):
+            for attempt in range(2, 6):
+                redo = np.zeros(B, bool)
+                ban = np.zeros(B, np.int32)
+                for b in sorted(pending):
+                    st = slot_state[b]
+                    if st.constraint is None:
+                        committed[b] = int(ids_h[b])
+                        pending.discard(b)
+                        continue
+                    if not ok_h[b]:
+                        ctx.clean = False
+                        continue    # mask exhausted -> fallback
+                    t = int(ids_h[b])
+                    if t == EOS_ID or st.constraint.is_valid_extension(
+                            st.generated, t):
+                        committed[b] = t
+                        pending.discard(b)
+                    else:
+                        redo[b] = True
+                        ban[b] = t
+                if not redo.any():
+                    break
+                ctx.clean = False
+                keys = self._step_keys(seeds, salts, attempt)
+                masked, ids, ok = self._resample(
+                    masked, jnp.asarray(ban), jnp.asarray(redo),
+                    jnp.asarray(greedy), jnp.asarray(temp),
+                    jnp.asarray(top_k), jnp.asarray(top_p),
+                    jnp.asarray(keys))
+                ids_h, ok_h = np.asarray(ids), np.asarray(ok)
 
-        # exact-filter fallback for slots that never validated
-        for b in sorted(pending):
-            ctx.clean = False
-            st = slot_state[b]
-            nxt = self._fallback_exact(st, np.asarray(masked[b]), st.steps)
-            if nxt is None:
-                # nothing valid (should not happen for C_k in
-                # L_p(G)) — stop this request
-                st.done = True
-                st.finish_reason = "mask_exhausted"
-            else:
-                committed[b] = nxt
-            pending.discard(b)
+            # exact-filter fallback for slots that never validated
+            for b in sorted(pending):
+                ctx.clean = False
+                st = slot_state[b]
+                nxt = self._fallback_exact(st, np.asarray(masked[b]),
+                                           st.steps)
+                if nxt is None:
+                    # nothing valid (should not happen for C_k in
+                    # L_p(G)) — stop this request
+                    st.done = True
+                    st.finish_reason = "mask_exhausted"
+                else:
+                    committed[b] = nxt
+                pending.discard(b)
         return committed, ctr
 
     def _select_tokens(self, logits, slot_state, pending: set,
-                       seeds, greedy, temp, top_k, top_p):
+                       seeds, greedy, temp, top_k, top_p, obs=None):
         """Shared per-step token selection for the batched engines (the
         dense loop and the paged feed loop run this IDENTICAL code on a
         [B, V] logits matrix — equivalence by construction): the
@@ -688,9 +719,9 @@ class Engine:
         counters). Slots whose mask dead-ends are marked done
         ("mask_exhausted") and excluded from `committed`."""
         ctx = self._select_dispatch(logits, slot_state, pending, seeds,
-                                    greedy, temp, top_k, top_p)
+                                    greedy, temp, top_k, top_p, obs=obs)
         return self._select_resolve(ctx, slot_state, seeds, greedy, temp,
-                                    top_k, top_p)
+                                    top_k, top_p, obs=obs)
 
     def generate(self, requests: list[Request], verbose: bool = False):
         """Continuous batching over a fixed pool of `self.slots` slots.
@@ -949,7 +980,9 @@ class Engine:
     def _select(self, st: RequestState, logits, key) -> int:
         return int(st.req.decode.select(logits, key)[0])
 
-    def _step(self, st: RequestState, key) -> None:
+    def _step(self, st: RequestState, key, obs=None) -> None:
+        if obs is None:
+            obs = _OBS_OFF
         logits = self._logits(st)
         st.steps += 1
         req = st.req
@@ -963,21 +996,25 @@ class Engine:
         text = st.generated
 
         if self.opportunistic:
-            proposal = self._select(st, logits, key)
-            if gc.is_valid_extension(text, proposal):
+            with obs.span("opportunistic"):
+                proposal = self._select(st, logits, key)
+                hit = gc.is_valid_extension(text, proposal)
+            if hit:
                 st.opportunistic_hits += 1
                 self._commit(st, proposal)
                 return
 
-        t0 = time.perf_counter()
-        sm = gc.step_rows(text)
-        off = self._row_offset[req.grammar]
-        rows = jnp.asarray(np.where(sm.rows >= 0, sm.rows + off,
-                                    sm.rows)[None, :])
-        eos = jnp.asarray([sm.eos_allowed])
-        masked = apply_grammar_mask(logits, self._store_cat,
-                                    rows, eos, backend=self.mask_backend)
-        st.mask_time += time.perf_counter() - t0
+        with obs.span("rows_build") as sp_rows:
+            sm = gc.step_rows(text)
+            off = self._row_offset[req.grammar]
+            rows = jnp.asarray(np.where(sm.rows >= 0, sm.rows + off,
+                                        sm.rows)[None, :])
+            eos = jnp.asarray([sm.eos_allowed])
+        with obs.span("mask_dispatch") as sp_disp:
+            masked = apply_grammar_mask(logits, self._store_cat,
+                                        rows, eos,
+                                        backend=self.mask_backend)
+        st.mask_time += sp_rows.dur + sp_disp.dur
         st.mask_computations += 1
 
         # rejection wrapper (see generate() for the batched variant)
@@ -1008,6 +1045,7 @@ class Engine:
     def generate_sequential(self, requests: list[Request],
                             verbose: bool = False):
         """Round-robin continuous stepping, one request per device call."""
+        obs = Telemetry(enabled=self.telemetry_enabled)
         t0 = time.perf_counter()
         states = [self._start(r) for r in requests]
         keys = {r.rid: jax.random.PRNGKey(r.seed) for r in requests}
@@ -1015,7 +1053,7 @@ class Engine:
         while active:
             for st in list(active):
                 keys[st.req.rid], sub = jax.random.split(keys[st.req.rid])
-                self._step(st, sub)
+                self._step(st, sub, obs)
                 if st.done:
                     active.remove(st)
                     if verbose:

@@ -118,6 +118,23 @@ class PagedAllocator:
         the need): enough pages for the whole prompt plus one."""
         return self.available() >= self._pages_for(prompt_len + 1)
 
+    def metrics(self) -> dict:
+        """Point-in-time pool state for telemetry scrape-time gauges
+        (obs.Telemetry.register_kv). Plain ints/floats only."""
+        return {
+            "pages_total": self.P,
+            "pages_in_use": self.pages_in_use,
+            "pages_free": len(self.free),
+            "pages_cold": len(self._cold),
+            "peak_in_use": self.peak_in_use,
+            "prefix_hit_rate": self.prefix_hit_rate,
+            "page_allocs": self.total_allocs,
+            "evictions": self.evictions,
+            "cow_copies": self.cow_copies,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prompt_tokens": self.prompt_tokens,
+        }
+
     def _pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.ps)
 

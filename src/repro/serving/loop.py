@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core.constrain import MAX_ACCEPT
 from repro.core.decoding import DecodeConfig
+from repro.obs import Telemetry
 from repro.serving.kvpool import PoolExhausted
 from repro.spec.scheduler import SlotPhase, SpecConfig, SpecScheduler
 
@@ -153,7 +154,8 @@ class StepLoop:
                  on_token: Optional[Callable] = None,
                  on_admit: Optional[Callable] = None,
                  on_finish: Optional[Callable] = None,
-                 keep_states: bool = True):
+                 keep_states: bool = True,
+                 telemetry: Optional[Telemetry] = None):
         self.eng = engine
         self.mode = mode
         self.source = source
@@ -162,6 +164,11 @@ class StepLoop:
         self.on_admit = on_admit
         self.on_finish = on_finish
         self.keep_states = keep_states
+        # one Telemetry per loop: the sync generate() paths get a fresh
+        # per-run instance (EngineStats derives from it); AsyncEngine
+        # passes its persistent one so /metrics is cumulative
+        self.tele = telemetry if telemetry is not None else \
+            Telemetry(enabled=getattr(engine, "telemetry_enabled", True))
 
         B = engine.slots
         self.B = B
@@ -183,23 +190,58 @@ class StepLoop:
         self._controls: deque = deque()
         self._ctl_lock = threading.Lock()
 
-        # cumulative counters (stats() snapshots them)
+        # cumulative counters now live in the telemetry registry —
+        # stats() derives EngineStats from them (one accounting, two
+        # views). Count-style instruments are live even with telemetry
+        # disabled (plain float adds; the exact token/count invariants
+        # must hold either way); only spans/histograms/lifecycle/trace
+        # ride the disabled no-op path.
         self.t0 = time.perf_counter()
         self.all_states: list = []
-        self.requests_seen = 0
-        self.steps_total = 0        # sum of per-slot st.steps increments
-                                    # (matches sum(st.steps) without
-                                    # retaining states — async stats)
-        self.decode_steps = 0
-        self.mask_time = 0.0
-        self.mask_computations = 0
-        self.opportunistic_hits = 0
-        self.plan_time = 0.0
-        self.jump_tokens = 0
-        self.draft_proposed = 0
-        self.draft_accepted = 0
-        self.overlap_dispatched = 0
-        self.overlap_hits = 0
+        reg = self.tele.registry
+        self.c_requests = reg.counter(
+            "repro_requests_total", "requests admitted (incl. failed)")
+        self.c_tokens = reg.counter(
+            "repro_tokens_total", "tokens committed")
+        self.c_steps = reg.counter(
+            "repro_slot_steps_total",
+            "per-slot step increments (sum of st.steps)")
+        self.c_decode_steps = reg.counter(
+            "repro_decode_steps_total", "device decode/span calls")
+        self.c_mask_comp = reg.counter(
+            "repro_mask_computations_total", "grammar mask rows computed")
+        self.c_opp_hits = reg.counter(
+            "repro_opportunistic_hits_total",
+            "unconstrained proposals accepted by the oracle")
+        self.c_jump = reg.counter(
+            "repro_jump_tokens_total",
+            "grammar-forced tokens committed with no model call")
+        self.c_draft_prop = reg.counter(
+            "repro_draft_tokens_total", "speculative draft tokens",
+            {"kind": "proposed"})
+        self.c_draft_acc = reg.counter(
+            "repro_draft_tokens_total", "speculative draft tokens",
+            {"kind": "accepted"})
+        # overlap gate outcomes: dispatched = speculative forwards
+        # issued, hit = consumed next step (miss = dispatched - hit),
+        # probe = dispatches issued only to re-measure a gated-off
+        # regime. Registered eagerly so the series exist at zero.
+        self.c_overlap_disp = reg.counter(
+            "repro_overlap_forwards_total", "overlap gate outcomes",
+            {"outcome": "dispatched"})
+        self.c_overlap_hit = reg.counter(
+            "repro_overlap_forwards_total", "overlap gate outcomes",
+            {"outcome": "hit"})
+        self.c_overlap_probe = reg.counter(
+            "repro_overlap_forwards_total", "overlap gate outcomes",
+            {"outcome": "probe"})
+        if self.tele.enabled:
+            reg.gauge("repro_queue_depth", "requests waiting for a slot",
+                      fn=lambda: float(len(self.source)))
+            reg.gauge("repro_slots_active", "slots currently serving",
+                      fn=lambda: float(len(self.active())))
+            reg.gauge("repro_slots_total", "decode pool width",
+                      fn=lambda: float(self.B))
 
         mode.setup(self)
 
@@ -209,15 +251,18 @@ class StepLoop:
         return [b for b in range(self.B) if self.slot_state[b] is not None]
 
     def admit(self, b: int, req) -> None:
-        st = self.mode.admit(self, b, req)
-        self.slot_state[b] = st
-        self.seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
-        g, t, k, p = DecodeConfig.batch_arrays([req.decode])
-        self.greedy[b], self.temp[b] = g[0], t[0]
-        self.top_k[b], self.top_p[b] = k[0], p[0]
-        if req.deadline is not None:
-            st.deadline_at = time.perf_counter() + req.deadline
-        self.requests_seen += 1
+        with self.tele.span("admit") as sp:
+            st = self.mode.admit(self, b, req)
+            self.slot_state[b] = st
+            self.seeds[b] = np.uint32(req.seed & 0xFFFFFFFF)
+            g, t, k, p = DecodeConfig.batch_arrays([req.decode])
+            self.greedy[b], self.temp[b] = g[0], t[0]
+            self.top_k[b], self.top_p[b] = k[0], p[0]
+            if req.deadline is not None:
+                st.deadline_at = time.perf_counter() + req.deadline
+        self.c_requests.inc()
+        st.admit_t = sp.t0 if self.tele.enabled else time.perf_counter()
+        self.tele.lifecycle.on_admit(req.rid)
         if self.keep_states:
             self.all_states.append(st)
         if self.on_admit:
@@ -232,6 +277,13 @@ class StepLoop:
         if self.verbose:
             print(f"[req {st.req.rid}] {st.finish_reason}: "
                   f"{st.generated[:70]!r}")
+        self.tele.lifecycle.on_finish(st.req.rid, st.finish_reason)
+        tr = self.tele.tracer
+        if tr.active:
+            now = time.perf_counter()
+            t0 = getattr(st, "admit_t", None) or now
+            tr.add(f"slot {b}", f"req {st.req.rid}", t0, now - t0,
+                   {"reason": st.finish_reason, "tokens": st.steps})
         if self.on_finish:
             self.on_finish(st)
 
@@ -239,6 +291,12 @@ class StepLoop:
         """THE commit point for every mode (incl. jump-forward commits):
         engine bookkeeping + the streaming emit callback."""
         self.eng._commit(st, token)
+        self.c_tokens.inc()
+        self.tele.lifecycle.on_token(st.req.rid)
+        tr = self.tele.tracer
+        if tr.active:
+            tr.instant(f"slot {st.slot}", "token", time.perf_counter(),
+                       {"id": int(token)})
         if self.on_token:
             self.on_token(st, token)
 
@@ -246,7 +304,7 @@ class StepLoop:
         """Mirror per-slot st.steps increments into a loop-level total,
         so async stats (keep_states=False) report the same steps-based
         token count as the sync path's sum(st.steps)."""
-        self.steps_total += n
+        self.c_steps.inc(n)
 
     def fail_request(self, req, reason: str) -> None:
         """Finish a request that never got a slot (e.g. a prompt the KV
@@ -256,7 +314,8 @@ class StepLoop:
         st = RequestState(req=req)
         st.done = True
         st.finish_reason = reason
-        self.requests_seen += 1
+        self.c_requests.inc()
+        self.tele.lifecycle.on_finish(req.rid, reason)
         if self.keep_states:
             self.all_states.append(st)
         if self.on_admit:
@@ -356,31 +415,39 @@ class StepLoop:
     # ------------------------------ stats ------------------------------
 
     def stats(self):
+        """EngineStats as a view over the telemetry registry: counts
+        come from the always-live counters; mask_time/plan_time are the
+        phase-span totals (the historical mask_time bracket = rows
+        build + mask dispatch + ids sync — the oracle loop was never
+        included and reports separately as the host_oracle phase).
+        With telemetry disabled the timing fields read 0."""
         from repro.serving.engine import EngineStats
+        tele = self.tele
         s = EngineStats(
-            requests=self.requests_seen,
+            requests=int(self.c_requests.value),
             tokens=sum(st.steps for st in self.all_states)
-            if self.keep_states else self.steps_total,
+            if self.keep_states else int(self.c_steps.value),
             wall=time.perf_counter() - self.t0,
-            mask_time=self.mask_time,
-            mask_computations=self.mask_computations,
-            opportunistic_hits=self.opportunistic_hits,
-            decode_steps=self.decode_steps,
+            mask_time=(tele.phase_seconds("rows_build")
+                       + tele.phase_seconds("mask_dispatch")
+                       + tele.phase_seconds("select_resolve")),
+            mask_computations=int(self.c_mask_comp.value),
+            opportunistic_hits=int(self.c_opp_hits.value),
+            decode_steps=int(self.c_decode_steps.value),
             batch_slots=self.B,
             mesh_devices=self.eng.mesh.size if self.eng.mesh else 1,
-            jump_tokens=self.jump_tokens,
-            draft_proposed=self.draft_proposed,
-            draft_accepted=self.draft_accepted,
-            plan_time=self.plan_time,
-            overlap_dispatched=self.overlap_dispatched,
-            overlap_hits=self.overlap_hits,
+            jump_tokens=int(self.c_jump.value),
+            draft_proposed=int(self.c_draft_prop.value),
+            draft_accepted=int(self.c_draft_acc.value),
+            plan_time=tele.phase_seconds("plan"),
+            overlap_dispatched=int(self.c_overlap_disp.value),
+            overlap_hits=int(self.c_overlap_hit.value),
         )
         return self.mode.stats_extra(self, s)
 
     def add_select_ctr(self, ctr: dict) -> None:
-        self.mask_time += ctr["mask_time"]
-        self.mask_computations += ctr["mask_computations"]
-        self.opportunistic_hits += ctr["opportunistic_hits"]
+        self.c_mask_comp.inc(ctr["mask_computations"])
+        self.c_opp_hits.inc(ctr["opportunistic_hits"])
 
 
 # ------------------------------- modes ---------------------------------
@@ -455,10 +522,11 @@ class DenseMode(_ModeBase):
 
     def step(self, loop, active):
         eng = self.eng
+        tele = loop.tele
         if self.pending_logits is not None:
             logits = self.pending_logits       # dispatched last step
             self.pending_logits = None
-            loop.overlap_hits += 1
+            loop.c_overlap_hit.inc()
             self._hit_w += 1    # counted at CONSUMPTION, so a forward
                                 # invalidated by admit() is a miss in
                                 # the gate's window too
@@ -467,27 +535,30 @@ class DenseMode(_ModeBase):
             # sync; the sync does guarantee this dispatch completed
             # first, but copy anyway — same aliasing hazard class as
             # the paged feed (see PagedMode.step)
-            logits, self.caches = eng._decode(
-                eng.params, self.caches, jnp.asarray(self.cur_tok.copy()),
-                jnp.asarray(loop.feed_pos.copy()))
-        loop.decode_steps += 1
+            with tele.span("forward"):
+                logits, self.caches = eng._decode(
+                    eng.params, self.caches,
+                    jnp.asarray(self.cur_tok.copy()),
+                    jnp.asarray(loop.feed_pos.copy()))
+        loop.c_decode_steps.inc()
         for b in active:
             loop.slot_state[b].steps += 1
         loop.note_steps(len(active))
 
         ctx = eng._select_dispatch(
             logits, loop.slot_state, set(active), loop.seeds,
-            loop.greedy, loop.temp, loop.top_k, loop.top_p)
+            loop.greedy, loop.temp, loop.top_k, loop.top_p, obs=tele)
 
         # ---- overlap: dispatch step k+1's forward with the on-device
         # sampled ids BEFORE syncing step k back to the host ----------
         spec_logits = None
         if self.overlap and not eng.opportunistic and \
-                ctx.ids is not None and self._speculate_now():
-            spec_logits, self.caches = eng._decode(
-                eng.params, self.caches, ctx.ids,
-                jnp.asarray(loop.feed_pos + 1))
-            loop.overlap_dispatched += 1
+                ctx.ids is not None and self._speculate_now(loop):
+            with tele.span("overlap_forward"):
+                spec_logits, self.caches = eng._decode(
+                    eng.params, self.caches, ctx.ids,
+                    jnp.asarray(loop.feed_pos + 1))
+            loop.c_overlap_disp.inc()
             self._disp_w += 1
             if self._disp_w >= self.OVERLAP_WINDOW:
                 self._disp_w //= 2      # exponential decay: old hit
@@ -495,7 +566,7 @@ class DenseMode(_ModeBase):
 
         committed, ctr = eng._select_resolve(
             ctx, loop.slot_state, loop.seeds, loop.greedy, loop.temp,
-            loop.top_k, loop.top_p)
+            loop.top_k, loop.top_p, obs=tele)
         loop.add_select_ctr(ctr)
 
         for b, t in committed.items():
@@ -519,7 +590,7 @@ class DenseMode(_ModeBase):
                 set(committed) == set(active):
             self.pending_logits = spec_logits
 
-    def _speculate_now(self) -> bool:
+    def _speculate_now(self, loop) -> bool:
         if self._disp_w < self.OVERLAP_WARMUP:      # warm-up: always try
             return True
         if self._hit_w / self._disp_w >= self.OVERLAP_MIN_RATE:
@@ -527,7 +598,8 @@ class DenseMode(_ModeBase):
         self._gated_steps += 1          # hostile regime: probe rarely
         if self._gated_steps >= self.OVERLAP_PROBE:
             self._gated_steps = 0
-            return True
+            loop.c_overlap_probe.inc()  # dispatch issued only to
+            return True                 # re-measure a gated-off regime
         return False
 
 
@@ -543,6 +615,8 @@ class PagedMode(_ModeBase):
 
     def setup(self, loop):
         self.alloc, self.caches = self.eng._paged_setup(self.eng.slots)
+        if loop.tele.enabled:
+            loop.tele.register_kv(self.alloc)
 
     def can_admit_req(self, loop, req) -> bool:
         return self.eng._paged_can_admit(self.alloc, req, loop.ids_cache)
@@ -581,28 +655,29 @@ class PagedMode(_ModeBase):
         loop.stall = 0
 
         # ---- ONE [B, S] paged span feed for the whole pool ----------
-        pend = {b: loop.slot_state[b].pos - int(loop.feed_pos[b])
-                for b in live}
-        S = eng._feed_width(list(pend.values()))
-        tokens = np.zeros((B, S), np.int32)
-        fmask = np.zeros((B, S), bool)
-        sel = np.full(B, -1, np.int32)
-        feed_n: dict[int, int] = {}
-        for b in live:
-            st = loop.slot_state[b]
-            fs = int(loop.feed_pos[b])
-            k = min(pend[b], S)
-            new_caches = eng._prepare_feed(alloc, self.caches, b, st,
-                                           fs, k)
-            if new_caches is None:
-                continue                     # kv_oom: no feed
-            self.caches = new_caches
-            if pend[b] <= S:
-                sel[b] = k - 1               # selection this step
-            tokens[b, :k] = st.token_ids[fs:fs + k]
-            for i in range(k):
-                fmask[b, i] = (fs + i) >= st.write_from
-            feed_n[b] = k
+        with loop.tele.span("feed_build"):
+            pend = {b: loop.slot_state[b].pos - int(loop.feed_pos[b])
+                    for b in live}
+            S = eng._feed_width(list(pend.values()))
+            tokens = np.zeros((B, S), np.int32)
+            fmask = np.zeros((B, S), bool)
+            sel = np.full(B, -1, np.int32)
+            feed_n: dict[int, int] = {}
+            for b in live:
+                st = loop.slot_state[b]
+                fs = int(loop.feed_pos[b])
+                k = min(pend[b], S)
+                new_caches = eng._prepare_feed(alloc, self.caches, b, st,
+                                               fs, k)
+                if new_caches is None:
+                    continue                 # kv_oom: no feed
+                self.caches = new_caches
+                if pend[b] <= S:
+                    sel[b] = k - 1           # selection this step
+                tokens[b, :k] = st.token_ids[fs:fs + k]
+                for i in range(k):
+                    fmask[b, i] = (fs + i) >= st.write_from
+                feed_n[b] = k
         live = [b for b in live if b in feed_n]
         if live:
             page_tab = alloc.table_rows(np)
@@ -613,11 +688,13 @@ class PagedMode(_ModeBase):
             # Ship a private copy (jax keeps it alive; nobody mutates
             # it). Root-caused from a 5.47-magnitude logits drift in
             # chunked-prefill runs; see CHANGES.md PR 5 addendum.
-            logits, self.caches = eng._span_feed_paged(
-                eng.params, self.caches, jnp.asarray(tokens),
-                jnp.asarray(loop.feed_pos.copy()), jnp.asarray(fmask),
-                jnp.asarray(page_tab), jnp.asarray(sel))
-            loop.decode_steps += 1
+            with loop.tele.span("forward"):
+                logits, self.caches = eng._span_feed_paged(
+                    eng.params, self.caches, jnp.asarray(tokens),
+                    jnp.asarray(loop.feed_pos.copy()),
+                    jnp.asarray(fmask), jnp.asarray(page_tab),
+                    jnp.asarray(sel))
+            loop.c_decode_steps.inc()
             for b in live:
                 st = loop.slot_state[b]
                 alloc.note_fill(b, min(int(loop.feed_pos[b]) + feed_n[b],
@@ -633,7 +710,8 @@ class PagedMode(_ModeBase):
             if selecting:
                 committed, ctr = eng._select_tokens(
                     logits, loop.slot_state, set(selecting), loop.seeds,
-                    loop.greedy, loop.temp, loop.top_k, loop.top_p)
+                    loop.greedy, loop.temp, loop.top_k, loop.top_p,
+                    obs=loop.tele)
                 loop.add_select_ctr(ctr)
                 for b, t in committed.items():
                     st = loop.slot_state[b]
@@ -665,9 +743,13 @@ class SpecMode(_ModeBase):
                 "speculative decoding needs position-addressed decode "
                 "caches (attn/moe layer kinds); this arch has recurrent "
                 "or side-input state")
-        self.sched = SpecScheduler(self.spec, eng.tok)
+        self.sched = SpecScheduler(
+            self.spec, eng.tok,
+            telemetry=loop.tele if loop.tele.enabled else None)
         if self.paged:
             self.alloc, self.caches = eng._paged_setup(eng.slots)
+            if loop.tele.enabled:
+                loop.tele.register_kv(self.alloc)
         else:
             self.caches = eng._place_caches(
                 eng.model.init_decode_caches(eng.slots, eng.max_len))
@@ -725,20 +807,20 @@ class SpecMode(_ModeBase):
 
         # ---- host planning: jump-forward commits + drafting ---------
         plans = {}
-        t_plan = time.perf_counter()
-        for b in active:
-            st = slot_state[b]
-            if loop.waiting[b]:
-                from repro.spec.scheduler import SlotPlan
-                plans[b] = SlotPlan()
-                continue
-            backlog = (st.pos - 1) - int(feed_pos[b])
-            pre = st.jump_tokens
-            plans[b] = self.sched.plan_slot(st, commit_one, eng.max_len,
-                                            backlog=backlog)
-            loop.jump_tokens += st.jump_tokens - pre
-            st.phase = plans[b].phase.value
-        loop.plan_time += time.perf_counter() - t_plan
+        with loop.tele.span("plan"):
+            for b in active:
+                st = slot_state[b]
+                if loop.waiting[b]:
+                    from repro.spec.scheduler import SlotPlan
+                    plans[b] = SlotPlan()
+                    continue
+                backlog = (st.pos - 1) - int(feed_pos[b])
+                pre = st.jump_tokens
+                plans[b] = self.sched.plan_slot(st, commit_one,
+                                                eng.max_len,
+                                                backlog=backlog)
+                loop.c_jump.inc(st.jump_tokens - pre)
+                st.phase = plans[b].phase.value
         for b in active:
             st = slot_state[b]
             if st.done:      # finished mid-jump: nothing left to feed
@@ -793,17 +875,18 @@ class SpecMode(_ModeBase):
             return
         # feed_pos is mutated in place after dispatch — ship a private
         # copy (zero-copy aliasing hazard; see PagedMode.step)
-        if self.paged:
-            page_tab = self.alloc.table_rows(np)
-            logits, self.caches = eng._span_decode_paged(
-                eng.params, self.caches, jnp.asarray(tokens),
-                jnp.asarray(feed_pos.copy()), jnp.asarray(fmask),
-                jnp.asarray(page_tab))
-        else:
-            logits, self.caches = eng._span_decode(
-                eng.params, self.caches, jnp.asarray(tokens),
-                jnp.asarray(feed_pos.copy()), jnp.asarray(fmask))
-        loop.decode_steps += 1
+        with loop.tele.span("forward"):
+            if self.paged:
+                page_tab = self.alloc.table_rows(np)
+                logits, self.caches = eng._span_decode_paged(
+                    eng.params, self.caches, jnp.asarray(tokens),
+                    jnp.asarray(feed_pos.copy()), jnp.asarray(fmask),
+                    jnp.asarray(page_tab))
+            else:
+                logits, self.caches = eng._span_decode(
+                    eng.params, self.caches, jnp.asarray(tokens),
+                    jnp.asarray(feed_pos.copy()), jnp.asarray(fmask))
+        loop.c_decode_steps.inc()
         if self.paged:
             for b in live:
                 st = slot_state[b]
@@ -811,91 +894,96 @@ class SpecMode(_ModeBase):
                                             st.prompt_len))
 
         # ---- mask rows for every selection position -----------------
-        t_mask = time.perf_counter()
-        span_sms: dict[tuple, tuple] = {}   # (b, f) -> (StepMask, off)
-        eosm = np.zeros((B, S), bool)
-        consm = np.zeros((B, S), bool)
-        for b in live:
-            st = slot_state[b]
-            pl = plans[b]
-            if st.constraint is None or sel0[b] < 0:
-                continue
-            off = eng._row_offset[st.req.grammar]
-            text = st.generated
-            for i in range(len(pl.drafts) + 1):
-                if i > 0:
-                    text = text + eng.tok.id_to_bytes[pl.drafts[i - 1]]
-                if i == 0 and pl.stop_mask is not None:
-                    sm = pl.stop_mask   # reuse the jump analyzer's mask
-                else:
-                    sm = st.constraint.step_rows(text)
-                f = sel0[b] + i
-                span_sms[(b, f)] = (sm, off)
-                eosm[b, f] = sm.eos_allowed
-                consm[b, f] = True
-                st.mask_computations += 1
-                loop.mask_computations += 1
-        # row width grows in accept_width buckets on overflow (soundness)
-        A = max([MAX_ACCEPT] + [sm.rows.shape[0]
-                                for sm, _ in span_sms.values()])
-        rows = np.full((B, S, A), -1, np.int32)
-        for (b, f), (sm, off) in span_sms.items():
-            r = np.where(sm.rows >= 0, sm.rows + off, sm.rows)
-            rows[b, f, :r.shape[0]] = r
-        salts = np.array([slot_state[b].steps if slot_state[b] else 0
-                          for b in range(B)], np.uint32)
-        keys = eng._span_keys(loop.seeds, salts, S)
-        masked, ids, ok = eng._span_mask_select(
-            logits, eng._store_cat, jnp.asarray(rows),
-            jnp.asarray(eosm), jnp.asarray(consm),
-            jnp.asarray(loop.greedy), jnp.asarray(loop.temp),
-            jnp.asarray(loop.top_k), jnp.asarray(loop.top_p),
-            jnp.asarray(keys))
-        ids_h, ok_h = np.asarray(ids), np.asarray(ok)
-        loop.mask_time += time.perf_counter() - t_mask
+        # three spans partitioning the historical mask_time bracket:
+        # host row building, fused mask+select dispatch, ids sync
+        with loop.tele.span("rows_build"):
+            span_sms: dict[tuple, tuple] = {}  # (b, f) -> (StepMask, off)
+            eosm = np.zeros((B, S), bool)
+            consm = np.zeros((B, S), bool)
+            for b in live:
+                st = slot_state[b]
+                pl = plans[b]
+                if st.constraint is None or sel0[b] < 0:
+                    continue
+                off = eng._row_offset[st.req.grammar]
+                text = st.generated
+                for i in range(len(pl.drafts) + 1):
+                    if i > 0:
+                        text = text + eng.tok.id_to_bytes[pl.drafts[i - 1]]
+                    if i == 0 and pl.stop_mask is not None:
+                        sm = pl.stop_mask  # reuse jump analyzer's mask
+                    else:
+                        sm = st.constraint.step_rows(text)
+                    f = sel0[b] + i
+                    span_sms[(b, f)] = (sm, off)
+                    eosm[b, f] = sm.eos_allowed
+                    consm[b, f] = True
+                    st.mask_computations += 1
+                    loop.c_mask_comp.inc()
+            # row width grows in accept_width buckets on overflow
+            # (soundness)
+            A = max([MAX_ACCEPT] + [sm.rows.shape[0]
+                                    for sm, _ in span_sms.values()])
+            rows = np.full((B, S, A), -1, np.int32)
+            for (b, f), (sm, off) in span_sms.items():
+                r = np.where(sm.rows >= 0, sm.rows + off, sm.rows)
+                rows[b, f, :r.shape[0]] = r
+        with loop.tele.span("mask_dispatch"):
+            salts = np.array([slot_state[b].steps if slot_state[b] else 0
+                              for b in range(B)], np.uint32)
+            keys = eng._span_keys(loop.seeds, salts, S)
+            masked, ids, ok = eng._span_mask_select(
+                logits, eng._store_cat, jnp.asarray(rows),
+                jnp.asarray(eosm), jnp.asarray(consm),
+                jnp.asarray(loop.greedy), jnp.asarray(loop.temp),
+                jnp.asarray(loop.top_k), jnp.asarray(loop.top_p),
+                jnp.asarray(keys))
+        with loop.tele.span("select_resolve"):
+            ids_h, ok_h = np.asarray(ids), np.asarray(ok)
 
         # ---- accept: longest valid draft prefix + bonus token -------
-        for b in live:
-            st = slot_state[b]
-            pl = plans[b]
-            if sel0[b] < 0:
-                # pure backlog drain (jump replay or chunked prefill):
-                # advance the feed cursor; the step's jump commits must
-                # still reach the proposer history
-                self.sched.on_commit(st, pl.jumped)
-                feed_pos[b] += fed[b]
-                if self.paged and feed_pos[b] < st.prompt_len:
-                    st.phase = SlotPhase.PREFILLING.value
-                continue
-            idx = sel0[b]
-            committed = []
-            for d in pl.drafts:
-                if st.done or int(ids_h[b, idx]) != d:
-                    break
-                commit_one(st, d)
-                committed.append(d)
-                idx += 1
-            st.draft_proposed += len(pl.drafts)
-            st.draft_accepted += len(committed)
-            loop.draft_proposed += len(pl.drafts)
-            loop.draft_accepted += len(committed)
-            self.sched.on_verify(st, len(pl.drafts), len(committed))
-            if not st.done:
-                nxt = eng._resolve_span_selection(
-                    st, masked, b, idx, int(ids_h[b, idx]),
-                    bool(ok_h[b, idx]), st.steps)
-                if nxt is None:
-                    st.done = True
-                    st.finish_reason = "mask_exhausted"
+        with loop.tele.span("host_oracle"):
+            for b in live:
+                st = slot_state[b]
+                pl = plans[b]
+                if sel0[b] < 0:
+                    # pure backlog drain (jump replay or chunked
+                    # prefill): advance the feed cursor; the step's jump
+                    # commits must still reach the proposer history
+                    self.sched.on_commit(st, pl.jumped)
+                    feed_pos[b] += fed[b]
+                    if self.paged and feed_pos[b] < st.prompt_len:
+                        st.phase = SlotPhase.PREFILLING.value
+                    continue
+                idx = sel0[b]
+                committed = []
+                for d in pl.drafts:
+                    if st.done or int(ids_h[b, idx]) != d:
+                        break
+                    commit_one(st, d)
+                    committed.append(d)
+                    idx += 1
+                st.draft_proposed += len(pl.drafts)
+                st.draft_accepted += len(committed)
+                loop.c_draft_prop.inc(len(pl.drafts))
+                loop.c_draft_acc.inc(len(committed))
+                self.sched.on_verify(st, len(pl.drafts), len(committed))
+                if not st.done:
+                    nxt = eng._resolve_span_selection(
+                        st, masked, b, idx, int(ids_h[b, idx]),
+                        bool(ok_h[b, idx]), st.steps)
+                    if nxt is None:
+                        st.done = True
+                        st.finish_reason = "mask_exhausted"
+                    else:
+                        commit_one(st, nxt)
+                        committed.append(nxt)
+                self.sched.on_commit(st, pl.jumped + committed)
+                if st.done:
+                    loop.finish(b)
                 else:
-                    commit_one(st, nxt)
-                    committed.append(nxt)
-            self.sched.on_commit(st, pl.jumped + committed)
-            if st.done:
-                loop.finish(b)
-            else:
-                feed_pos[b] = st.pos - 1
-                st.phase = SlotPhase.DECODING.value
+                    feed_pos[b] = st.pos - 1
+                    st.phase = SlotPhase.DECODING.value
 
 
 def make_mode(engine, spec: Optional[SpecConfig] = None,

@@ -29,7 +29,20 @@ commit — the paper's constrained decoding, served live:
   already streaming keep running; the next /generate may use it.
 
   GET /healthz -> {"ok": true, "slots": B, "active": n,
-                   "grammars": [...]}
+                   "grammars": [...], "uptime_seconds": s,
+                   "queue_depth": q, "finish_reasons": {...}}
+
+Observability surfaces (docs/observability.md):
+
+  GET  /metrics  -> Prometheus text exposition: step-phase seconds,
+                    TTFT/ITL/queue-wait histograms, token/mask/overlap
+                    counters, KV pool gauges.
+  GET  /stats    -> the same data as one JSON snapshot (plus request
+                    p50/p99 summaries and trace-buffer state).
+  POST /trace    -> {"action": "start" | "stop" | "dump" | "clear"}.
+                    start/stop toggle span capture into the bounded
+                    ring buffer; dump returns Chrome trace-event JSON
+                    (loadable in ui.perfetto.dev) without stopping.
 
 The HTTP layer is deliberately tiny (HTTP/1.1, Content-Length bodies,
 chunked responses); production fronting belongs in a real proxy — this
@@ -237,13 +250,60 @@ class EngineServer:
 
     async def _healthz(self, writer) -> None:
         loop = self.aeng._loop_obj
+        tele = self.aeng.telemetry
         active = 0 if loop is None else len(loop.active())
-        body = json.dumps({"ok": True, "slots": self.aeng.engine.slots,
-                           "active": active,
-                           "grammars": sorted(self.aeng.engine.bundles)}
-                          ).encode()
+        body = json.dumps({
+            "ok": True,
+            "slots": self.aeng.engine.slots,
+            "active": active,
+            "grammars": sorted(self.aeng.engine.bundles),
+            "uptime_seconds": tele.uptime(),
+            "queue_depth": len(self.aeng._source),
+            "finish_reasons": tele.lifecycle.finish_reasons(),
+        }).encode()
         _start_response(writer, 200, "OK", "application/json",
                         chunked=False, body=body)
+
+    async def _metrics(self, writer) -> None:
+        text = self.aeng.telemetry.registry.render_prometheus()
+        _start_response(writer, 200, "OK",
+                        "text/plain; version=0.0.4; charset=utf-8",
+                        chunked=False, body=text.encode())
+
+    async def _stats(self, writer) -> None:
+        body = json.dumps(self.aeng.telemetry.stats_json()).encode()
+        _start_response(writer, 200, "OK", "application/json",
+                        chunked=False, body=body)
+
+    async def _trace(self, writer, body: bytes) -> None:
+        try:
+            spec = json.loads(body.decode() or "{}")
+        except (ValueError, UnicodeDecodeError):
+            raise ServerError(400, "body is not JSON")
+        action = spec.get("action")
+        tele = self.aeng.telemetry
+        if action == "start":
+            if not tele.enabled:
+                raise ServerError(409, "telemetry disabled "
+                                       "(engine started with "
+                                       "telemetry=False)")
+            tele.tracer.clear()
+            tele.tracer.start()
+            out = {"ok": True, "tracing": True}
+        elif action == "stop":
+            tele.tracer.stop()
+            out = {"ok": True, "tracing": False,
+                   "buffered_events": len(tele.tracer)}
+        elif action == "dump":
+            out = tele.tracer.export_chrome()
+        elif action == "clear":
+            tele.tracer.clear()
+            out = {"ok": True, "buffered_events": 0}
+        else:
+            raise ServerError(400, f"bad trace action {action!r}; "
+                                   f"expected start|stop|dump|clear")
+        _start_response(writer, 200, "OK", "application/json",
+                        chunked=False, body=json.dumps(out).encode())
 
     # ---------------------------- connection --------------------------
 
@@ -257,6 +317,12 @@ class EngineServer:
                     await self._load_grammar(writer, body)
                 elif method == "GET" and path == "/healthz":
                     await self._healthz(writer)
+                elif method == "GET" and path == "/metrics":
+                    await self._metrics(writer)
+                elif method == "GET" and path == "/stats":
+                    await self._stats(writer)
+                elif method == "POST" and path == "/trace":
+                    await self._trace(writer, body)
                 else:
                     raise ServerError(404, f"no route {method} {path}")
             except ServerError as e:
@@ -313,5 +379,6 @@ async def run_server(async_engine: AsyncEngine, host: str = "127.0.0.1",
     srv = EngineServer(async_engine)
     addr = await srv.start(host, port)
     print(f"serving on http://{addr[0]}:{addr[1]} "
-          f"(POST /generate, POST /grammars, GET /healthz)")
+          f"(POST /generate, POST /grammars, POST /trace, "
+          f"GET /healthz, GET /metrics, GET /stats)")
     await srv.serve_forever()

@@ -84,11 +84,25 @@ class SlotPlan:
 class SpecScheduler:
     """Owns proposers + planning; one instance per engine generate call."""
 
-    def __init__(self, cfg: SpecConfig, tokenizer):
+    def __init__(self, cfg: SpecConfig, tokenizer, telemetry=None):
         self.cfg = cfg
         self.tok = tokenizer
         self._proposers: dict = {}           # rid -> proposer
         self._backoff: dict = {}             # rid -> [skip_steps, misses]
+        self._c_plans = None                 # phase -> Counter
+        self._c_backoff = None
+        if telemetry is not None:
+            reg = telemetry.registry
+            self._c_plans = {
+                ph.value: reg.counter(
+                    "repro_spec_plans_total",
+                    "slot plans per step by resulting phase",
+                    {"phase": ph.value})
+                for ph in (SlotPhase.DECODING, SlotPhase.JUMPING,
+                           SlotPhase.DRAFTING)}
+            self._c_backoff = reg.counter(
+                "repro_spec_backoff_entries_total",
+                "fully-rejected draft windows that triggered backoff")
 
     # ------------------------- request lifecycle -------------------------
 
@@ -120,6 +134,8 @@ class SpecScheduler:
         else:
             bo[1] = min(bo[1] + 1, 30)
             bo[0] = min(1 << (bo[1] - 1), self.cfg.draft_backoff)
+            if self._c_backoff is not None:
+                self._c_backoff.inc()
 
     def on_finish(self, st) -> None:
         self._proposers.pop(st.req.rid, None)
@@ -134,6 +150,15 @@ class SpecScheduler:
 
     def plan_slot(self, st, commit, max_len: int,
                   backlog: int = 0) -> SlotPlan:
+        plan = self._plan_slot(st, commit, max_len, backlog)
+        if self._c_plans is not None:
+            c = self._c_plans.get(plan.phase.value)
+            if c is not None:
+                c.inc()
+        return plan
+
+    def _plan_slot(self, st, commit, max_len: int,
+                   backlog: int = 0) -> SlotPlan:
         """Plan one slot for this step. `commit(st, token)` is the
         engine's commit hook (updates steps/stats/text); jump-forward
         tokens are committed here, before any device work.

@@ -1,0 +1,625 @@
+"""Observability subsystem (repro.obs + serving integration).
+
+Four contract groups (docs/observability.md):
+
+  * **unit math** — log-spaced bucket layout, histogram bucket
+    placement, PromQL-style quantile interpolation, Prometheus text
+    rendering (cumulative buckets, escaping), trace ring buffer +
+    Chrome-event export, lifecycle state machine;
+  * **identity** — telemetry on vs off is token-for-token identical in
+    every engine mode (dense greedy/sampled, overlap on/off, paged,
+    speculative, async): observation may never perturb decoding;
+  * **overhead** — the disabled span path stays under the named budget
+    `DISABLED_SPAN_BUDGET_S` (cheap enough to leave in every hot path
+    unconditionally), the enabled path under `ENABLED_SPAN_BUDGET_S`;
+  * **purity** — `repro.obs` imports no jax/numpy (structural proof
+    that telemetry cannot add device synchronization), and the serving
+    loop gained no explicit sync calls.
+
+The HTTP surface (/metrics /stats /trace /healthz) is exercised
+end-to-end against a live server at the bottom.
+"""
+import asyncio
+import json
+import math
+import os
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro.core.decoding import DecodeConfig
+from repro.obs import (DISABLED_SPAN_BUDGET_S, ENABLED_SPAN_BUDGET_S,
+                       Histogram, LifecycleTracker, MetricsRegistry,
+                       Telemetry, Tracer, log_buckets)
+from repro.serving.engine import Engine, Request
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+MAX_LEN = 160
+
+
+# ============================ unit: buckets ============================
+
+def test_log_buckets_spacing():
+    b = log_buckets(1e-3, 10.0, per_decade=4)
+    assert b[0] == 1e-3 and b[-1] >= 10.0
+    # constant ratio 10^(1/4) between consecutive bounds
+    for lo, hi in zip(b, b[1:]):
+        assert hi / lo == pytest.approx(10 ** 0.25, rel=1e-9)
+    # 4 decades x 4 per decade + the closing bound
+    assert len(b) == 17
+
+
+def test_log_buckets_rejects_bad_spec():
+    for lo, hi, per in ((0.0, 1.0, 4), (1.0, 1.0, 4), (1.0, 10.0, 0),
+                        (-1.0, 1.0, 4)):
+        with pytest.raises(ValueError):
+            log_buckets(lo, hi, per)
+
+
+def test_histogram_bucket_placement():
+    h = Histogram(bounds=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.0, 1.5, 3.0, 100.0):
+        h.observe(v)
+    # <=1.0: {0.5, 1.0}; <=2.0: {1.5}; <=4.0: {3.0}; +Inf: {100.0}
+    assert h.counts == [2, 1, 1, 1]
+    assert h.count == 5
+    assert h.sum == pytest.approx(106.0)
+
+
+def test_histogram_quantile_interpolates():
+    h = Histogram(bounds=(1.0, 2.0, 4.0))
+    for _ in range(10):
+        h.observe(1.5)          # all mass in the (1, 2] bucket
+    # PromQL interpolation: lo + (hi-lo) * target/c inside the bucket
+    assert h.quantile(0.5) == pytest.approx(1.5)
+    assert h.quantile(0.0) == pytest.approx(1.0)
+    assert h.quantile(1.0) == pytest.approx(2.0)
+
+
+def test_histogram_quantile_overflow_and_empty():
+    h = Histogram(bounds=(1.0, 2.0))
+    assert math.isnan(h.quantile(0.5))          # empty
+    h.observe(50.0)                             # overflow bucket
+    assert h.quantile(0.5) == 2.0               # reports largest bound
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_histogram_rejects_unsorted_bounds():
+    with pytest.raises(ValueError):
+        Histogram(bounds=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        Histogram(bounds=(1.0, 1.0))
+
+
+# ============================ unit: registry ===========================
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "help", {"k": "a"})
+    b = reg.counter("x_total", "help", {"k": "a"})
+    c = reg.counter("x_total", "help", {"k": "b"})
+    assert a is b and a is not c
+    a.inc(2)
+    assert b.value == 2.0
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total")
+
+
+def test_registry_fn_rebind():
+    reg = MetricsRegistry()
+    g = reg.gauge("pool", fn=lambda: 1.0)
+    assert g.value == 1.0
+    g2 = reg.gauge("pool", fn=lambda: 7.0)      # re-register: rebind
+    assert g2 is g and g.value == 7.0
+
+
+_PROM_LINE = re.compile(
+    r"^(# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]* .+"
+    r"|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? "
+    r"(NaN|[+-]?Inf|[+-]?(\d+\.?\d*([eE][+-]?\d+)?|\.\d+([eE][+-]?\d+)?)))$")
+
+
+def _assert_valid_prometheus(text: str):
+    assert text.endswith("\n")
+    for line in text.splitlines():
+        if line:
+            assert _PROM_LINE.match(line), f"bad line: {line!r}"
+
+
+def test_render_prometheus_counters_gauges():
+    reg = MetricsRegistry()
+    reg.counter("t_total", "tokens", {"kind": "a"}).inc(3)
+    reg.gauge("depth", "queue").set(2.5)
+    text = reg.render_prometheus()
+    _assert_valid_prometheus(text)
+    assert '# TYPE t_total counter' in text
+    assert 't_total{kind="a"} 3' in text
+    assert "depth 2.5" in text
+
+
+def test_render_prometheus_histogram_cumulative():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "latency", buckets=(1.0, 2.0))
+    for v in (0.5, 1.5, 9.0):
+        h.observe(v)
+    text = reg.render_prometheus()
+    _assert_valid_prometheus(text)
+    # cumulative buckets, _count == +Inf bucket, exact sum
+    assert 'lat_bucket{le="1"} 1' in text
+    assert 'lat_bucket{le="2"} 2' in text
+    assert 'lat_bucket{le="+Inf"} 3' in text
+    assert "lat_count 3" in text
+    assert "lat_sum 11" in text
+
+
+def test_render_prometheus_label_escaping():
+    reg = MetricsRegistry()
+    reg.counter("e_total", "", {"v": 'a"b\\c\nd'}).inc()
+    text = reg.render_prometheus()
+    assert r'e_total{v="a\"b\\c\nd"} 1' in text
+
+
+# ============================= unit: trace =============================
+
+def test_tracer_inactive_records_nothing():
+    tr = Tracer(capacity=8)
+    tr.add("forward", "forward", 1.0, 0.5)
+    assert len(tr) == 0
+    tr.start()
+    tr.add("forward", "forward", 1.0, 0.5)
+    tr.stop()
+    tr.add("forward", "forward", 2.0, 0.5)
+    assert len(tr) == 1
+
+
+def test_tracer_ring_bounds_and_drop_count():
+    tr = Tracer(capacity=4)
+    tr.start()
+    for i in range(10):
+        tr.add("t", "e", float(i), 0.1)
+    assert len(tr) == 4
+    assert tr.dropped == 6
+    doc = tr.export_chrome()
+    assert doc["otherData"] == {"dropped_events": 6, "captured_events": 10}
+    tr.clear()
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_tracer_chrome_export_shape():
+    tr = Tracer()
+    tr.start()
+    tr.add("forward", "forward", 10.0, 0.5, {"step": 1})
+    tr.add("slot 0", "req 7", 10.1, 0.2)
+    tr.instant("slot 0", "token", 10.2)
+    doc = tr.export_chrome()
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    names = {e["args"]["name"] for e in meta}
+    assert {"repro engine", "forward", "slot 0"} <= names
+    # known phase tracks order before slot tracks
+    tids = {e["args"]["name"]: e["tid"] for e in meta
+            if e["name"] == "thread_name"}
+    assert tids["forward"] < tids["slot 0"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert len(xs) == 2 and len(inst) == 1
+    # µs timestamps rebased to the earliest event
+    assert min(e["ts"] for e in xs) == 0.0
+    fwd = next(e for e in xs if e["name"] == "forward")
+    assert fwd["dur"] == pytest.approx(0.5e6)
+    assert fwd["args"] == {"step": 1}
+    assert inst[0]["s"] == "t"
+    assert inst[0]["ts"] == pytest.approx(0.2e6)
+    json.dumps(doc)             # must be JSON-serializable as-is
+
+
+# =========================== unit: lifecycle ===========================
+
+def test_lifecycle_ttft_vs_itl():
+    lt = LifecycleTracker(MetricsRegistry())
+    lt.on_enqueue(1)
+    lt.on_admit(1)
+    for _ in range(4):
+        lt.on_token(1)
+    rec = lt.on_finish(1, "eos")
+    assert rec.tokens == 4
+    assert lt.h_ttft.count == 1         # first token only
+    assert lt.h_itl.count == 3          # the other three gaps
+    assert lt.h_queue.count == 1
+    assert lt.h_tokens.count == 1
+    assert lt.inflight() == 0
+    assert lt.finish_reasons() == {"eos": 1}
+
+
+def test_lifecycle_admit_without_enqueue_is_sync_path():
+    lt = LifecycleTracker(MetricsRegistry())
+    lt.on_admit(5)              # sync engines never enqueue
+    lt.on_token(5)
+    lt.on_finish(5, "length")
+    assert lt.h_queue.count == 1
+    assert lt.h_queue.sum == pytest.approx(0.0, abs=1e-3)
+    assert lt.summary()["ttft"]["count"] == 1
+
+
+def test_lifecycle_unknown_rid_is_noop():
+    lt = LifecycleTracker(MetricsRegistry())
+    lt.on_token(99)
+    assert lt.on_finish(99, "cancelled") is None
+    assert lt.h_ttft.count == 0
+    # the finish reason still counts (request failed before admission)
+    assert lt.finish_reasons() == {"cancelled": 1}
+
+
+def test_telemetry_phase_accounting():
+    tele = Telemetry(enabled=True)
+    with tele.span("rows_build") as sp:
+        time.sleep(0.002)
+    assert sp.dur >= 0.002
+    assert tele.phase_seconds("rows_build") == pytest.approx(sp.dur)
+    assert tele.phase_calls("rows_build") == 1
+    assert tele.phase_seconds("never_entered") == 0.0
+    # spans record trace events only while a capture is active
+    assert len(tele.tracer) == 0
+    tele.tracer.start()
+    with tele.span("rows_build"):
+        pass
+    assert len(tele.tracer) == 1
+
+
+def test_telemetry_disabled_span_is_null():
+    tele = Telemetry(enabled=False)
+    s1 = tele.span("forward")
+    s2 = tele.span("rows_build")
+    assert s1 is s2             # one shared object, zero allocation
+    with s1 as sp:
+        time.sleep(0.001)
+    assert sp.dur == 0.0
+    assert tele.phase_seconds("forward") == 0.0
+    # count-style instruments stay live when disabled
+    tele.counter("c_total").inc(3)
+    assert tele.counter("c_total").value == 3.0
+
+
+# ============================== overhead ===============================
+
+def _best_per_call(fn, n=20000, repeats=5):
+    best = math.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(n)
+        best = min(best, (time.perf_counter() - t0) / n)
+    return best
+
+
+def test_disabled_span_overhead_under_budget():
+    tele = Telemetry(enabled=False)
+
+    def run(n):
+        span = tele.span
+        for _ in range(n):
+            with span("forward"):
+                pass
+    assert _best_per_call(run) < DISABLED_SPAN_BUDGET_S
+
+
+def test_enabled_span_overhead_under_budget():
+    tele = Telemetry(enabled=True)        # tracing off: steady state
+
+    def run(n):
+        span = tele.span
+        for _ in range(n):
+            with span("forward"):
+                pass
+    assert _best_per_call(run) < ENABLED_SPAN_BUDGET_S
+
+
+# ================================ purity ===============================
+
+_BANNED_IMPORT = re.compile(r"^\s*(import|from)\s+(jax|numpy)\b", re.M)
+
+
+def test_obs_package_never_imports_jax_or_numpy():
+    obs_dir = SRC / "repro" / "obs"
+    for py in sorted(obs_dir.glob("*.py")):
+        assert not _BANNED_IMPORT.search(py.read_text()), py
+    # and transitively: a fresh interpreter importing repro.obs must not
+    # end up with jax or numpy in sys.modules
+    code = ("import sys; import repro.obs; "
+            "bad = [m for m in ('jax', 'numpy') if m in sys.modules]; "
+            "sys.exit(1 if bad else 0)")
+    r = subprocess.run([sys.executable, "-c", code],
+                       env={**os.environ, "PYTHONPATH": str(SRC)},
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, r.stderr
+
+
+def test_serving_loop_has_no_explicit_device_sync():
+    """Telemetry must not have smuggled a sync into the step loop: the
+    loop and engine sources contain no block_until_ready / .item() /
+    device_get — timestamps only bracket host-side work."""
+    for mod in ("loop", "engine", "async_engine", "server"):
+        src = (SRC / "repro" / "serving" / f"{mod}.py").read_text()
+        for pat in ("block_until_ready", ".item()", "device_get"):
+            assert pat not in src, (mod, pat)
+
+
+# ======================= identity: telemetry off =======================
+
+@pytest.fixture(scope="module")
+def obs_engines(tokenizer, grammar_bundle):
+    """(make) factory building engine pairs that share model + params so
+    telemetry on/off runs are comparable bit-for-bit."""
+    from dataclasses import replace
+
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    bundles = {}
+    for name in ("json", "jsonmsg"):
+        g, tab, store, _ = grammar_bundle(name)
+        bundles[name] = (g, tab, store)
+    cfg = get_config("syncode-demo")
+    cfg = replace(cfg, vocab_size=tokenizer.vocab_size, num_layers=2,
+                  d_model=128, d_ff=256, num_heads=4, num_kv_heads=2,
+                  head_dim=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def make(**kw):
+        kw.setdefault("slots", 4)
+        return Engine(model, params, tokenizer, bundles, max_len=MAX_LEN,
+                      **kw)
+    return make
+
+
+def _reqs(grammar="json", n=3, max_new=12, method="sample",
+          temperature=1.0):
+    return [Request(rid=i, prompt=b"Q: generate. A:", grammar=grammar,
+                    max_new_tokens=max_new,
+                    decode=DecodeConfig(method=method,
+                                        temperature=temperature),
+                    seed=i) for i in range(n)]
+
+
+def _ids(states):
+    return {s.req.rid: (s.token_ids, s.finish_reason) for s in states}
+
+
+@pytest.mark.parametrize("method", ["greedy", "sample"])
+@pytest.mark.parametrize("overlap", [True, False])
+def test_dense_identity_telemetry_off(obs_engines, method, overlap):
+    on = obs_engines(telemetry=True, overlap=overlap)
+    off = obs_engines(telemetry=False, overlap=overlap)
+    s_on, st_on = on.generate(_reqs(method=method))
+    s_off, st_off = off.generate(_reqs(method=method))
+    assert _ids(s_on) == _ids(s_off)
+    # exact count stats survive telemetry off; timing stats read 0
+    assert st_on.tokens == st_off.tokens
+    assert st_on.mask_computations == st_off.mask_computations
+    assert st_on.opportunistic_hits == st_off.opportunistic_hits
+    assert st_on.mask_time > 0.0
+    assert st_off.mask_time == 0.0
+
+
+def test_paged_identity_telemetry_off(obs_engines):
+    on = obs_engines(telemetry=True, paged=True, page_size=8)
+    off = obs_engines(telemetry=False, paged=True, page_size=8)
+    s_on, st_on = on.generate(_reqs(n=5))
+    s_off, st_off = off.generate(_reqs(n=5))
+    assert _ids(s_on) == _ids(s_off)
+    assert st_on.kv_pages_in_use == st_off.kv_pages_in_use
+    assert st_on.prefix_hit_rate == st_off.prefix_hit_rate
+
+
+def test_spec_identity_telemetry_off(obs_engines):
+    from repro.spec import SpecConfig
+    spec = SpecConfig(literal_jump=False)
+    on = obs_engines(telemetry=True)
+    off = obs_engines(telemetry=False)
+    s_on, st_on = on.generate_speculative(
+        _reqs("jsonmsg", method="greedy"), spec=spec)
+    s_off, st_off = off.generate_speculative(
+        _reqs("jsonmsg", method="greedy"), spec=spec)
+    assert _ids(s_on) == _ids(s_off)
+    assert st_on.jump_tokens == st_off.jump_tokens
+    assert st_on.draft_accepted == st_off.draft_accepted
+    assert st_on.plan_time >= 0.0 and st_off.plan_time == 0.0
+
+
+def test_async_identity_telemetry_off(obs_engines):
+    from repro.serving.async_engine import AsyncEngine
+
+    def run(engine):
+        async def go():
+            aeng = AsyncEngine(engine)
+            try:
+                return await aeng.generate(_reqs(n=6)), aeng
+            finally:
+                await aeng.drain()
+        return asyncio.run(go())
+
+    (s_on, _), aeng_on = run(obs_engines(telemetry=True))
+    (s_off, _), aeng_off = run(obs_engines(telemetry=False))
+    assert _ids(s_on) == _ids(s_off)
+    # the enabled async engine accumulated lifecycle records
+    assert aeng_on.telemetry.lifecycle.summary()["ttft"]["count"] == 6
+    assert aeng_off.telemetry.lifecycle.summary() == {}
+
+
+def test_sync_stats_derive_from_registry(obs_engines):
+    """EngineStats.mask_time is the rows_build + mask_dispatch +
+    select_resolve phase sum — one source of truth, two views."""
+    from repro.serving.async_engine import AsyncEngine
+
+    async def go():
+        aeng = AsyncEngine(obs_engines(telemetry=True))
+        try:
+            return await aeng.generate(_reqs()), aeng.telemetry
+        finally:
+            await aeng.drain()
+    (_, stats), tele = asyncio.run(go())
+    want = sum(tele.phase_seconds(p) for p in
+               ("rows_build", "mask_dispatch", "select_resolve"))
+    assert stats.mask_time == pytest.approx(want)
+    assert tele.phase_calls("forward") > 0
+    assert tele.phase_calls("host_oracle") >= 0
+
+
+# ============================ HTTP surface =============================
+
+async def _http(host, port, method, path, body=b""):
+    reader, writer = await asyncio.open_connection(host, port)
+    req = (f"{method} {path} HTTP/1.1\r\nHost: x\r\n"
+           f"Content-Length: {len(body)}\r\n\r\n").encode() + body
+    writer.write(req)
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionError, BrokenPipeError):
+        pass
+    head, _, rest = data.partition(b"\r\n\r\n")
+    status = int(head.split(b" ")[1])
+    if b"chunked" in head.lower():
+        out, rem = b"", rest
+        while rem:
+            size, _, rem = rem.partition(b"\r\n")
+            n = int(size, 16)
+            if n == 0:
+                break
+            out += rem[:n]
+            rem = rem[n + 2:]
+        return status, out
+    return status, rest
+
+
+def test_http_observability_surface(obs_engines):
+    from repro.serving.async_engine import AsyncEngine
+    from repro.serving.server import EngineServer
+
+    async def go():
+        aeng = AsyncEngine(obs_engines(telemetry=True))
+        srv = EngineServer(aeng)
+        host, port = await srv.start(port=0)
+        try:
+            status, body = await _http(host, port, "POST", "/trace",
+                                       b'{"action": "start"}')
+            assert status == 200 and json.loads(body)["tracing"] is True
+
+            status, body = await _http(
+                host, port, "POST", "/generate",
+                json.dumps({"prompt": "say:", "grammar": "json",
+                            "max_new_tokens": 8, "method": "sample",
+                            "temperature": 1.0, "seed": 0}).encode())
+            assert status == 200
+            final = [json.loads(l) for l in body.splitlines() if l][-1]
+            assert final["done"] is True and final["tokens"] > 0
+
+            # ---- /metrics: valid exposition with live series
+            status, body = await _http(host, port, "GET", "/metrics")
+            assert status == 200
+            text = body.decode()
+            _assert_valid_prometheus(text)
+            for fam in ("repro_step_phase_seconds_total",
+                        "repro_request_ttft_seconds",
+                        "repro_tokens_total", "repro_requests_total",
+                        "repro_overlap_forwards_total",
+                        "repro_queue_depth", "repro_uptime_seconds"):
+                assert f"# TYPE {fam} " in text, fam
+            m = re.search(r"^repro_tokens_total (\S+)$", text, re.M)
+            assert m and float(m.group(1)) == final["tokens"]
+            m = re.search(r"^repro_request_ttft_seconds_count (\S+)$",
+                          text, re.M)
+            assert m and float(m.group(1)) == 1
+
+            # ---- /stats: JSON twin of the same registry
+            status, body = await _http(host, port, "GET", "/stats")
+            assert status == 200
+            stats = json.loads(body)
+            assert stats["enabled"] is True
+            assert stats["requests"]["ttft"]["count"] == 1
+            assert stats["requests"]["tokens"]["mean"] == final["tokens"]
+            assert stats["trace"]["active"] is True
+            assert stats["metrics"]["repro_tokens_total"][
+                "series"][0]["value"] == final["tokens"]
+
+            # ---- /trace: dump carries phase slices + slot tracks
+            status, body = await _http(host, port, "POST", "/trace",
+                                       b'{"action": "dump"}')
+            assert status == 200
+            evs = json.loads(body)["traceEvents"]
+            phases = {e["name"] for e in evs if e["ph"] == "X"}
+            assert "forward" in phases and "rows_build" in phases
+            tracks = {e["args"]["name"] for e in evs
+                      if e.get("name") == "thread_name"}
+            assert any(t.startswith("slot ") for t in tracks)
+
+            status, body = await _http(host, port, "POST", "/trace",
+                                       b'{"action": "stop"}')
+            assert json.loads(body)["tracing"] is False
+            status, body = await _http(host, port, "POST", "/trace",
+                                       b'{"action": "clear"}')
+            assert json.loads(body)["buffered_events"] == 0
+            status, _ = await _http(host, port, "POST", "/trace",
+                                    b'{"action": "bogus"}')
+            assert status == 400
+
+            # ---- /healthz: uptime + queue + finish reasons
+            status, body = await _http(host, port, "GET", "/healthz")
+            assert status == 200
+            hz = json.loads(body)
+            assert hz["ok"] is True and hz["uptime_seconds"] > 0
+            assert hz["queue_depth"] == 0
+            assert sum(hz["finish_reasons"].values()) == 1
+        finally:
+            await srv.stop(drain=False)
+    asyncio.run(go())
+
+
+def test_http_trace_start_rejected_when_disabled(obs_engines):
+    from repro.serving.async_engine import AsyncEngine
+    from repro.serving.server import EngineServer
+
+    async def go():
+        aeng = AsyncEngine(obs_engines(telemetry=False))
+        srv = EngineServer(aeng)
+        host, port = await srv.start(port=0)
+        try:
+            status, body = await _http(host, port, "POST", "/trace",
+                                       b'{"action": "start"}')
+            assert status == 409
+            assert "disabled" in json.loads(body)["error"]
+
+            status, body = await _http(
+                host, port, "POST", "/generate",
+                json.dumps({"prompt": "say:", "grammar": "json",
+                            "max_new_tokens": 6, "method": "greedy",
+                            "stream": False}).encode())
+            assert status == 200
+            final = json.loads(body.splitlines()[-1])
+            assert final["done"] is True and final["tokens"] > 0
+
+            # exact counters still render when telemetry is off; the
+            # timing families (phases, lifecycle histograms) are absent
+            status, body = await _http(host, port, "GET", "/metrics")
+            assert status == 200
+            text = body.decode()
+            _assert_valid_prometheus(text)
+            m = re.search(r"^repro_tokens_total (\S+)$", text, re.M)
+            assert m and float(m.group(1)) == final["tokens"]
+            assert "repro_step_phase" not in text
+            assert "repro_request_ttft_seconds" not in text
+
+            status, body = await _http(host, port, "GET", "/stats")
+            assert status == 200
+            assert json.loads(body)["enabled"] is False
+        finally:
+            await srv.stop(drain=False)
+    asyncio.run(go())
