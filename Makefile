@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test bench bench-smoke obs-smoke docs-check
+.PHONY: test bench bench-smoke bench-regress obs-smoke docs-check
 
 test:              ## tier-1 test suite (same command CI runs)
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -15,6 +15,11 @@ bench-smoke:       ## seconds-scale paged + sharded + async engine smoke runs (C
 	PYTHONPATH=src $(PY) -m benchmarks.bench_table1 --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.bench_sharded --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.bench_async --smoke
+
+bench-regress:     ## perf-regression gate: smoke artifact vs committed baseline (warn-only) + bench_diff self-test (hard gate)
+	PYTHONPATH=src $(PY) -m benchmarks.bench_smoke --json-out artifacts/bench/BENCH_smoke_current.json
+	$(PY) scripts/bench_diff.py benchmarks/baselines/BENCH_smoke.json artifacts/bench/BENCH_smoke_current.json --warn-only
+	$(PY) scripts/bench_diff.py --self-test benchmarks/baselines/BENCH_smoke.json
 
 obs-smoke:         ## end-to-end telemetry gate: HTTP server + /metrics + trace dump (CI gate)
 	PYTHONPATH=src $(PY) scripts/obs_smoke.py

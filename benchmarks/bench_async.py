@@ -101,7 +101,7 @@ def main(smoke: bool = False) -> int:
         emit(f"engine_sync_{tag}_{wname}",
              sstats.wall / max(sstats.tokens, 1) * 1e6,
              f"tok_s={sstats.tokens_per_sec:.1f};"
-             f"decode_steps={sstats.decode_steps};n={n}")
+             f"decode_steps={sstats.decode_steps};n={n}", stats=sstats)
         ok = ok and sstats.tokens > 0
 
         engines = {}
@@ -136,7 +136,7 @@ def main(smoke: bool = False) -> int:
                  f"{stats.overlap_dispatched};"
                  f"{_lat_cols(lat_of[oname])};"
                  f"identical_to_sync={ident[oname]};"   # AND over trials
-                 f"pairs={pairs};n={n}")
+                 f"pairs={pairs};n={n}", stats=stats)
         speedup = _median([t / max(f, 1e-9) for f, t in
                            zip(rates["overlap_off"],
                                rates["overlap_on"])])

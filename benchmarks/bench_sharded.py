@@ -51,7 +51,8 @@ def main(smoke: bool = False) -> int:
     bstates, bstats = base.generate(_reqs(n, max_new))
     want = [s.token_ids for s in bstates]
     emit("engine_sharded_base", bstats.wall / max(bstats.tokens, 1) * 1e6,
-         f"tok_s={bstats.tokens_per_sec:.1f};mesh=none;n={n}")
+         f"tok_s={bstats.tokens_per_sec:.1f};mesh=none;n={n}",
+         stats=bstats)
 
     ok = bstats.tokens > 0
     for m in meshes:
@@ -74,7 +75,7 @@ def main(smoke: bool = False) -> int:
              f"identical_to_base={identical};"
              f"speedup_vs_base="
              f"{stats.tokens_per_sec / max(bstats.tokens_per_sec, 1e-9):.2f}x;"
-             f"n={n}")
+             f"n={n}", stats=stats)
     if smoke:
         print(f"bench-sharded-smoke: {'OK' if ok else 'FAILED'} "
               f"({bstats.tokens} tokens, identity "

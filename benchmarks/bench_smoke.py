@@ -21,7 +21,7 @@ def main(slots=4, n=6, max_new=8) -> int:
 
     engine, bundles, tok = build_demo(("json",), vocab=512, max_len=96,
                                       slots=slots, paged=True,
-                                      page_size=8)
+                                      page_size=8, devtime=True)
     prompt = b'{"k": [1, 2]} smoke prompt shared by every request'
     reqs = [Request(rid=i, prompt=prompt, grammar="json",
                     max_new_tokens=max_new,
@@ -52,11 +52,23 @@ def main(slots=4, n=6, max_new=8) -> int:
          f"requests={stats.requests};"
          f"prefix_hit_rate={stats.prefix_hit_rate:.2f};"
          f"kv_pages_in_use={stats.kv_pages_in_use};"
-         f"kv_peak_utilization={stats.kv_peak_utilization:.3f}")
+         f"kv_peak_utilization={stats.kv_peak_utilization:.3f}",
+         stats=stats)
     print(f"bench-smoke: {'OK' if ok else 'FAILED'} "
           f"({stats.tokens} tokens, {wall:.1f}s)")
     return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="also write the bench artifact (bench_diff "
+                         "input) to PATH")
+    args = ap.parse_args()
+    rc = main()
+    if args.json_out:
+        from .common import write_artifact
+        print(f"wrote {write_artifact(args.json_out)}", file=sys.stderr)
+    sys.exit(rc)

@@ -77,7 +77,7 @@ def main(n=6, max_new=80, smoke=False) -> int:
         emit(f"table1_python_{label}", wall / n * 1e6,
              f"ast_errors={ast_errors}/{n};complete={len(complete)};"
              f"valid_partial={partial_valid}/{n};"
-             f"tok_s={stats.tokens_per_sec:.1f}")
+             f"tok_s={stats.tokens_per_sec:.1f}", stats=stats)
         if grammar is not None:
             if ast_errors:
                 print(f"bench_table1: {label} produced {ast_errors} "

@@ -14,7 +14,7 @@ import time
 import jax
 import numpy as np
 
-from .common import build_demo, emit, timeit
+from .common import build_demo, collect_line, emit, timeit
 
 
 def _run_requests(engine, grammar, n, max_new, constrained=True, seed0=0,
@@ -75,10 +75,10 @@ def table1_json(n=6, max_new=60):
     emit("table1_json_syncode", sync_time / n * 1e6,
          f"syntax_errors={sync_err}/{n};complete={sync_done};"
          f"valid_complete={sync_complete_valid}/{sync_done};"
-         f"tok_s={sync_stats.tokens_per_sec:.1f}")
+         f"tok_s={sync_stats.tokens_per_sec:.1f}", stats=sync_stats)
     emit("table1_json_standard", std_time / n * 1e6,
          f"syntax_errors={std_err}/{n};"
-         f"tok_s={std_stats.tokens_per_sec:.1f}")
+         f"tok_s={std_stats.tokens_per_sec:.1f}", stats=std_stats)
 
 
 def table1_python():
@@ -108,9 +108,10 @@ def table2_sql(n=6, max_new=140):
     err2, _, vp2 = _error_counts(st2, parser, g, tab)
     emit("table2_sql_syncode", dt / n * 1e6,
          f"syntax_errors={err}/{n};complete={done};"
-         f"valid_partial={vp}/{n};avg_tokens={toks:.0f}")
+         f"valid_partial={vp}/{n};avg_tokens={toks:.0f}", stats=stats)
     emit("table2_sql_standard", dt2 / n * 1e6,
-         f"syntax_errors={err2}/{n};valid_partial={vp2}/{n}")
+         f"syntax_errors={err2}/{n};valid_partial={vp2}/{n}",
+         stats=stats2)
 
 
 def table3_gpl(n=6, max_new=140):
@@ -127,7 +128,8 @@ def table3_gpl(n=6, max_new=140):
         red = (1 - err / max(err2, 1)) * 100 if err2 else 100.0
         emit(f"table3_{gname}", stats.wall / max(stats.tokens, 1) * 1e6,
              f"syncode_errors={err}/{n};standard_errors={err2}/{n};"
-             f"reduction={red:.0f}%;valid_partial={vp}vs{vp2}")
+             f"reduction={red:.0f}%;valid_partial={vp}vs{vp2}",
+             stats=stats)
 
 
 def table5_mask_store():
@@ -214,7 +216,7 @@ def batched_engine_throughput(n=16, max_new=20):
     _, seq = engine.generate_sequential(reqs())     # warm jit via run 1
     _, seq = engine.generate_sequential(reqs())
     emit("engine_seq", seq.wall / max(seq.tokens, 1) * 1e6,
-         f"tok_s={seq.tokens_per_sec:.1f};n={n}")
+         f"tok_s={seq.tokens_per_sec:.1f};n={n}", stats=seq)
     for B in (1, 4, 16):
         engine, bundles, tok = build_demo(("json",), slots=B)
         engine.generate(reqs())                     # warm jit
@@ -222,7 +224,7 @@ def batched_engine_throughput(n=16, max_new=20):
         emit(f"engine_batched_b{B}",
              stats.wall / max(stats.tokens, 1) * 1e6,
              f"tok_s={stats.tokens_per_sec:.1f};"
-             f"decode_steps={stats.decode_steps};n={n}")
+             f"decode_steps={stats.decode_steps};n={n}", stats=stats)
 
 
 def opportunistic_ablation(n=4, max_new=50):
@@ -232,7 +234,8 @@ def opportunistic_ablation(n=4, max_new=50):
         emit(f"opportunistic_{'on' if opp else 'off'}",
              stats.wall / max(stats.tokens, 1) * 1e6,
              f"mask_computations={stats.mask_computations};"
-             f"hits={stats.opportunistic_hits};tokens={stats.tokens}")
+             f"hits={stats.opportunistic_hits};tokens={stats.tokens}",
+             stats=stats)
 
 
 def speculative_engine_throughput(n=16, max_new=48):
@@ -270,7 +273,7 @@ def speculative_engine_throughput(n=16, max_new=48):
         emit(f"engine_spec_baseline_{gname}_b16",
              base.wall / max(base.tokens, 1) * 1e6,
              f"tok_s={base.tokens_per_sec:.1f};"
-             f"decode_steps={base.decode_steps};n={n}")
+             f"decode_steps={base.decode_steps};n={n}", stats=base)
         emit(f"engine_spec_{gname}_b16",
              st.wall / max(st.tokens, 1) * 1e6,
              f"tok_s={st.tokens_per_sec:.1f};"
@@ -278,7 +281,7 @@ def speculative_engine_throughput(n=16, max_new=48):
              f"jump_frac={st.jump_fraction:.2f};"
              f"accept_rate={st.acceptance_rate:.2f};"
              f"speedup_vs_plain={st.tokens_per_sec / base.tokens_per_sec:.2f}x;"
-             f"n={n}")
+             f"n={n}", stats=st)
 
 
 def paged_engine_sharedprefix(n=32, max_new=24):
@@ -322,7 +325,7 @@ def paged_engine_sharedprefix(n=32, max_new=24):
          base.wall / max(base.tokens, 1) * 1e6,
          f"tok_s={base.tokens_per_sec:.1f};"
          f"decode_steps={base.decode_steps};"
-         f"prompt_len={len(prompt)};n={n}")
+         f"prompt_len={len(prompt)};n={n}", stats=base)
 
     def kv_cols(st):
         return (f"prefix_hit_rate={st.prefix_hit_rate:.2f};"
@@ -342,7 +345,7 @@ def paged_engine_sharedprefix(n=32, max_new=24):
              f"decode_steps={st.decode_steps};"
              f"speedup_vs_dense="
              f"{st.tokens_per_sec / base.tokens_per_sec:.2f}x;"
-             f"{kv_cols(st)};n={n}")
+             f"{kv_cols(st)};n={n}", stats=st)
 
 
 def async_engine_throughput():
@@ -372,9 +375,28 @@ def sharded_engine_throughput():
         [sys.executable, "-m", "benchmarks.bench_sharded"],
         cwd=root, capture_output=True, text=True, timeout=1800)
     sys.stdout.write(out.stdout)
+    # re-absorb the subprocess CSV rows into this process's artifact
+    for line in out.stdout.splitlines():
+        collect_line(line)
     if out.returncode != 0:
         sys.stderr.write(out.stderr)
         raise RuntimeError("bench_sharded subprocess failed")
+
+
+def assert_rows_complete(rows) -> None:
+    """Every artifact row must carry the full attribution column set and
+    a resolvable run identity — the regression observatory refuses to
+    persist rows it can't later diff or attribute."""
+    from .common import ATTRIBUTION_COLS, run_meta_dict
+    meta = run_meta_dict()
+    assert meta.get("git_sha"), "run_meta missing git_sha"
+    assert meta.get("jax_version"), "run_meta missing jax_version"
+    for row in rows:
+        missing = [c for c in ATTRIBUTION_COLS
+                   if c not in row.get("attribution", {})]
+        assert not missing, \
+            f"row {row.get('name')!r} missing attribution cols {missing}"
+        assert "name" in row and "us_per_call" in row, f"malformed row {row}"
 
 
 ALL = [table1_json, table1_python, table2_sql, table3_gpl,

@@ -1,8 +1,32 @@
-"""Shared benchmark substrate: demo engine construction + measurement."""
+"""Shared benchmark substrate: demo engine construction, measurement,
+and the schema-versioned JSON artifact layer behind the perf-regression
+observatory.
+
+Every `emit()` call still prints the historical ``name,us,derived`` CSV
+row, but now also collects the row in-process; `write_artifact()`
+persists the run as ``BENCH_<git-sha>.json``:
+
+    {"schema_version": 1,
+     "run_meta": {git_sha, git_dirty, jax_version, device_kind, ...},
+     "rows": [{"name", "us_per_call",
+               "derived": {k: v, ...},          # parsed k=v columns
+               "attribution": {host_grammar_s, mask_sample_kernel_s,
+                               forward_kernel_s, overlap_hidden_s,
+                               device_forward_s, device_mask_sample_s}},
+              ...]}
+
+`scripts/bench_diff.py` compares two such artifacts with median + MAD
+tolerance bands (`make bench-regress` in CI); committed baselines live
+in benchmarks/baselines/ (artifacts/ is gitignored — runtime outputs
+land there by default). Rows printed by subprocess benches (the sharded
+table re-executes under XLA_FLAGS) are re-absorbed via `collect_line()`
+so the artifact covers every row the console shows.
+"""
 from __future__ import annotations
 
+import json
 import os
-import subprocess
+import re
 import sys
 import time
 
@@ -10,6 +34,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import numpy as np
+
+SCHEMA_VERSION = 1
+
+# canonical attribution columns every artifact row carries (zero when a
+# bench has no engine stats — micro-benches of pure host code)
+ATTRIBUTION_COLS = ("host_grammar_s", "mask_sample_kernel_s",
+                    "forward_kernel_s", "overlap_hidden_s",
+                    "device_forward_s", "device_mask_sample_s")
 
 
 def build_demo(grammars=("json",), vocab=2048, opportunistic=False,
@@ -32,6 +64,14 @@ def timeit(fn, n=5, warmup=1):
 _RUN_META = None
 
 
+def run_meta_dict() -> dict:
+    """Build identity as a dict — the same probe /healthz serves
+    (obs/buildinfo), so bench artifacts and scraped metrics correlate
+    on identical fields."""
+    from repro.obs import build_info
+    return build_info()
+
+
 def run_meta() -> str:
     """Provenance stamp appended to every CSV row: git SHA, jax version
     and device kind — so bench trajectories stay attributable when
@@ -39,21 +79,115 @@ def run_meta() -> str:
     ';'-joined key=value pairs matching the derived-column idiom."""
     global _RUN_META
     if _RUN_META is None:
-        try:
-            sha = subprocess.run(
-                ["git", "rev-parse", "--short", "HEAD"],
-                cwd=os.path.dirname(os.path.abspath(__file__)),
-                capture_output=True, text=True, timeout=10,
-            ).stdout.strip() or "unknown"
-        except Exception:
-            sha = "unknown"
-        dev = jax.devices()[0].device_kind.replace(",", " ") \
+        info = run_meta_dict()
+        dev = str(info["device_kind"]).replace(",", " ") \
             .replace(";", " ").replace("=", " ").strip() or "unknown"
-        _RUN_META = (f"git={sha};jax={jax.__version__};"
+        _RUN_META = (f"git={info['git_sha']};jax={info['jax_version']};"
                      f"device={dev}")
     return _RUN_META
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def attribution_cols(stats) -> dict:
+    """Standard attribution columns from an EngineStats (serving/engine):
+    the host/kernel/overlap split every artifact row carries."""
+    a = getattr(stats, "attribution", None) or {}
+    sec = a.get("seconds", {})
+    return {
+        "host_grammar_s": sec.get("host_grammar", 0.0),
+        "mask_sample_kernel_s": sec.get("mask_sample_kernel", 0.0),
+        "forward_kernel_s": sec.get("forward_kernel", 0.0),
+        "overlap_hidden_s": getattr(stats, "overlap_hidden_s", 0.0),
+        "device_forward_s": getattr(stats, "device_forward_s", 0.0),
+        "device_mask_sample_s": getattr(stats, "device_mask_sample_s",
+                                        0.0),
+    }
+
+
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        k, sep, v = part.partition("=")
+        if not sep or not k:
+            continue
+        try:
+            out[k] = int(v) if re.fullmatch(r"[+-]?\d+", v) \
+                else float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+_ROWS: list[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "",
+         stats=None) -> None:
+    """Print the CSV row AND collect it for the JSON artifact. `stats`
+    (an EngineStats) populates the attribution columns; benches without
+    engine involvement leave them zero."""
+    attr = attribution_cols(stats) if stats is not None \
+        else {k: 0.0 for k in ATTRIBUTION_COLS}
+    _ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                  "derived": _parse_derived(derived),
+                  "attribution": attr})
+    if stats is not None:
+        # print the attribution split too, so rows emitted by subprocess
+        # benches round-trip through collect_line() with attribution
+        cols = ";".join(f"{k}={v:.6f}" for k, v in attr.items())
+        derived = f"{derived};{cols}" if derived else cols
     derived = f"{derived};{run_meta()}" if derived else run_meta()
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+_ROW_RE = re.compile(r"^([\w.\-]+),([0-9.eE+-]+),(.*)$")
+
+
+def collect_line(line: str) -> bool:
+    """Absorb a ``name,us,derived`` row printed by a subprocess bench
+    into this process's artifact rows. Returns True iff parsed."""
+    m = _ROW_RE.match(line.strip())
+    if not m or m.group(1) == "name":        # skip the CSV header
+        return False
+    try:
+        us = float(m.group(2))
+    except ValueError:
+        return False
+    derived = _parse_derived(m.group(3))
+    attr = {k: float(derived.pop(k)) if k in derived else 0.0
+            for k in ATTRIBUTION_COLS}
+    _ROWS.append({"name": m.group(1), "us_per_call": us,
+                  "derived": derived, "attribution": attr})
+    return True
+
+
+def rows() -> list[dict]:
+    return list(_ROWS)
+
+
+def clear_rows() -> None:
+    _ROWS.clear()
+
+
+def default_artifact_path() -> str:
+    info = run_meta_dict()
+    d = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                     "bench")
+    return os.path.join(d, f"BENCH_{info['git_sha']}.json")
+
+
+def write_artifact(path: str | None = None,
+                   extra_meta: dict | None = None) -> str:
+    """Persist every collected row as the schema-versioned regression
+    artifact (benchmarks/README.md documents the schema)."""
+    path = path or default_artifact_path()
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    meta = run_meta_dict()
+    meta["unix_time"] = time.time()
+    if extra_meta:
+        meta.update(extra_meta)
+    doc = {"schema_version": SCHEMA_VERSION, "run_meta": meta,
+           "rows": rows()}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path

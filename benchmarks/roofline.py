@@ -42,6 +42,38 @@ def fmt_table(recs, include_skipped=True):
     return "\n".join(lines)
 
 
+def position(measured_s: float, calls: int, flops_per_call: float,
+             hbm_bytes_per_call: float,
+             peak_flops: float = 0.0, peak_bw: float = 0.0) -> dict:
+    """Place a MEASURED device interval (obs/devtime bracket) on the
+    roofline spanned by a static hlo_cost estimate.
+
+    Returns achieved FLOP/s and bytes/s, the arithmetic intensity of
+    the fn, and — when hardware peaks are given — the fraction of the
+    roof actually reached (max of the compute and bandwidth fractions:
+    a fn pinned at 80% of either peak is 80% roofline-efficient). The
+    bench artifact writer stores this per attribution column so
+    bench_diff can flag efficiency regressions, not just latency ones.
+    """
+    if measured_s <= 0.0 or calls <= 0:
+        return {"achieved_flops_per_s": 0.0, "achieved_bytes_per_s": 0.0,
+                "intensity_flops_per_byte": 0.0, "roof_fraction": 0.0}
+    per_call = measured_s / calls
+    out = {
+        "achieved_flops_per_s": flops_per_call / per_call,
+        "achieved_bytes_per_s": hbm_bytes_per_call / per_call,
+        "intensity_flops_per_byte": (flops_per_call
+                                     / max(hbm_bytes_per_call, 1.0)),
+    }
+    fracs = []
+    if peak_flops > 0.0:
+        fracs.append(out["achieved_flops_per_s"] / peak_flops)
+    if peak_bw > 0.0:
+        fracs.append(out["achieved_bytes_per_s"] / peak_bw)
+    out["roof_fraction"] = max(fracs) if fracs else 0.0
+    return out
+
+
 def main():
     recs = load_records()
     print(fmt_table(recs))

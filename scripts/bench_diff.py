@@ -1,0 +1,180 @@
+#!/usr/bin/env python
+"""Perf-regression gate: compare two bench artifacts (benchmarks/common
+`write_artifact` JSON, schema v1) with robust median + MAD statistics.
+
+    python scripts/bench_diff.py BASELINE CURRENT [--warn-only]
+    python scripts/bench_diff.py --self-test BASELINE
+
+Per matched row the per-call latency ratio ``current/baseline`` is
+examined on a log scale. A row FAILS when its ratio exceeds
+``--fail-over`` (default 2.0x); it WARNS when it exceeds
+``--warn-over`` (default 1.25x) *and* sits more than 3 MAD above the
+median log-ratio of the whole run — the MAD guard keeps a uniformly
+slower machine (every row shifted together) from spraying false
+positives, which is what makes the gate usable warn-only on shared CI
+runners. ``--warn-only`` downgrades row failures to warnings but still
+exits non-zero on schema/match errors.
+
+``--self-test`` proves the gate end-to-end without a second run: it
+diffs the baseline against itself (must pass), then against a copy
+with a synthetic >2x slowdown injected into one row (must fail).
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import math
+import sys
+
+SCHEMA_VERSION = 1
+
+# rows whose us_per_call is a percentage / score, not a latency — the
+# ratio test doesn't apply (they are compared informationally only)
+_NON_LATENCY_SUFFIXES = ("_overlap_speedup",)
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    ver = doc.get("schema_version")
+    if ver != SCHEMA_VERSION:
+        raise SystemExit(f"{path}: schema_version {ver!r}, "
+                         f"expected {SCHEMA_VERSION}")
+    if not isinstance(doc.get("rows"), list):
+        raise SystemExit(f"{path}: no rows")
+    return doc
+
+
+def _median(xs):
+    xs = sorted(xs)
+    n = len(xs)
+    if n == 0:
+        return 0.0
+    mid = n // 2
+    return xs[mid] if n % 2 else 0.5 * (xs[mid - 1] + xs[mid])
+
+
+def _mad(xs, center):
+    return _median([abs(x - center) for x in xs])
+
+
+def diff(base_doc: dict, cur_doc: dict, warn_over: float = 1.25,
+         fail_over: float = 2.0) -> dict:
+    """Compare artifacts; returns {rows, median_ratio, mad_log,
+    missing, new, failures, warnings}."""
+    base = {r["name"]: r for r in base_doc["rows"]}
+    cur = {r["name"]: r for r in cur_doc["rows"]}
+    names = [n for n in base if n in cur
+             and not n.endswith(_NON_LATENCY_SUFFIXES)
+             and base[n]["us_per_call"] > 0 and cur[n]["us_per_call"] > 0]
+    logr = {n: math.log(cur[n]["us_per_call"] / base[n]["us_per_call"])
+            for n in names}
+    med = _median(list(logr.values()))
+    mad = _mad(list(logr.values()), med)
+    rows, failures, warnings = [], [], []
+    for n in sorted(names):
+        ratio = math.exp(logr[n])
+        status = "ok"
+        if ratio > fail_over:
+            status = "FAIL"
+            failures.append(n)
+        elif ratio > warn_over and \
+                logr[n] - med > 3 * max(mad, math.log(1.05)):
+            status = "warn"
+            warnings.append(n)
+        rows.append({"name": n, "base_us": base[n]["us_per_call"],
+                     "cur_us": cur[n]["us_per_call"], "ratio": ratio,
+                     "status": status})
+    return {"rows": rows, "median_ratio": math.exp(med), "mad_log": mad,
+            "missing": sorted(set(base) - set(cur)),
+            "new": sorted(set(cur) - set(base)),
+            "failures": failures, "warnings": warnings}
+
+
+def report(res: dict, base_meta: dict, cur_meta: dict) -> None:
+    print(f"bench_diff: baseline git={base_meta.get('git_sha', '?')} "
+          f"vs current git={cur_meta.get('git_sha', '?')}")
+    print(f"{'row':42s} {'base_us':>10s} {'cur_us':>10s} "
+          f"{'ratio':>7s} status")
+    for r in res["rows"]:
+        print(f"{r['name']:42s} {r['base_us']:10.1f} {r['cur_us']:10.1f} "
+              f"{r['ratio']:7.2f} {r['status']}")
+    print(f"median ratio {res['median_ratio']:.3f}  "
+          f"(MAD of log-ratios {res['mad_log']:.3f})")
+    if res["missing"]:
+        print(f"rows only in baseline: {', '.join(res['missing'])}")
+    if res["new"]:
+        print(f"rows only in current:  {', '.join(res['new'])}")
+
+
+def self_test(baseline_path: str, fail_over: float) -> int:
+    """The gate must pass on an unchanged re-run and flag an injected
+    slowdown strictly above the fail threshold."""
+    base = load(baseline_path)
+    same = diff(base, base, fail_over=fail_over)
+    if same["failures"] or same["warnings"]:
+        print("bench_diff self-test: identical artifacts flagged "
+              f"({same['failures'] or same['warnings']}) — FAIL")
+        return 1
+    slowed = copy.deepcopy(base)
+    victim = None
+    for r in slowed["rows"]:
+        if not r["name"].endswith(_NON_LATENCY_SUFFIXES) \
+                and r["us_per_call"] > 0:
+            r["us_per_call"] *= fail_over * 1.05
+            victim = r["name"]
+            break
+    if victim is None:
+        print("bench_diff self-test: baseline has no latency rows — FAIL")
+        return 1
+    inj = diff(base, slowed, fail_over=fail_over)
+    if victim not in inj["failures"]:
+        print(f"bench_diff self-test: injected {fail_over * 1.05:.2f}x "
+              f"slowdown on {victim!r} NOT flagged — FAIL")
+        return 1
+    print(f"bench_diff self-test: OK (clean re-run passes; injected "
+          f"{fail_over * 1.05:.2f}x slowdown on {victim!r} flagged)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current", nargs="?")
+    ap.add_argument("--warn-over", type=float, default=1.25,
+                    help="warn band: ratio above this AND >3 MAD above "
+                         "the median log-ratio (default 1.25)")
+    ap.add_argument("--fail-over", type=float, default=2.0,
+                    help="hard-fail ratio (default 2.0)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="downgrade row failures to warnings (shared CI "
+                         "runners); schema errors still exit non-zero")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate against the baseline itself "
+                         "(clean pass + injected-slowdown fail)")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test(args.baseline, args.fail_over)
+    if not args.current:
+        ap.error("CURRENT artifact required (or use --self-test)")
+    base_doc, cur_doc = load(args.baseline), load(args.current)
+    res = diff(base_doc, cur_doc, args.warn_over, args.fail_over)
+    report(res, base_doc.get("run_meta", {}), cur_doc.get("run_meta", {}))
+    if not res["rows"]:
+        print("bench_diff: no comparable rows — FAIL")
+        return 1
+    if res["failures"]:
+        verdict = "WARN (perf regression, warn-only mode)" \
+            if args.warn_only else "FAIL (perf regression)"
+        print(f"bench_diff: {verdict}: {', '.join(res['failures'])}")
+        return 0 if args.warn_only else 1
+    if res["warnings"]:
+        print(f"bench_diff: warnings: {', '.join(res['warnings'])}")
+    print("bench_diff: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

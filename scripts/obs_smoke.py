@@ -13,8 +13,11 @@ asserts the whole telemetry surface is live:
   * `POST /trace {"action": "dump"}` returns a Chrome trace-event
     document with phase slices and track-name metadata (loadable in
     ui.perfetto.dev);
-  * `GET /healthz` carries uptime, queue depth and finish-reason
-    counts.
+  * `GET /healthz` carries uptime, queue depth, finish-reason
+    counts and the build identity (git SHA / jax version / device);
+  * `POST /profile start|stop|dump` captures a live device-timing
+    window during real `/generate` traffic and dumps ONE merged
+    Perfetto timeline with host phase tracks AND device tracks.
 
 Everything runs in-process on an ephemeral port; seconds-scale, no
 network dependencies. Exit code 0 iff every assertion holds.
@@ -49,7 +52,13 @@ REQUIRED_FAMILIES = (
     "repro_kv_pages_in_use",
     "repro_queue_depth",
     "repro_uptime_seconds",
+    "repro_step_attribution_seconds_total",
 )
+
+# device-attribution components /metrics must expose (scrape-time
+# counters wired by Telemetry._wire_attribution)
+REQUIRED_ATTRIBUTION = ("host_grammar", "mask_sample_kernel",
+                        "forward_kernel", "overlap_hidden")
 
 # phases the paged workload must have timed at least once
 REQUIRED_PHASES = ("admit", "feed_build", "forward", "rows_build",
@@ -183,6 +192,71 @@ async def _run() -> int:
                                    b'{"action": "stop"}')
         assert status == 200 and json.loads(body)["tracing"] is False
 
+        # -- attribution: every component series present and summed
+        status, body = await _http(host, port, "GET", "/metrics")
+        text = body.decode()
+        for comp in REQUIRED_ATTRIBUTION:
+            pat = ('repro_step_attribution_seconds_total'
+                   f'{{component="{comp}"}}')
+            m = re.search("^" + re.escape(pat) + r" (\S+)$", text, re.M)
+            assert m, f"attribution component {comp} missing"
+        status, body = await _http(host, port, "GET", "/stats")
+        stats = json.loads(body)
+        attr = stats["attribution"]
+        assert attr["enabled"] is True
+        assert attr["seconds"]["host_grammar"] > 0, attr
+        assert attr["source"]["forward_kernel"] == "host-dispatch"
+        assert stats["device"]["sync_calls"] == 0      # serving mode
+        assert stats["build"]["git_sha"], stats["build"]
+        print("obs-smoke: attribution OK "
+              f"(host_grammar={attr['seconds']['host_grammar']:.3f}s, "
+              "no syncs in serving mode)")
+
+        # -- /profile: live device-timing capture during real traffic
+        status, body = await _http(host, port, "POST", "/profile",
+                                   b'{"action": "dump"}')
+        assert status == 409, (status, body)           # nothing captured
+        status, body = await _http(host, port, "POST", "/profile",
+                                   b'{"action": "start"}')
+        assert status == 200, (status, body)
+        prof = json.loads(body)
+        assert prof["profiling"] is True, prof
+        await asyncio.gather(*(gen(100 + i) for i in range(N_REQUESTS)))
+        status, body = await _http(host, port, "POST", "/profile",
+                                   b'{"action": "stop"}')
+        assert status == 200, (status, body)
+        stopped = json.loads(body)
+        assert stopped["buffered_events"] > 0, stopped
+        status, body = await _http(host, port, "POST", "/profile",
+                                   b'{"action": "dump"}')
+        assert status == 200, (status, body)
+        doc = json.loads(body)
+        evs = doc["traceEvents"]
+        assert evs, "empty merged trace"
+        tracks = {e["args"]["name"] for e in evs
+                  if e.get("name") == "thread_name"}
+        host_tracks = [t for t in tracks if not t.startswith("device:")]
+        dev_tracks = [t for t in tracks if t.startswith("device:")]
+        assert host_tracks and dev_tracks, tracks      # merged timeline
+        assert "device:forward" in dev_tracks, dev_tracks
+        assert all(e["ts"] >= 0 for e in evs if "ts" in e)
+        json.dumps(doc)                                # Perfetto-loadable
+        status, body = await _http(host, port, "GET", "/metrics")
+        text = body.decode()
+        assert '# TYPE repro_device_seconds_total ' in text
+        m = re.search(r'repro_device_seconds_total\{fn="forward"\}'
+                      r' (\S+)', text)
+        assert m and float(m.group(1)) > 0, "no device forward seconds"
+        status, body = await _http(host, port, "GET", "/stats")
+        stats = json.loads(body)
+        assert stats["device"]["sync_calls"] > 0       # profile window
+        assert stats["device"]["enabled"] is False     # restored after
+        assert stats["attribution"]["source"]["forward_kernel"] == \
+            "device"
+        print(f"obs-smoke: /profile OK (merged trace: {len(evs)} events, "
+              f"{len(dev_tracks)} device + {len(host_tracks)} host "
+              "tracks)")
+
         # -- /healthz: uptime, queue depth, finish reasons
         status, body = await _http(host, port, "GET", "/healthz")
         assert status == 200, status
@@ -191,8 +265,11 @@ async def _run() -> int:
         assert hz["uptime_seconds"] > 0
         assert hz["queue_depth"] == 0
         assert hz["finish_reasons"].get("eos", 0) + \
-            hz["finish_reasons"].get("length", 0) == N_REQUESTS, hz
-        print("obs-smoke: /healthz OK")
+            hz["finish_reasons"].get("length", 0) == 2 * N_REQUESTS, hz
+        b = hz["build"]
+        assert b["git_sha"] and b["jax_version"] and b["device_kind"], b
+        print(f"obs-smoke: /healthz OK (build {b['git_sha']} "
+              f"jax {b['jax_version']} {b['device_kind']})")
     finally:
         await srv.stop(drain=False)
     print("obs-smoke: OK")

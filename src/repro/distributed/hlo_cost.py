@@ -263,6 +263,18 @@ def roofline_counts(hlo_text: str) -> dict:
     return HloCost(hlo_text).analyze()
 
 
+def estimate_jit_cost(fn, *args, **kwargs) -> dict:
+    """Static per-call roofline terms for a jitted fn at these
+    arguments: {flops, hbm_bytes, wire_bytes, collectives}, parsed from
+    the compiled (post-SPMD) HLO. Compiles at the same shapes the caller
+    will run — reuses the persistent compilation cache, so after the
+    first real call this costs only the lowering walk. Raises whatever
+    lower()/compile() raises; callers that probe opportunistically (the
+    engine's devtime cost registration) catch and skip."""
+    compiled = fn.lower(*args, **kwargs).compile()
+    return roofline_counts(compiled.as_text())
+
+
 _WIDEN_RE = re.compile(
     r"%wrapped_convert[\w.]*\s*=\s*f32\[([0-9,]+)\][^=]*fusion\(")
 

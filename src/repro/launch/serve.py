@@ -50,7 +50,8 @@ def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
                  seed=0, slots=4, paged=False, page_size=16,
                  num_pages=None, prefill_chunk=32, mesh=None,
                  trunk_shard=False, overlap=True,
-                 grammar_mode="grammar_mask", telemetry=True):
+                 grammar_mode="grammar_mask", telemetry=True,
+                 devtime=False):
     """mesh: None | int (model-parallel degree; 1 = single device) | a
     prebuilt jax Mesh with a "model" axis. See docs/sharding.md."""
     cfg = get_config(arch)
@@ -78,8 +79,8 @@ def build_engine(arch="syncode-demo", grammars=BUILTIN, vocab=None,
                   page_size=page_size, num_pages=num_pages,
                   prefill_chunk=prefill_chunk, mesh=mesh,
                   trunk_shard=trunk_shard, overlap=overlap,
-                  grammar_mode=grammar_mode,
-                  telemetry=telemetry), bundles, tok
+                  grammar_mode=grammar_mode, telemetry=telemetry,
+                  devtime=devtime), bundles, tok
 
 
 def main(argv=None):
@@ -151,6 +152,11 @@ def main(argv=None):
                          "latency histograms, trace capture; "
                          "docs/observability.md) — count stats stay "
                          "exact, timing stats read 0")
+    ap.add_argument("--devtime", action="store_true",
+                    help="bench/profile mode: device-span brackets sync "
+                         "on exit so stats carry true device intervals "
+                         "(adds per-step syncs — not for serving; "
+                         "docs/observability.md)")
     args = ap.parse_args(argv)
 
     engine, bundles, tok = build_engine(
@@ -159,7 +165,8 @@ def main(argv=None):
         slots=args.slots, paged=args.paged, page_size=args.page_size,
         num_pages=args.num_pages, mesh=args.mesh,
         trunk_shard=args.trunk_shard, overlap=not args.no_overlap,
-        grammar_mode=args.grammar_mode, telemetry=not args.no_telemetry)
+        grammar_mode=args.grammar_mode, telemetry=not args.no_telemetry,
+        devtime=args.devtime)
 
     if args.serve:
         import asyncio

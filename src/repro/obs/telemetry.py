@@ -32,9 +32,22 @@ from __future__ import annotations
 import time
 from typing import Optional
 
+from .buildinfo import build_info
+from .devtime import NULL_DEV_SPAN, DeviceTimer, ProfilerSession
 from .lifecycle import LifecycleTracker, NullLifecycle
 from .registry import PHASE_BUCKETS, MetricsRegistry
 from .trace import Tracer
+
+# Step-attribution components (XGrammar-style breakdown): how each
+# decode step's wall time splits between host grammar work, the two
+# kernel families, and device time hidden under host work by the
+# overlap engine. Host-phase spans supply the grammar term; devtime
+# brackets supply the kernel terms when device timing is on (bench /
+# profile mode), falling back to dispatch-span lower bounds in serving.
+ATTR_HOST_GRAMMAR_PHASES = ("rows_build", "host_oracle", "plan",
+                            "feed_build")
+ATTR_MASK_PHASES = ("mask_dispatch", "select_resolve")
+ATTR_FORWARD_PHASES = ("forward", "overlap_forward")
 
 # Named overhead budgets (seconds), asserted by tests/test_obs.py.
 # DISABLED_SPAN_BUDGET_S: per span() call with telemetry off — must be
@@ -105,10 +118,54 @@ class Telemetry:
                           if self.enabled else NullLifecycle())
         self.t_start = time.perf_counter()
         self._phases: dict = {}
+        self.devtime = DeviceTimer(self.registry, self.tracer)
+        self.profiler = ProfilerSession(self.devtime, self.tracer)
         if self.enabled:
             self.registry.gauge(
                 "repro_uptime_seconds", "seconds since telemetry start",
                 fn=lambda: time.perf_counter() - self.t_start)
+            self._wire_attribution()
+        else:
+            # real counter either way so loop.py can add to it blindly
+            self.c_overlap_hidden = self.registry.counter(
+                "repro_step_attribution_seconds_total",
+                "step wall-time attribution by component",
+                {"component": "overlap_hidden"})
+
+    def _wire_attribution(self) -> None:
+        """Scrape-time attribution counters: derived components read the
+        phase/devtime sums live so they can never drift from the spans
+        they summarize; overlap_hidden is a real counter fed by the step
+        loop (only it knows the dispatch-to-consumption window)."""
+        c = self.registry.counter
+        help = "step wall-time attribution by component"
+
+        def phase_sum(phases):
+            return lambda: sum(self.phase_seconds(p) for p in phases)
+
+        c("repro_step_attribution_seconds_total", help,
+          {"component": "host_grammar"},
+          fn=phase_sum(ATTR_HOST_GRAMMAR_PHASES))
+        c("repro_step_attribution_seconds_total", help,
+          {"component": "mask_sample_kernel"},
+          fn=lambda: self._kernel_seconds(("mask_sample",),
+                                          ATTR_MASK_PHASES))
+        c("repro_step_attribution_seconds_total", help,
+          {"component": "forward_kernel"},
+          fn=lambda: self._kernel_seconds(ATTR_FORWARD_PHASES,
+                                          ATTR_FORWARD_PHASES))
+        self.c_overlap_hidden = c(
+            "repro_step_attribution_seconds_total", help,
+            {"component": "overlap_hidden"})
+
+    def _kernel_seconds(self, dev_fns, host_phases) -> float:
+        """Kernel component: synced device intervals when devtime has
+        measured this family, else the host dispatch spans (a lower
+        bound in serving mode — documented in docs/observability.md)."""
+        dev = sum(self.devtime.seconds(f) for f in dev_fns)
+        if dev > 0.0:
+            return dev
+        return sum(self.phase_seconds(p) for p in host_phases)
 
     # ------------------------------ spans ------------------------------
 
@@ -133,6 +190,20 @@ class Telemetry:
         if not self.enabled:
             return NULL_SPAN
         return _Span(self, phase, track, args)
+
+    def device_span(self, fn: str):
+        """Device-interval bracket around a jitted call. No-op unless
+        device timing is on AND a sync capability was injected
+        (serving/devbridge.py) — serving mode never syncs."""
+        if not self.enabled:
+            return NULL_DEV_SPAN
+        return self.devtime.span(fn)
+
+    def add_overlap_hidden(self, seconds: float) -> None:
+        """Credit device time hidden under host work by the overlap
+        engine (called by the step loop on overlap-hit consumption)."""
+        if seconds > 0.0:
+            self.c_overlap_hidden.inc(seconds)
 
     def phase_seconds(self, phase: str) -> float:
         """Cumulative seconds recorded for a phase (0.0 if never hit)."""
@@ -192,14 +263,53 @@ class Telemetry:
     def uptime(self) -> float:
         return time.perf_counter() - self.t_start
 
+    def attribution(self) -> dict:
+        """Per-step wall-time split {host_grammar, mask_sample_kernel,
+        forward_kernel, overlap_hidden} + fractions and the measurement
+        source for each kernel term ("device" = synced devtime bracket,
+        "host-dispatch" = span lower bound, serving mode)."""
+        if not self.enabled:
+            return {"enabled": False}
+        host = sum(self.phase_seconds(p)
+                   for p in ATTR_HOST_GRAMMAR_PHASES)
+        mask = self._kernel_seconds(("mask_sample",), ATTR_MASK_PHASES)
+        fwd = self._kernel_seconds(ATTR_FORWARD_PHASES,
+                                   ATTR_FORWARD_PHASES)
+        hidden = self.c_overlap_hidden.value
+        total = host + mask + fwd
+        comp = {"host_grammar": host, "mask_sample_kernel": mask,
+                "forward_kernel": fwd, "overlap_hidden": hidden}
+        dev_mask = self.devtime.seconds("mask_sample") > 0.0
+        dev_fwd = any(self.devtime.seconds(f) > 0.0
+                      for f in ATTR_FORWARD_PHASES)
+        return {
+            "enabled": True,
+            "seconds": comp,
+            "fractions": {k: (v / total if total > 0 else 0.0)
+                          for k, v in comp.items() if k != "overlap_hidden"},
+            "source": {
+                "mask_sample_kernel": "device" if dev_mask
+                                      else "host-dispatch",
+                "forward_kernel": "device" if dev_fwd
+                                  else "host-dispatch",
+            },
+            "device_timing": self.devtime.enabled,
+        }
+
     def stats_json(self) -> dict:
         """Everything /stats serves: registry snapshot + lifecycle
-        summary + trace state."""
+        summary + trace state + build identity + attribution."""
         return {
             "enabled": self.enabled,
             "uptime_seconds": self.uptime(),
+            "build": build_info(),
             "requests": self.lifecycle.summary(),
             "metrics": self.registry.snapshot(),
+            "attribution": self.attribution(),
+            "device": {"enabled": self.devtime.enabled,
+                       "sync_calls": self.devtime.sync_calls,
+                       "functions": self.devtime.summary()},
+            "profiler": self.profiler.state(),
             "trace": {"active": self.tracer.active,
                       "buffered_events": len(self.tracer),
                       "dropped_events": self.tracer.dropped},

@@ -25,11 +25,15 @@ from typing import Optional
 
 DEFAULT_CAPACITY = 65536
 
-# stable tid ordering: known tracks first, in pipeline order; anything
-# else (slot tracks, custom tracks) sorts after them by name
+# stable tid ordering: known tracks first, in pipeline order; device
+# tracks (devtime brackets + merged jax.profiler kernel threads) group
+# after the host phases; anything else (slot tracks, custom tracks)
+# sorts after them by name
 _TRACK_ORDER = ("step", "admit", "plan", "feed_build", "rows_build",
                 "mask_dispatch", "forward", "overlap_forward",
-                "select_resolve", "host_oracle", "opportunistic")
+                "select_resolve", "host_oracle", "opportunistic",
+                "device:forward", "device:overlap_forward",
+                "device:mask_sample")
 
 
 class Tracer:
@@ -81,16 +85,34 @@ class Tracer:
 
     # ------------------------------ export ----------------------------
 
-    def export_chrome(self) -> dict:
+    def export_chrome(self, extra_events: Optional[list] = None) -> dict:
         """Chrome trace-event JSON: {"traceEvents": [...]} with one
-        process ("repro engine") and one named thread per track."""
+        process ("repro engine") and one named thread per track.
+
+        *extra_events* merges externally captured intervals — the
+        jax.profiler device-thread slices collected by
+        ProfilerSession.collect_chrome_events() — into the same
+        timeline. Each is {"track", "name", "ts_us", "dur_us"} with
+        ts_us already on the host perf_counter clock (µs), so both
+        sources rebase against one shared origin and the host spans
+        line up with the kernel executions they dispatched.
+        """
         events = list(self._ring)       # snapshot; recording continues
-        tracks = sorted({e[1] for e in events},
+        extra = list(extra_events or [])
+        tracks = sorted({e[1] for e in events} |
+                        {e["track"] for e in extra},
                         key=lambda t: (_TRACK_ORDER.index(t)
                                        if t in _TRACK_ORDER
                                        else len(_TRACK_ORDER), t))
         tid = {t: i + 1 for i, t in enumerate(tracks)}
-        t_base = min((e[3] for e in events), default=0.0)
+        t_base_s = min((e[3] for e in events), default=None)
+        t_base_us = min((e["ts_us"] for e in extra),
+                        default=None)
+        if t_base_s is not None:
+            t_base_us = (t_base_s * 1e6 if t_base_us is None
+                         else min(t_base_us, t_base_s * 1e6))
+        elif t_base_us is None:
+            t_base_us = 0.0
         out = [{"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
                 "args": {"name": "repro engine"}}]
         for t in tracks:
@@ -98,7 +120,7 @@ class Tracer:
                         "name": "thread_name", "args": {"name": t}})
         for ph, track, name, t0, dur, args in events:
             ev = {"ph": ph, "pid": 1, "tid": tid[track], "name": name,
-                  "cat": track, "ts": (t0 - t_base) * 1e6}
+                  "cat": track, "ts": t0 * 1e6 - t_base_us}
             if ph == "X":
                 ev["dur"] = dur * 1e6
             else:
@@ -106,6 +128,12 @@ class Tracer:
             if args:
                 ev["args"] = args
             out.append(ev)
+        for e in extra:
+            out.append({"ph": "X", "pid": 1, "tid": tid[e["track"]],
+                        "name": e["name"], "cat": e["track"],
+                        "ts": e["ts_us"] - t_base_us,
+                        "dur": e["dur_us"]})
         return {"traceEvents": out, "displayTimeUnit": "ms",
                 "otherData": {"dropped_events": self.dropped,
-                              "captured_events": self._seen}}
+                              "captured_events": self._seen,
+                              "merged_device_events": len(extra)}}

@@ -138,6 +138,10 @@ class AsyncEngine:
         # per-run instance a sync generate() call creates
         self.telemetry = telemetry if telemetry is not None else \
             Telemetry(enabled=engine.telemetry_enabled)
+        # bind jax sync/profiler capabilities now, not at lazy loop
+        # start: POST /profile must work before the first request
+        from repro.serving.devbridge import attach as _attach
+        _attach(self.telemetry)
         self._source = QueueSource()
         self._handles: dict[int, AsyncRequest] = {}
         self._hlock = threading.Lock()

@@ -156,6 +156,13 @@ class EngineStats:
     kv_page_allocs: int = 0                 # page allocations over the run
     kv_evictions: int = 0                   # cold pages evicted
     kv_cow_copies: int = 0                  # copy-on-write device copies
+    # --- device-time attribution (obs/devtime; nonzero only when the
+    # run had device timing on, i.e. bench/profile mode) ---
+    device_forward_s: float = 0.0           # synced forward intervals
+    device_mask_sample_s: float = 0.0       # synced mask+sample intervals
+    overlap_hidden_s: float = 0.0           # device time hidden under
+                                            # host work by the overlap gate
+    attribution: Optional[dict] = None      # Telemetry.attribution() split
 
     @property
     def tokens_per_sec(self):
@@ -205,7 +212,7 @@ class Engine:
                  attn_backend: str = "auto", mesh=None,
                  trunk_shard: bool = False, overlap: bool = True,
                  grammar_mode: str = "grammar_mask",
-                 telemetry: bool = True):
+                 telemetry: bool = True, devtime: bool = False):
         """grammar_bundles: name -> (grammar, table, store).
         slots: decode-pool width B of the batched scheduler.
         paged: serve KV through the paged pool (docs/kv_paging.md) —
@@ -237,7 +244,12 @@ class Engine:
         count stats (tokens/mask computations/...); timing fields of
         EngineStats then read 0. Token streams are identical either
         way — instrumentation wraps host-side work only and never
-        adds a device synchronization."""
+        adds a device synchronization.
+        devtime: bench/profile mode — device-span brackets around the
+        jitted calls sync on exit (obs/devtime.py), so EngineStats and
+        /stats carry true device intervals instead of dispatch lower
+        bounds. OFF for serving: the default preserves the no-sync
+        contract above."""
         if grammar_mode not in GrammarConstraint.MODES:
             raise ValueError(f"unknown grammar_mode {grammar_mode!r}; "
                              f"expected one of {GrammarConstraint.MODES}")
@@ -260,6 +272,9 @@ class Engine:
         self.trunk_shard = bool(trunk_shard)
         self.overlap = bool(overlap)
         self.telemetry_enabled = bool(telemetry)
+        # bench/profile mode: step loops sync devtime brackets on exit
+        # (the documented exception to the serving no-sync contract)
+        self.devtime_enabled = bool(devtime)
         if mesh is not None:
             if "model" not in mesh.axis_names:
                 raise ValueError(
@@ -350,6 +365,26 @@ class Engine:
             with use_sharding(self.mesh, self._rules):
                 return jf(*args, **kwargs)
         return call
+
+    def _note_jit_cost(self, tele, name: str, fn, *args) -> None:
+        """Lazily attach static roofline terms (distributed/hlo_cost
+        over the compiled HLO) for a jitted fn to the devtime registry —
+        once per fn name, only in bench/profile mode, at the exact
+        shapes the caller just dispatched (the lowering hits the
+        compilation cache, so this is a walk, not a recompile). Sharded
+        closures and anything else without .lower() are skipped."""
+        devtime = tele.devtime
+        if not devtime.enabled or name in devtime.costs:
+            return
+        devtime.costs[name] = {"flops": 0.0, "hbm_bytes": 0.0,
+                               "wire_bytes": 0.0}     # one attempt only
+        try:
+            from repro.distributed.hlo_cost import estimate_jit_cost
+            c = estimate_jit_cost(fn, *args)
+        except Exception:
+            return
+        devtime.set_cost(name, c["flops"], c["hbm_bytes"],
+                         c.get("wire_bytes", 0.0))
 
     def _place_caches(self, caches):
         """Commit freshly-initialized decode caches / paged pools to the
@@ -616,15 +651,25 @@ class Engine:
                  for b in range(B)], np.int64)
             rows, eos, _ = GrammarConstraint.step_rows_batch(
                 cons, texts, max_accept=MAX_ACCEPT, row_offsets=offs)
-        with obs.span("mask_dispatch") as sp_disp:
-            need_mask = np.array([c is not None for c in cons], bool)
-            keys = self._step_keys(seeds, salts, 1)
-            ctx.masked, ctx.ids, ctx.ok = self._mask_sample(
-                logits, self._store_cat, jnp.asarray(rows),
-                jnp.asarray(eos), jnp.asarray(need_mask),
-                jnp.asarray(greedy), jnp.asarray(temp),
-                jnp.asarray(top_k), jnp.asarray(top_p),
-                jnp.asarray(keys))
+        with obs.device_span("mask_sample") as dv:
+            with obs.span("mask_dispatch") as sp_disp:
+                need_mask = np.array([c is not None for c in cons], bool)
+                keys = self._step_keys(seeds, salts, 1)
+                ctx.masked, ctx.ids, ctx.ok = self._mask_sample(
+                    logits, self._store_cat, jnp.asarray(rows),
+                    jnp.asarray(eos), jnp.asarray(need_mask),
+                    jnp.asarray(greedy), jnp.asarray(temp),
+                    jnp.asarray(top_k), jnp.asarray(top_p),
+                    jnp.asarray(keys))
+            # host span stays dispatch-only; in bench/profile mode the
+            # device bracket blocks on the sampled ids here
+            dv.done((ctx.ids, ctx.ok))
+        self._note_jit_cost(
+            obs, "mask_sample", self._mask_sample, logits,
+            self._store_cat, jnp.asarray(rows), jnp.asarray(eos),
+            jnp.asarray(need_mask), jnp.asarray(greedy),
+            jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+            jnp.asarray(keys))
         ctx.need_mask = need_mask
         ctr["mask_computations"] += int(need_mask.sum())
         ctx.mask_elapsed = sp_rows.dur + sp_disp.dur

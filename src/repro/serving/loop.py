@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.constrain import MAX_ACCEPT
 from repro.core.decoding import DecodeConfig
 from repro.obs import Telemetry
+from repro.serving.devbridge import attach as _attach_devbridge
 from repro.serving.kvpool import PoolExhausted
 from repro.spec.scheduler import SlotPhase, SpecConfig, SpecScheduler
 
@@ -169,6 +170,12 @@ class StepLoop:
         # passes its persistent one so /metrics is cumulative
         self.tele = telemetry if telemetry is not None else \
             Telemetry(enabled=getattr(engine, "telemetry_enabled", True))
+        # bind the jax sync/profiler capabilities (devbridge is the one
+        # sanctioned jax touchpoint for obs); device timing itself stays
+        # OFF unless the engine was built for bench/profile mode
+        _attach_devbridge(self.tele)
+        if getattr(engine, "devtime_enabled", False):
+            self.tele.devtime.enabled = True
 
         B = engine.slots
         self.B = B
@@ -442,6 +449,11 @@ class StepLoop:
             plan_time=tele.phase_seconds("plan"),
             overlap_dispatched=int(self.c_overlap_disp.value),
             overlap_hits=int(self.c_overlap_hit.value),
+            device_forward_s=(tele.devtime.seconds("forward")
+                              + tele.devtime.seconds("overlap_forward")),
+            device_mask_sample_s=tele.devtime.seconds("mask_sample"),
+            overlap_hidden_s=tele.c_overlap_hidden.value,
+            attribution=tele.attribution() if tele.enabled else None,
         )
         return self.mode.stats_extra(self, s)
 
@@ -500,6 +512,8 @@ class DenseMode(_ModeBase):
         self.cur_tok = None
         self.pending_logits = None      # speculative forward for the
                                         # NEXT step, still on device
+        self._spec_disp_t = None        # host clock when that dispatch
+                                        # returned (overlap-hidden attr)
         self._disp_w = 0                # windowed dispatch count
         self._hit_w = 0                 # windowed hit count
         self._gated_steps = 0           # steps since last probe
@@ -518,6 +532,7 @@ class DenseMode(_ModeBase):
         # the inserted prefill caches invalidate any in-flight
         # speculative forward for this slot
         self.pending_logits = None
+        self._spec_disp_t = None
         return st
 
     def step(self, loop, active):
@@ -530,16 +545,35 @@ class DenseMode(_ModeBase):
             self._hit_w += 1    # counted at CONSUMPTION, so a forward
                                 # invalidated by admit() is a miss in
                                 # the gate's window too
+            # overlap-hidden attribution: the host-work window between
+            # the speculative dispatch finishing and this consumption is
+            # device time the overlap hid. Clamp to the latest measured
+            # forward interval when devtime has one (bench/profile);
+            # otherwise the window itself is the documented upper bound.
+            # Never sync the speculative forward — that would serialize
+            # the very overlap being measured.
+            if self._spec_disp_t is not None:
+                window = time.perf_counter() - self._spec_disp_t
+                dev = tele.devtime.last_dur.get("forward", 0.0)
+                tele.add_overlap_hidden(min(window, dev) if dev > 0.0
+                                        else window)
+                self._spec_disp_t = None
         else:
             # cur_tok/feed_pos are mutated in place after the resolve
             # sync; the sync does guarantee this dispatch completed
             # first, but copy anyway — same aliasing hazard class as
             # the paged feed (see PagedMode.step)
-            with tele.span("forward"):
-                logits, self.caches = eng._decode(
-                    eng.params, self.caches,
-                    jnp.asarray(self.cur_tok.copy()),
-                    jnp.asarray(loop.feed_pos.copy()))
+            with tele.device_span("forward") as dv:
+                with tele.span("forward"):
+                    logits, self.caches = eng._decode(
+                        eng.params, self.caches,
+                        jnp.asarray(self.cur_tok.copy()),
+                        jnp.asarray(loop.feed_pos.copy()))
+                dv.done(logits)     # host span stays dispatch-only; the
+                # device bracket blocks here in bench/profile mode
+            eng._note_jit_cost(tele, "forward", eng._decode, eng.params,
+                               self.caches, jnp.asarray(self.cur_tok),
+                               jnp.asarray(loop.feed_pos))
         loop.c_decode_steps.inc()
         for b in active:
             loop.slot_state[b].steps += 1
@@ -558,6 +592,7 @@ class DenseMode(_ModeBase):
                 spec_logits, self.caches = eng._decode(
                     eng.params, self.caches, ctx.ids,
                     jnp.asarray(loop.feed_pos + 1))
+            self._spec_disp_t = time.perf_counter()
             loop.c_overlap_disp.inc()
             self._disp_w += 1
             if self._disp_w >= self.OVERLAP_WINDOW:
@@ -589,6 +624,8 @@ class DenseMode(_ModeBase):
         if spec_logits is not None and ctx.clean and \
                 set(committed) == set(active):
             self.pending_logits = spec_logits
+        else:
+            self._spec_disp_t = None    # discarded forward hides nothing
 
     def _speculate_now(self, loop) -> bool:
         if self._disp_w < self.OVERLAP_WARMUP:      # warm-up: always try
@@ -688,12 +725,19 @@ class PagedMode(_ModeBase):
             # Ship a private copy (jax keeps it alive; nobody mutates
             # it). Root-caused from a 5.47-magnitude logits drift in
             # chunked-prefill runs; see CHANGES.md PR 5 addendum.
-            with loop.tele.span("forward"):
-                logits, self.caches = eng._span_feed_paged(
-                    eng.params, self.caches, jnp.asarray(tokens),
-                    jnp.asarray(loop.feed_pos.copy()),
-                    jnp.asarray(fmask), jnp.asarray(page_tab),
-                    jnp.asarray(sel))
+            with loop.tele.device_span("forward") as dv:
+                with loop.tele.span("forward"):
+                    logits, self.caches = eng._span_feed_paged(
+                        eng.params, self.caches, jnp.asarray(tokens),
+                        jnp.asarray(loop.feed_pos.copy()),
+                        jnp.asarray(fmask), jnp.asarray(page_tab),
+                        jnp.asarray(sel))
+                dv.done(logits)
+            eng._note_jit_cost(
+                loop.tele, "forward", eng._span_feed_paged, eng.params,
+                self.caches, jnp.asarray(tokens),
+                jnp.asarray(loop.feed_pos), jnp.asarray(fmask),
+                jnp.asarray(page_tab), jnp.asarray(sel))
             loop.c_decode_steps.inc()
             for b in live:
                 st = loop.slot_state[b]
@@ -875,17 +919,19 @@ class SpecMode(_ModeBase):
             return
         # feed_pos is mutated in place after dispatch — ship a private
         # copy (zero-copy aliasing hazard; see PagedMode.step)
-        with loop.tele.span("forward"):
-            if self.paged:
-                page_tab = self.alloc.table_rows(np)
-                logits, self.caches = eng._span_decode_paged(
-                    eng.params, self.caches, jnp.asarray(tokens),
-                    jnp.asarray(feed_pos.copy()), jnp.asarray(fmask),
-                    jnp.asarray(page_tab))
-            else:
-                logits, self.caches = eng._span_decode(
-                    eng.params, self.caches, jnp.asarray(tokens),
-                    jnp.asarray(feed_pos.copy()), jnp.asarray(fmask))
+        with loop.tele.device_span("forward") as dv:
+            with loop.tele.span("forward"):
+                if self.paged:
+                    page_tab = self.alloc.table_rows(np)
+                    logits, self.caches = eng._span_decode_paged(
+                        eng.params, self.caches, jnp.asarray(tokens),
+                        jnp.asarray(feed_pos.copy()), jnp.asarray(fmask),
+                        jnp.asarray(page_tab))
+                else:
+                    logits, self.caches = eng._span_decode(
+                        eng.params, self.caches, jnp.asarray(tokens),
+                        jnp.asarray(feed_pos.copy()), jnp.asarray(fmask))
+            dv.done(logits)
         loop.c_decode_steps.inc()
         if self.paged:
             for b in live:
@@ -928,16 +974,18 @@ class SpecMode(_ModeBase):
             for (b, f), (sm, off) in span_sms.items():
                 r = np.where(sm.rows >= 0, sm.rows + off, sm.rows)
                 rows[b, f, :r.shape[0]] = r
-        with loop.tele.span("mask_dispatch"):
-            salts = np.array([slot_state[b].steps if slot_state[b] else 0
-                              for b in range(B)], np.uint32)
-            keys = eng._span_keys(loop.seeds, salts, S)
-            masked, ids, ok = eng._span_mask_select(
-                logits, eng._store_cat, jnp.asarray(rows),
-                jnp.asarray(eosm), jnp.asarray(consm),
-                jnp.asarray(loop.greedy), jnp.asarray(loop.temp),
-                jnp.asarray(loop.top_k), jnp.asarray(loop.top_p),
-                jnp.asarray(keys))
+        with loop.tele.device_span("mask_sample") as dv:
+            with loop.tele.span("mask_dispatch"):
+                salts = np.array([slot_state[b].steps if slot_state[b]
+                                  else 0 for b in range(B)], np.uint32)
+                keys = eng._span_keys(loop.seeds, salts, S)
+                masked, ids, ok = eng._span_mask_select(
+                    logits, eng._store_cat, jnp.asarray(rows),
+                    jnp.asarray(eosm), jnp.asarray(consm),
+                    jnp.asarray(loop.greedy), jnp.asarray(loop.temp),
+                    jnp.asarray(loop.top_k), jnp.asarray(loop.top_p),
+                    jnp.asarray(keys))
+            dv.done((ids, ok))
         with loop.tele.span("select_resolve"):
             ids_h, ok_h = np.asarray(ids), np.asarray(ok)
 

@@ -36,13 +36,24 @@ Observability surfaces (docs/observability.md):
 
   GET  /metrics  -> Prometheus text exposition: step-phase seconds,
                     TTFT/ITL/queue-wait histograms, token/mask/overlap
-                    counters, KV pool gauges.
+                    counters, KV pool gauges, device-attribution
+                    counters and (in profile mode) device intervals.
   GET  /stats    -> the same data as one JSON snapshot (plus request
-                    p50/p99 summaries and trace-buffer state).
+                    p50/p99 summaries, build identity, the per-step
+                    attribution split and trace-buffer state).
   POST /trace    -> {"action": "start" | "stop" | "dump" | "clear"}.
                     start/stop toggle span capture into the bounded
                     ring buffer; dump returns Chrome trace-event JSON
                     (loadable in ui.perfetto.dev) without stopping.
+  POST /profile  -> {"action": "start" | "stop" | "dump"}. Live
+                    profiler capture: start flips device spans into
+                    sync-on-exit mode (the documented profile-mode
+                    exception to the serving no-sync contract), starts
+                    trace capture AND a jax.profiler trace; dump (after
+                    stop) returns ONE Chrome trace document with the
+                    host phase spans, the synced device brackets, and
+                    the profiler's kernel-thread slices merged on a
+                    shared host-clock timeline.
 
 The HTTP layer is deliberately tiny (HTTP/1.1, Content-Length bodies,
 chunked responses); production fronting belongs in a real proxy — this
@@ -57,6 +68,7 @@ from typing import Optional
 
 from repro.core.constrain import GrammarConstraint
 from repro.core.decoding import DecodeConfig
+from repro.obs import build_info
 from repro.serving.async_engine import AsyncEngine
 from repro.serving.engine import Request
 
@@ -260,6 +272,7 @@ class EngineServer:
             "uptime_seconds": tele.uptime(),
             "queue_depth": len(self.aeng._source),
             "finish_reasons": tele.lifecycle.finish_reasons(),
+            "build": build_info(),
         }).encode()
         _start_response(writer, 200, "OK", "application/json",
                         chunked=False, body=body)
@@ -305,6 +318,41 @@ class EngineServer:
         _start_response(writer, 200, "OK", "application/json",
                         chunked=False, body=json.dumps(out).encode())
 
+    async def _profile(self, writer, body: bytes) -> None:
+        """Live profiler capture: devtime sync-on-exit + jax.profiler
+        trace, dumped as one merged host+device Chrome timeline."""
+        try:
+            spec = json.loads(body.decode() or "{}")
+        except (ValueError, UnicodeDecodeError):
+            raise ServerError(400, "body is not JSON")
+        action = spec.get("action")
+        tele = self.aeng.telemetry
+        prof = tele.profiler
+        if action == "start":
+            if not tele.enabled:
+                raise ServerError(409, "telemetry disabled "
+                                       "(engine started with "
+                                       "telemetry=False)")
+            if prof.active:
+                raise ServerError(409, "profile capture already active")
+            out = {"ok": True, "profiling": True, **prof.start()}
+        elif action == "stop":
+            if not prof.active:
+                raise ServerError(409, "no profile capture active")
+            out = {"ok": True, "profiling": False, **prof.stop()}
+        elif action == "dump":
+            if prof.active:
+                raise ServerError(409, "stop the capture before dump")
+            if prof.log_dir is None:
+                raise ServerError(409, "no profile capture to dump")
+            out = tele.tracer.export_chrome(
+                extra_events=prof.collect_chrome_events())
+        else:
+            raise ServerError(400, f"bad profile action {action!r}; "
+                                   f"expected start|stop|dump")
+        _start_response(writer, 200, "OK", "application/json",
+                        chunked=False, body=json.dumps(out).encode())
+
     # ---------------------------- connection --------------------------
 
     async def _handle(self, reader, writer) -> None:
@@ -323,6 +371,8 @@ class EngineServer:
                     await self._stats(writer)
                 elif method == "POST" and path == "/trace":
                     await self._trace(writer, body)
+                elif method == "POST" and path == "/profile":
+                    await self._profile(writer, body)
                 else:
                     raise ServerError(404, f"no route {method} {path}")
             except ServerError as e:
@@ -380,5 +430,5 @@ async def run_server(async_engine: AsyncEngine, host: str = "127.0.0.1",
     addr = await srv.start(host, port)
     print(f"serving on http://{addr[0]}:{addr[1]} "
           f"(POST /generate, POST /grammars, POST /trace, "
-          f"GET /healthz, GET /metrics, GET /stats)")
+          f"POST /profile, GET /healthz, GET /metrics, GET /stats)")
     await srv.serve_forever()

@@ -1,0 +1,376 @@
+"""Device-time attribution (repro.obs.devtime + serving integration).
+
+Contract groups (docs/observability.md §Device-time attribution):
+
+  * **no-sync default** — with device timing off (serving mode) the
+    injected sync capability is NEVER invoked: `DeviceTimer.sync_calls`
+    stays 0 across a full engine run, and `span()` hands back the shared
+    `NULL_DEV_SPAN` (PR 7's no-sync contract holds verbatim);
+  * **measured brackets** — in bench/profile mode the span syncs on the
+    arrays passed to `done()` and records a true device interval into
+    the `repro_device_*` families and the `device:<fn>` trace track;
+  * **profiler session** — the `POST /profile` state machine flips the
+    timer into sync-on-exit mode for exactly the capture window,
+    tolerates an unbound/broken backend profiler, and rebases backend
+    Chrome events onto the host clock for the merged export;
+  * **attribution math** — the step wall-time split prefers synced
+    device seconds per kernel family and falls back to host dispatch
+    spans, reporting which source produced each number;
+  * **identity** — devtime on vs off is token-for-token identical
+    (observation may never perturb decoding).
+"""
+import gzip
+import json
+import os
+import time
+
+import jax
+import pytest
+
+from repro.core.decoding import DecodeConfig
+from repro.obs import (DEVICE_TRACK_PREFIX, NULL_DEV_SPAN, DeviceTimer,
+                       MetricsRegistry, ProfilerSession, Telemetry, Tracer)
+from repro.serving.engine import Engine, Request
+
+MAX_LEN = 160
+
+
+def _timer(tracer=None):
+    tr = tracer or Tracer()
+    return DeviceTimer(MetricsRegistry(), tr), tr
+
+
+# ========================= unit: DeviceTimer ==========================
+
+def test_span_is_null_unless_enabled_and_bound():
+    dt, _ = _timer()
+    assert dt.span("forward") is NULL_DEV_SPAN          # neither
+    dt.enabled = True
+    assert dt.span("forward") is NULL_DEV_SPAN          # no sync bound
+    dt.bind(lambda out: out)
+    dt.enabled = False
+    assert dt.span("forward") is NULL_DEV_SPAN          # serving mode
+    dt.enabled = True
+    assert dt.span("forward") is not NULL_DEV_SPAN
+
+
+def test_null_span_never_syncs():
+    dt, _ = _timer()
+    dt.bind(lambda out: (_ for _ in ()).throw(AssertionError("synced")))
+    with dt.span("forward") as dv:                      # disabled
+        dv.done(object())
+    assert dt.sync_calls == 0
+    assert dt.seconds("forward") == 0.0
+
+
+def test_bound_span_syncs_and_measures():
+    dt, _ = _timer()
+    synced = []
+    dt.bind(synced.append)
+    dt.enabled = True
+    with dt.span("forward") as dv:
+        time.sleep(0.002)
+        dv.done("arrays")
+    assert synced == ["arrays"]
+    assert dt.sync_calls == 1
+    assert dv.dur >= 0.002
+    assert dt.seconds("forward") == pytest.approx(dv.dur)
+    assert dt.calls("forward") == 1
+    s = dt.summary()["forward"]
+    assert s["calls"] == 1 and s["seconds"] == pytest.approx(dv.dur)
+
+
+def test_span_without_done_records_but_never_syncs():
+    dt, _ = _timer()
+    dt.bind(lambda out: (_ for _ in ()).throw(AssertionError("synced")))
+    dt.enabled = True
+    with dt.span("forward"):
+        pass
+    assert dt.sync_calls == 0
+    assert dt.calls("forward") == 1
+
+
+def test_span_skips_sync_on_exception():
+    dt, _ = _timer()
+    dt.bind(lambda out: (_ for _ in ()).throw(AssertionError("synced")))
+    dt.enabled = True
+    with pytest.raises(RuntimeError):
+        with dt.span("forward") as dv:
+            dv.done("arrays")
+            raise RuntimeError("step failed")
+    assert dt.sync_calls == 0                   # arrays may be invalid
+
+
+def test_bind_is_idempotent():
+    dt, _ = _timer()
+    calls = []
+    dt.bind(lambda out: calls.append("first"))
+    dt.bind(lambda out: calls.append("second"))  # ignored
+    dt.enabled = True
+    with dt.span("f") as dv:
+        dv.done(1)
+    assert calls == ["first"]
+
+
+def test_device_track_only_while_tracing():
+    dt, tr = _timer()
+    dt.bind(lambda out: out)
+    dt.enabled = True
+    with dt.span("forward") as dv:
+        dv.done(1)
+    assert len(tr) == 0
+    tr.start()
+    with dt.span("forward") as dv:
+        dv.done(1)
+    tr.stop()
+    assert len(tr) == 1
+    evs = tr.export_chrome()["traceEvents"]
+    tracks = {e["args"]["name"] for e in evs
+              if e.get("name") == "thread_name"}
+    assert DEVICE_TRACK_PREFIX + "forward" in tracks
+
+
+def test_set_cost_surfaces_roofline_inputs():
+    dt, _ = _timer()
+    dt.bind(lambda out: out)
+    dt.enabled = True
+    dt.set_cost("forward", flops=2e9, hbm_bytes=1e8)
+    with dt.span("forward") as dv:
+        time.sleep(0.001)
+        dv.done(1)
+    s = dt.summary()["forward"]
+    assert s["flops_per_call"] == 2e9
+    assert s["achieved_flops_per_s"] == pytest.approx(2e9 / s["seconds"])
+    text = dt.registry.render_prometheus()
+    assert 'repro_device_flops_per_call{fn="forward"} 2e+09' in text \
+        or 'repro_device_flops_per_call{fn="forward"} 2000000000' in text
+
+
+# ======================= unit: ProfilerSession ========================
+
+def test_profiler_session_state_machine():
+    dt, tr = _timer()
+    dt.bind(lambda out: out)
+    ps = ProfilerSession(dt, tr)
+    assert ps.state()["active"] is False
+    with pytest.raises(RuntimeError):
+        ps.stop()                               # stop before start
+    info = ps.start()
+    assert ps.active and dt.enabled and tr.active
+    assert info["backend_profiler"] is False    # no backend bound
+    with pytest.raises(RuntimeError):
+        ps.start()                              # double start
+    out = ps.stop()
+    assert not ps.active and not dt.enabled and not tr.active
+    assert out["duration_s"] > 0.0
+    assert ps.collect_chrome_events() == []     # nothing captured
+
+
+def test_profiler_session_restores_prior_devtime_mode():
+    dt, tr = _timer()
+    dt.bind(lambda out: out)
+    dt.enabled = True                           # bench mode before capture
+    ps = ProfilerSession(dt, tr)
+    ps.start()
+    ps.stop()
+    assert dt.enabled is True                   # restored, not reset
+
+
+def test_profiler_session_tolerates_broken_backend():
+    dt, tr = _timer()
+    ps = ProfilerSession(dt, tr)
+
+    def broken_start(log_dir):
+        raise OSError("no backend")
+    ps.bind(broken_start, lambda: None)
+    info = ps.start()
+    assert info["backend_profiler"] is False    # swallowed, still capturing
+    assert ps.active
+    ps.stop()
+
+
+def test_collect_chrome_events_parses_and_rebases(tmp_path):
+    dt, tr = _timer()
+    ps = ProfilerSession(dt, tr)
+    ps.bind(lambda d: None, lambda: None)
+    ps.start(log_dir=str(tmp_path))
+    # synthetic backend capture: one device thread, one python thread,
+    # one noise slice — only the device kernel slice must survive
+    doc = {"traceEvents": [
+        {"ph": "M", "name": "thread_name", "pid": 1, "tid": 2,
+         "args": {"name": "TFRT XLATfrtCpuClient/0"}},
+        {"ph": "M", "name": "thread_name", "pid": 1, "tid": 3,
+         "args": {"name": "python main"}},
+        {"ph": "X", "pid": 1, "tid": 2, "name": "fusion.1",
+         "ts": 5000.0, "dur": 40.0},
+        {"ph": "X", "pid": 1, "tid": 2, "name": "ThunkExecutor work",
+         "ts": 5010.0, "dur": 1.0},
+        {"ph": "X", "pid": 1, "tid": 3, "name": "host_python_frame",
+         "ts": 5000.0, "dur": 500.0},
+    ]}
+    d = tmp_path / "plugins" / "profile" / "run1"
+    os.makedirs(d)
+    with gzip.open(d / "host.trace.json.gz", "wt") as f:
+        json.dump(doc, f)
+    ps.stop()
+    evs = ps.collect_chrome_events()
+    assert len(evs) == 1
+    ev = evs[0]
+    assert ev["name"] == "fusion.1"
+    assert ev["track"].startswith(DEVICE_TRACK_PREFIX + "xla ")
+    # earliest picked event is pinned to the host-clock capture start
+    assert ev["ts_us"] == pytest.approx(ps.host_t0 * 1e6)
+    assert ev["dur_us"] == 40.0
+
+
+def test_merged_export_aligns_host_and_device_tracks():
+    tele = Telemetry(enabled=True)
+    tele.tracer.start()
+    with tele.span("rows_build"):
+        time.sleep(0.001)
+    tele.tracer.stop()
+    host_t0 = tele.tracer._ring[0][3]           # ("X", track, name, t0, …)
+    extra = [{"track": "device:xla main", "name": "fusion.7",
+              "ts_us": host_t0 * 1e6, "dur_us": 10.0}]
+    doc = tele.tracer.export_chrome(extra_events=extra)
+    evs = doc["traceEvents"]
+    tracks = {e["args"]["name"] for e in evs
+              if e.get("name") == "thread_name"}
+    assert "rows_build" in tracks and "device:xla main" in tracks
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"rows_build", "fusion.7"}
+    assert all(e["ts"] >= 0.0 for e in xs)      # shared rebase
+    assert doc["otherData"]["merged_device_events"] == 1
+
+
+# ====================== unit: attribution math ========================
+
+def _fabricate(tele, phase_seconds=(), device_seconds=()):
+    for phase, s in phase_seconds:
+        tele._phase(phase)[0].inc(s)
+    for fn, s in device_seconds:
+        tele.devtime._record(fn, 0.0, s)
+
+
+def test_attribution_host_dispatch_fallback():
+    tele = Telemetry(enabled=True)
+    _fabricate(tele, phase_seconds=[("rows_build", 0.3), ("plan", 0.1),
+                                    ("mask_dispatch", 0.2),
+                                    ("forward", 0.4)])
+    a = tele.attribution()
+    assert a["seconds"]["host_grammar"] == pytest.approx(0.4)
+    assert a["seconds"]["mask_sample_kernel"] == pytest.approx(0.2)
+    assert a["seconds"]["forward_kernel"] == pytest.approx(0.4)
+    assert a["source"] == {"mask_sample_kernel": "host-dispatch",
+                           "forward_kernel": "host-dispatch"}
+    assert sum(a["fractions"].values()) == pytest.approx(1.0)
+
+
+def test_attribution_prefers_device_seconds():
+    tele = Telemetry(enabled=True)
+    _fabricate(tele,
+               phase_seconds=[("mask_dispatch", 0.001), ("forward", 0.002)],
+               device_seconds=[("mask_sample", 0.25), ("forward", 0.5),
+                               ("overlap_forward", 0.1)])
+    a = tele.attribution()
+    assert a["seconds"]["mask_sample_kernel"] == pytest.approx(0.25)
+    assert a["seconds"]["forward_kernel"] == pytest.approx(0.6)
+    assert a["source"] == {"mask_sample_kernel": "device",
+                           "forward_kernel": "device"}
+    # the scrape-time counters agree with the attribution() view
+    text = tele.registry.render_prometheus()
+    assert 'repro_step_attribution_seconds_total' \
+           '{component="forward_kernel"} 0.6' in text
+
+
+def test_overlap_hidden_is_a_real_counter():
+    tele = Telemetry(enabled=True)
+    tele.add_overlap_hidden(0.05)
+    tele.add_overlap_hidden(-1.0)               # ignored
+    assert tele.attribution()["seconds"]["overlap_hidden"] == \
+        pytest.approx(0.05)
+    # present (and writable) even with telemetry disabled
+    off = Telemetry(enabled=False)
+    off.add_overlap_hidden(0.01)
+    assert off.c_overlap_hidden.value == pytest.approx(0.01)
+    assert off.attribution() == {"enabled": False}
+
+
+# ===================== integration: engine modes ======================
+
+@pytest.fixture(scope="module")
+def dev_engines(tokenizer, grammar_bundle):
+    from dataclasses import replace
+
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    bundles = {}
+    for name in ("json",):
+        g, tab, store, _ = grammar_bundle(name)
+        bundles[name] = (g, tab, store)
+    cfg = get_config("syncode-demo")
+    cfg = replace(cfg, vocab_size=tokenizer.vocab_size, num_layers=2,
+                  d_model=128, d_ff=256, num_heads=4, num_kv_heads=2,
+                  head_dim=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def make(**kw):
+        kw.setdefault("slots", 4)
+        return Engine(model, params, tokenizer, bundles, max_len=MAX_LEN,
+                      **kw)
+    return make
+
+
+def _reqs(n=3, max_new=10):
+    return [Request(rid=i, prompt=b"Q: generate. A:", grammar="json",
+                    max_new_tokens=max_new,
+                    decode=DecodeConfig(method="sample", temperature=1.0),
+                    seed=i) for i in range(n)]
+
+
+def _ids(states):
+    return {s.req.rid: (s.token_ids, s.finish_reason) for s in states}
+
+
+def _run_loop(eng, reqs):
+    from repro.serving.loop import ListSource, StepLoop, make_mode
+    loop = StepLoop(eng, make_mode(eng), ListSource(reqs))
+    states, stats = loop.run()
+    return states, stats, loop.tele
+
+
+def test_serving_mode_never_syncs(dev_engines):
+    """The tentpole no-sync guarantee, dynamically: a full serving-mode
+    run (telemetry ON, device timing off) invokes the injected sync
+    capability zero times and measures zero device seconds."""
+    eng = dev_engines(telemetry=True)
+    _, stats, tele = _run_loop(eng, _reqs())
+    assert tele.devtime.sync_fn is not None     # devbridge DID bind it
+    assert tele.devtime.sync_calls == 0         # ...but it never ran
+    assert tele.devtime.seconds("forward") == 0.0
+    assert stats.device_forward_s == 0.0
+    assert stats.attribution["source"]["forward_kernel"] == \
+        "host-dispatch"
+
+
+def test_devtime_engine_measures_device_intervals(dev_engines):
+    eng = dev_engines(telemetry=True, devtime=True)
+    _, stats, tele = _run_loop(eng, _reqs())
+    assert tele.devtime.sync_calls > 0
+    assert stats.device_forward_s > 0.0
+    assert stats.device_mask_sample_s > 0.0
+    a = stats.attribution
+    assert a["device_timing"] is True
+    assert a["source"]["forward_kernel"] == "device"
+    assert a["source"]["mask_sample_kernel"] == "device"
+    # lazy HLO cost estimation attached roofline inputs to the fwd fn
+    assert tele.devtime.costs.get("forward", {}).get("flops", 0) > 0
+    fam = tele.devtime.summary()["forward"]
+    assert fam["achieved_flops_per_s"] > 0
+
+
+def test_devtime_identity(dev_engines):
+    s_on, _ = dev_engines(telemetry=True, devtime=True).generate(_reqs())
+    s_off, _ = dev_engines(telemetry=True).generate(_reqs())
+    assert _ids(s_on) == _ids(s_off)

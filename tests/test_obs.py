@@ -90,6 +90,25 @@ def test_histogram_quantile_overflow_and_empty():
         h.quantile(1.5)
 
 
+def test_histogram_quantile_single_sample():
+    h = Histogram(bounds=(1.0, 2.0, 4.0))
+    h.observe(1.5)
+    # one observation: quantiles interpolate across its bucket
+    assert h.quantile(0.0) == pytest.approx(1.0)
+    assert h.quantile(0.5) == pytest.approx(1.5)
+    assert h.quantile(1.0) == pytest.approx(2.0)
+
+
+def test_histogram_quantile_all_overflow():
+    h = Histogram(bounds=(1.0, 2.0))
+    for _ in range(5):
+        h.observe(10.0)                 # every sample beyond the bounds
+    # the overflow bucket has no upper edge: report the largest bound
+    for q in (0.0, 0.5, 1.0):
+        assert h.quantile(q) == 2.0
+    assert h.count == 5 and h.sum == pytest.approx(50.0)
+
+
 def test_histogram_rejects_unsorted_bounds():
     with pytest.raises(ValueError):
         Histogram(bounds=(2.0, 1.0))
@@ -117,6 +136,57 @@ def test_registry_fn_rebind():
     assert g.value == 1.0
     g2 = reg.gauge("pool", fn=lambda: 7.0)      # re-register: rebind
     assert g2 is g and g.value == 7.0
+
+
+def test_registry_concurrent_writers_and_scrapes():
+    """The documented threading contract: family creation is locked,
+    updates are single-writer per instrument, and scrapes running
+    concurrently with writers never raise or corrupt the families.
+    Per-thread labeled children make the final values exact."""
+    import threading
+    reg = MetricsRegistry()
+    n_threads, n_inc = 8, 2000
+    errs = []
+    start = threading.Barrier(n_threads + 2)
+
+    def writer(i):
+        try:
+            start.wait()
+            c = reg.counter("conc_total", "c", {"t": str(i)})
+            h = reg.histogram("conc_lat", "h", buckets=(1.0, 2.0),
+                              labels={"t": str(i)})
+            for k in range(n_inc):
+                c.inc()
+                h.observe(0.5 if k % 2 else 3.0)
+        except Exception as e:       # pragma: no cover - failure path
+            errs.append(e)
+
+    def scraper():
+        try:
+            start.wait()
+            for _ in range(50):
+                text = reg.render_prometheus()
+                assert text.endswith("\n")
+                reg.snapshot()
+        except Exception as e:       # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_threads)]
+    threads += [threading.Thread(target=scraper) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    for i in range(n_threads):
+        assert reg.counter("conc_total",
+                           labels={"t": str(i)}).value == n_inc
+        h = reg.histogram("conc_lat", buckets=(1.0, 2.0),
+                          labels={"t": str(i)})
+        assert h.count == n_inc
+        assert h.counts[0] == n_inc // 2        # the 0.5 observations
+    _assert_valid_prometheus(reg.render_prometheus())
 
 
 _PROM_LINE = re.compile(
@@ -186,7 +256,8 @@ def test_tracer_ring_bounds_and_drop_count():
     assert len(tr) == 4
     assert tr.dropped == 6
     doc = tr.export_chrome()
-    assert doc["otherData"] == {"dropped_events": 6, "captured_events": 10}
+    assert doc["otherData"] == {"dropped_events": 6, "captured_events": 10,
+                                "merged_device_events": 0}
     tr.clear()
     assert len(tr) == 0 and tr.dropped == 0
 
@@ -348,6 +419,14 @@ def test_serving_loop_has_no_explicit_device_sync():
         src = (SRC / "repro" / "serving" / f"{mod}.py").read_text()
         for pat in ("block_until_ready", ".item()", "device_get"):
             assert pat not in src, (mod, pat)
+    # devbridge.py is the ONE deliberate exception: it binds
+    # block_until_ready INTO the obs layer as an injected capability
+    # (invoked only in bench/profile mode — tests/test_devtime.py proves
+    # serving mode never calls it). No other serving module may sync.
+    serving = SRC / "repro" / "serving"
+    syncful = sorted(p.name for p in serving.glob("*.py")
+                     if "block_until_ready" in p.read_text())
+    assert syncful == ["devbridge.py"]
 
 
 # ======================= identity: telemetry off =======================
