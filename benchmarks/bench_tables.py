@@ -186,8 +186,9 @@ def mask_union_micro():
     dt = timeit(lambda: jax.block_until_ready(
         ref(logits, store, rows, eos)), n=20)
     emit("mask_union_jnp_ref", dt * 1e6, f"B={B};V={V};A={A}")
+    cd = jnp.zeros((B, V // 32), jnp.uint32)
     dt2 = timeit(lambda: jax.block_until_ready(
-        masked_logits(logits, store, rows, eos, block_v=2048,
+        masked_logits(logits, store, rows, eos, cd, block_v=2048,
                       interpret=True)), n=3)
     emit("mask_union_pallas_interpret", dt2 * 1e6,
          "interpret-mode (CPU correctness path; TPU is the target)")

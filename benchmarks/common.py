@@ -6,11 +6,12 @@ Every `emit()` call still prints the historical ``name,us,derived`` CSV
 row, but now also collects the row in-process; `write_artifact()`
 persists the run as ``BENCH_<git-sha>.json``:
 
-    {"schema_version": 1,
+    {"schema_version": 2,
      "run_meta": {git_sha, git_dirty, jax_version, device_kind, ...},
      "rows": [{"name", "us_per_call",
                "derived": {k: v, ...},          # parsed k=v columns
-               "attribution": {host_grammar_s, mask_sample_kernel_s,
+               "attribution": {host_grammar_s, host_grammar_ci_s,
+                               host_grammar_cd_s, mask_sample_kernel_s,
                                forward_kernel_s, overlap_hidden_s,
                                device_forward_s, device_mask_sample_s}},
               ...]}
@@ -35,11 +36,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # canonical attribution columns every artifact row carries (zero when a
-# bench has no engine stats — micro-benches of pure host code)
-ATTRIBUTION_COLS = ("host_grammar_s", "mask_sample_kernel_s",
+# bench has no engine stats — micro-benches of pure host code). v2 adds
+# the context-split host sub-components host_grammar_ci_s /
+# host_grammar_cd_s (subsets of host_grammar_s, not additive with it);
+# scripts/bench_diff.py still reads v1 artifacts by zero-filling them.
+ATTRIBUTION_COLS = ("host_grammar_s", "host_grammar_ci_s",
+                    "host_grammar_cd_s", "mask_sample_kernel_s",
                     "forward_kernel_s", "overlap_hidden_s",
                     "device_forward_s", "device_mask_sample_s")
 
@@ -94,6 +99,8 @@ def attribution_cols(stats) -> dict:
     sec = a.get("seconds", {})
     return {
         "host_grammar_s": sec.get("host_grammar", 0.0),
+        "host_grammar_ci_s": sec.get("host_grammar_ci", 0.0),
+        "host_grammar_cd_s": sec.get("host_grammar_cd", 0.0),
         "mask_sample_kernel_s": sec.get("mask_sample_kernel", 0.0),
         "forward_kernel_s": sec.get("forward_kernel", 0.0),
         "overlap_hidden_s": getattr(stats, "overlap_hidden_s", 0.0),

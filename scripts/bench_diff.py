@@ -1,6 +1,8 @@
 #!/usr/bin/env python
 """Perf-regression gate: compare two bench artifacts (benchmarks/common
-`write_artifact` JSON, schema v1) with robust median + MAD statistics.
+`write_artifact` JSON, schema v2; v1 artifacts are read and upgraded
+in-place by zero-filling the context-split attribution columns) with
+robust median + MAD statistics.
 
     python scripts/bench_diff.py BASELINE CURRENT [--warn-only]
     python scripts/bench_diff.py --self-test BASELINE
@@ -27,7 +29,12 @@ import json
 import math
 import sys
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+
+# versions load() can still read; v1 rows lack the context-split
+# attribution columns and are upgraded by zero-filling them
+_READABLE_VERSIONS = (1, 2)
+_V2_ATTR_COLS = ("host_grammar_ci_s", "host_grammar_cd_s")
 
 # rows whose us_per_call is a percentage / score, not a latency — the
 # ratio test doesn't apply (they are compared informationally only)
@@ -38,11 +45,17 @@ def load(path: str) -> dict:
     with open(path) as f:
         doc = json.load(f)
     ver = doc.get("schema_version")
-    if ver != SCHEMA_VERSION:
+    if ver not in _READABLE_VERSIONS:
         raise SystemExit(f"{path}: schema_version {ver!r}, "
-                         f"expected {SCHEMA_VERSION}")
+                         f"expected one of {_READABLE_VERSIONS}")
     if not isinstance(doc.get("rows"), list):
         raise SystemExit(f"{path}: no rows")
+    if ver < SCHEMA_VERSION:
+        for r in doc["rows"]:
+            attr = r.setdefault("attribution", {})
+            for k in _V2_ATTR_COLS:
+                attr.setdefault(k, 0.0)
+        doc["schema_version"] = SCHEMA_VERSION
     return doc
 
 

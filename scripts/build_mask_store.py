@@ -20,7 +20,8 @@ builders).
       --cache-dir ~/.cache/repro-maskstores [--verify]
 
 `--verify` additionally runs the serial builder and asserts the packed
-arrays are identical (used by the CI grammar-build job).
+arrays AND the context-split tables (cd_ptr/cd_token/cd_follow/cd_big)
+are identical (used by the CI grammar-build job).
 """
 from __future__ import annotations
 
@@ -98,9 +99,21 @@ def build_parallel(name: str, vocab: int, workers: int,
         if not np.array_equal(store.packed, want):
             raise SystemExit(f"[{name}] FAIL: parallel build does not "
                              f"match the serial build")
+        # the context-split tables must concatenate shard-obliviously
+        # too: CI/CD classification is per-state, so the sharded tables
+        # must equal a single [0, total) derivation bit-for-bit
+        s_ptr, s_tok, s_fol, s_big = serial[2]
+        for label, got, ref in (("cd_ptr", store.cd_ptr, s_ptr),
+                                ("cd_token", store.cd_token, s_tok),
+                                ("cd_follow", store.cd_follow, s_fol),
+                                ("cd_big", store.cd_big, s_big)):
+            if not np.array_equal(got, ref):
+                raise SystemExit(f"[{name}] FAIL: parallel {label} does "
+                                 f"not match the serial build")
         if verbose:
             print(f"[{name}] verify: parallel == serial "
-                  f"({len(bounds)} shards, bit-exact)")
+                  f"({len(bounds)} shards, packed + context-split "
+                  f"tables bit-exact)")
     return store
 
 
@@ -115,7 +128,8 @@ def main(argv=None):
                     help="publish stores here (default: build only)")
     ap.add_argument("--verify", action="store_true",
                     help="also run the serial builder and assert the "
-                         "packed stores are bit-identical")
+                         "packed stores and context-split tables are "
+                         "bit-identical")
     args = ap.parse_args(argv)
 
     from repro.core.grammars import BUILTIN

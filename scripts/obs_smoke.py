@@ -57,12 +57,13 @@ REQUIRED_FAMILIES = (
 
 # device-attribution components /metrics must expose (scrape-time
 # counters wired by Telemetry._wire_attribution)
-REQUIRED_ATTRIBUTION = ("host_grammar", "mask_sample_kernel",
+REQUIRED_ATTRIBUTION = ("host_grammar", "host_grammar_ci",
+                        "host_grammar_cd", "mask_sample_kernel",
                         "forward_kernel", "overlap_hidden")
 
 # phases the paged workload must have timed at least once
-REQUIRED_PHASES = ("admit", "feed_build", "forward", "rows_build",
-                   "mask_dispatch", "select_resolve")
+REQUIRED_PHASES = ("admit", "feed_build", "forward", "ci_lookup",
+                   "cd_check", "mask_dispatch", "select_resolve")
 
 _SAMPLE_RE = re.compile(
     r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? "
@@ -180,7 +181,7 @@ async def _run() -> int:
         evs = doc["traceEvents"]
         assert evs, "empty trace"
         phases = {e.get("name") for e in evs if e.get("ph") == "X"}
-        assert "forward" in phases and "rows_build" in phases, phases
+        assert "forward" in phases and "ci_lookup" in phases, phases
         tracks = {e["args"]["name"] for e in evs
                   if e.get("name") == "thread_name"}
         assert any(t.startswith("slot ") for t in tracks), tracks

@@ -56,22 +56,44 @@ class LexToken:
     pos: int
 
 
-def lex_partial(grammar: Grammar, data: bytes):
-    """Returns (tokens, unlexed_suffix). unlexed_suffix == b'' means Case 1
-    (or empty input); non-empty means Case 2."""
+def lex_partial_state(grammar: Grammar, data: bytes, start: int = 0,
+                      state: "tuple | None" = None):
+    """Stateful maximal-munch lex. Returns (tokens, unlexed_suffix,
+    walk_state). unlexed_suffix == b'' means Case 1 (or empty input);
+    non-empty means Case 2.
+
+    `walk_state` is (pos, q, j, last_acc, last_tag) — the DFA walk of
+    the final, still-extendable unit at the end of `data` (None when the
+    input ends exactly at a dead-stopped token boundary). Passing it
+    back as `state` on a later call whose data extends the original
+    continues that walk over only the appended bytes, reproducing the
+    fresh walk's outcome exactly; the caller must drop its previously
+    returned final token when one was emitted at `state[0]` (that token
+    is re-emitted, possibly extended). See
+    IncrementalParser._lex_partial_cached.
+
+    `start` resumes lexing at a byte offset (token positions stay
+    absolute): every committed token except the final one is decided by
+    bytes the DFA already consumed, so an incremental caller without a
+    walk state may keep `tokens[:-1]` and relex from `tokens[-1].pos`."""
     dfa = grammar.lexer_dfa
     tags = grammar.lexer_tags
     trans = dfa.trans
     live = dfa.live
     finals = dfa.finals
     tokens: list[LexToken] = []
-    pos = 0
+    pos = start
     n = len(data)
-    while pos < n:
-        q = dfa.start
-        j = pos
-        last_acc = -1
-        last_tag = None
+    resume = state
+    while pos < n or resume is not None:
+        if resume is not None:
+            pos, q, j, last_acc, last_tag = resume
+            resume = None
+        else:
+            q = dfa.start
+            j = pos
+            last_acc = -1
+            last_tag = None
         while j < n:
             nq = trans[q, data[j]]
             if not live[nq]:
@@ -83,18 +105,25 @@ def lex_partial(grammar: Grammar, data: bytes):
                 last_tag = tags[q]
         if j == n and live[q] and q != dfa.start:
             # reached end of input while a token is still in progress
+            st = (pos, q, j, last_acc, last_tag)
             if finals[q]:
                 tokens.append(LexToken(last_tag, data[pos:j], pos))
-                pos = j
-                continue
-            return tokens, data[pos:]
+                return tokens, b"", st
+            return tokens, data[pos:], st
         if last_acc < 0:
             raise LexError(
                 f"no terminal matches at byte {pos} ({data[pos:pos+12]!r})",
                 pos=pos)
         tokens.append(LexToken(last_tag, data[pos:last_acc], pos))
         pos = last_acc
-    return tokens, b""
+    return tokens, b"", None
+
+
+def lex_partial(grammar: Grammar, data: bytes, start: int = 0):
+    """Returns (tokens, unlexed_suffix) — `lex_partial_state` without the
+    resumable walk state."""
+    tokens, unlexed, _st = lex_partial_state(grammar, data, start)
+    return tokens, unlexed
 
 
 # --------------------------------------------------------------------------
@@ -124,6 +153,10 @@ class IndentResult:
     levels: tuple
     paren: int
     has_content: bool
+    # fold state immediately before the final token was processed:
+    # (k, tokens-out tuple, levels tuple, paren, has_content). Passing it
+    # back as `resume` (with toks[:k] unchanged) re-folds only the tail.
+    prefix_state: "tuple | None" = None
 
 
 def _indent_col(value: bytes) -> "int | None":
@@ -142,7 +175,8 @@ def _indent_col(value: bytes) -> "int | None":
 
 
 def postlex_indent(grammar: Grammar, toks: list, unlexed: bytes = b"",
-                   at_eof: bool = False) -> IndentResult:
+                   at_eof: bool = False,
+                   resume: "tuple | None" = None) -> IndentResult:
     """Synthesize INDENT/DEDENT for an `%indent` grammar.
 
     Partial-input safety: a trailing NEWLINE token that could still be
@@ -156,6 +190,15 @@ def postlex_indent(grammar: Grammar, toks: list, unlexed: bytes = b"",
     closure is applied instead: a final NEWLINE (the last logical line
     needs no trailing newline byte) followed by one DEDENT per open
     level.
+
+    `resume` is a `prefix_state` from a previous call whose first k
+    tokens are unchanged (the caller must verify this — object identity
+    over `toks[:k]` suffices, see IncrementalParser): the fold restarts
+    after token k-1 instead of from the top, so a decode step that only
+    appends bytes re-folds O(1) tokens. Only the final token's handling
+    differs between calls (pending vs committed), and `prefix_state` is
+    snapshotted strictly before it, so resumed and from-scratch folds
+    agree exactly.
     """
     nl_t, ind_t, ded_t = grammar.indent_spec
     ignores = set(grammar.ignores)
@@ -165,7 +208,16 @@ def postlex_indent(grammar: Grammar, toks: list, unlexed: bytes = b"",
     has_content = False
     pending = None
     n = len(toks)
-    for i, t in enumerate(toks):
+    start = 0
+    if resume is not None and resume[0] < n:
+        start, r_out, r_levels, paren, has_content = resume
+        out = list(r_out)
+        levels = list(r_levels)
+    snapshot = None
+    for i in range(start, n):
+        t = toks[i]
+        if i == n - 1 and not at_eof:
+            snapshot = (i, tuple(out), tuple(levels), paren, has_content)
         if t.type == nl_t:
             if paren > 0:
                 continue                    # implicit line joining
@@ -206,4 +258,6 @@ def postlex_indent(grammar: Grammar, toks: list, unlexed: bytes = b"",
                 levels.pop()
                 out.append(LexToken(ded_t, b"", end))
         pending = None
-    return IndentResult(out, pending, tuple(levels), paren, has_content)
+        snapshot = None
+    return IndentResult(out, pending, tuple(levels), paren, has_content,
+                        prefix_state=snapshot)

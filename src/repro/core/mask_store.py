@@ -44,6 +44,46 @@ for any global-state range (the offline parallel builder
 `scripts/build_mask_store.py` farms shards to worker processes) and
 `assemble_store` concatenates shard outputs and atomically publishes
 the store through the fingerprinted disk cache.
+
+Context split (layout v4, XGrammar-style): every (state, token) pair is
+classified offline into a context-INDEPENDENT majority — acceptance
+decided by the DFA walk alone (dmatch cond 1: the token's bytes walk
+live inside the current terminal; the CI row of state `s` is the
+strict-M0 / end_live row `packed[strict_offset + s*stride]`, shared by
+BOTH families) — and a context-DEPENDENT part whose acceptance depends
+on the step's accept sequences. The CD part decomposes further, and
+every sub-class except the last is resolved by choosing PRECOMPUTED
+store rows (device-resident ids, zero host bit work):
+
+  * α=0 overshoot (family M0 bits beyond end_live): selected by one
+    accept-set boolean — when the length-1 sequence is present the
+    runtime emits the family M0 row (a superset of the CI row) as the
+    group's base row instead of the CI row.
+  * position-0 follow splits: when the remainder walk lands IN F, every
+    token that pmatches follow terminal τ' from its start is allowed —
+    and that set is exactly the store row of τ''s DFA START state
+    (mask-family M0 row / strict CI row; an identity of the suffix
+    tables, asserted by tests). The runtime emits those per-follow
+    start rows whenever `finals[s]`.
+  * interior (j>0) splits whose residue is BIG (> CD_ROW_THRESHOLD
+    tokens): the legacy M1 row id is emitted directly; `cd_big` bit
+    1+g of `[fam*S + s]` marks these rows.
+  * interior splits with a SMALL residue — the only per-token work
+    left: `cd_token` lists the tokens per (family, state) with a
+    per-token follow bitmask `cd_follow` (bit 1+g = M1[τ_g]-residue,
+    matching row addressing; bit 0 reserved), indexed by
+    `cd_ptr[fam*S + s]`. The runtime overlay is a
+    select-by-accept-bits scatter over this residue — a few tokens per
+    step on the builtin grammars, replacing the wide accept-row
+    unions on the host hot path.
+
+The classification (`derive_context_split`) is a pure function of the
+packed rows plus per-state finals flags and the per-terminal
+start-state rows (both derivable from grammar + packed), so shard
+outputs concatenate bitwise deterministically and `--verify` can
+re-derive it independently. Per-row popcounts and the [256, W]
+first-byte table are also precomputed at build time (they used to be
+lazy per-process work).
 """
 from __future__ import annotations
 
@@ -60,13 +100,189 @@ from .tokenizer import ByteTokenizer, EOS_ID, PAD_ID
 # On-disk cache layout version, hashed into the cache fingerprint. Bump
 # whenever the packed representation changes (word dtype, bit order, row
 # addressing, padding) so stale caches written by an older layout MISS
-# instead of being loaded as garbage masks.
-STORE_LAYOUT_VERSION = 3
+# instead of being loaded as garbage masks. v4: context-split tables
+# (cd_ptr/cd_token/cd_follow) + build-time popcount and first-byte
+# tables ride in the same npz.
+STORE_LAYOUT_VERSION = 4
+
+# Context-dependent rows whose interior-split residue exceeds this many
+# tokens are kept as whole precomputed M1 rows (`cd_big`) instead of
+# entering the per-token residue tables: the per-step scatter stays a
+# few tokens while pathological states cost one extra device row id.
+# Folded into the cache fingerprint — changing it must miss stale caches.
+CD_ROW_THRESHOLD = 16
+
+
+def compute_row_popcounts(packed: np.ndarray) -> np.ndarray:
+    """[rows] int32 allowed-token count per packed row. 256-entry
+    popcount LUT over the uint8 view: same result as unpackbits().sum()
+    at 1/8 the transient memory (no [R, V] bit expansion next to the
+    resident model)."""
+    lut = np.unpackbits(
+        np.arange(256, dtype=np.uint8)[:, None], axis=1
+    ).sum(axis=1, dtype=np.int32)
+    return lut[packed.view(np.uint8)].sum(axis=1, dtype=np.int32)
+
+
+def compute_first_byte_table(tokenizer: ByteTokenizer,
+                             words: int) -> np.ndarray:
+    """[256, words] uint32: row c is the packed bitmask of vocab tokens
+    whose first byte is c (special / empty tokens excluded)."""
+    fb = np.zeros((256, words), np.uint32)
+    for tid, b in enumerate(tokenizer.id_to_bytes):
+        if b and tid < tokenizer.vocab_size:
+            fb[b[0], tid // 32] |= np.uint32(1 << (tid % 32))
+    return fb
+
+
+def compute_state_finals(grammar: Grammar, lo: int = 0,
+                         hi: int | None = None) -> np.ndarray:
+    """[hi-lo] bool: global DFA state s+lo is a FINAL state of its
+    terminal's DFA. Final states admit position-0 follow splits (the
+    remainder already completes the terminal), which the runtime
+    resolves with the follow terminal's start-state row."""
+    if hi is None:
+        hi = grammar.total_dfa_states
+    finals = np.zeros(hi - lo, dtype=bool)
+    for name in grammar.terminal_names:
+        dfa = grammar.terminals[name].dfa
+        off = grammar.state_offset[name]
+        for q in range(max(0, lo - off), min(dfa.num_states, hi - off)):
+            finals[off + q - lo] = bool(dfa.finals[q])
+    return finals
+
+
+def term_start_states(grammar: Grammar) -> np.ndarray:
+    """[G] int32 global DFA state of each terminal's start state, in
+    `terminal_names` order — the addressing base for the position-0
+    follow-split rows."""
+    return np.array([grammar.state_offset[t] + grammar.terminals[t].dfa.start
+                     for t in grammar.terminal_names], dtype=np.int32)
+
+
+def pm0_rows_from_packed(grammar: Grammar, packed: np.ndarray,
+                         stride: int) -> tuple[np.ndarray, np.ndarray]:
+    """([G, W], [G, W]) uint32 pmatch-from-start rows per family, read
+    from a FULL packed array: mask family = M0 row of the terminal's
+    start state, strict family = its CI (strict-M0) row."""
+    starts = term_start_states(grammar)
+    strict_offset = packed.shape[0] // 2
+    return (packed[starts * stride],
+            packed[strict_offset + starts * stride])
+
+
+def derive_context_split(mask_packed: np.ndarray, strict_packed: np.ndarray,
+                         stride: int, vocab_size: int,
+                         finals: np.ndarray, pm0_mask: np.ndarray,
+                         pm0_strict: np.ndarray,
+                         threshold: int = CD_ROW_THRESHOLD):
+    """Classify (state, token) pairs into the context-dependent residue,
+    per row family — a pure function of the packed rows plus the
+    per-state `finals` flags (aligned to this packed slice) and the
+    per-terminal pmatch-from-start rows `pm0_*` [G, W] (the start-state
+    rows of the FULL store; see `pm0_rows_from_packed`).
+
+    For state `s` the context-independent bits are the strict-M0 /
+    end_live row `strict_packed[s*stride]` (cond 1 — shared by both
+    families). The context-dependent remainder of M1[τ_g] beyond those
+    bits is classified per (family, state, follow):
+
+      * if `finals[s]`, the position-0 split contribution — exactly the
+        pm0 row of τ_g — is subtracted: the runtime emits that
+        precomputed row directly, so it never enters the tables;
+      * a residue still larger than `threshold` tokens marks bit 1+g of
+        `cd_big[fam*S + s]`: the runtime emits the legacy M1 row id
+        (also precomputed) for these;
+      * otherwise the residue tokens enter `cd_token` (ascending —
+        deterministic for shard concatenation and bitwise --verify)
+        with follow bit 1+g set in `cd_follow`.
+
+    Returns (cd_ptr [2S+1] int64, cd_token [N] int32,
+    cd_follow [N, FW] uint64, cd_big [2S, FW] uint64),
+    FW = ceil(stride/64); the residue of (family f, state s) lives at
+    cd_token[cd_ptr[f*S+s] : cd_ptr[f*S+s+1]].
+    """
+    S = mask_packed.shape[0] // stride
+    FW = (stride + 63) // 64
+    cd_ptr = np.zeros(2 * S + 1, dtype=np.int64)
+    cd_big = np.zeros((2 * S, FW), dtype=np.uint64)
+    pclut = np.unpackbits(np.arange(256, dtype=np.uint8)[:, None],
+                          axis=1).sum(axis=1, dtype=np.int32)
+    tok_parts: list = []
+    fol_parts: list = []
+    n = 0
+    for fam, (fam_rows, pm0) in enumerate(((mask_packed, pm0_mask),
+                                           (strict_packed, pm0_strict))):
+        for s in range(S):
+            rows = fam_rows[s * stride + 1:(s + 1) * stride]   # M1 only
+            ci = strict_packed[s * stride]
+            extra = rows & ~ci[None, :]
+            if finals[s]:
+                extra = extra & ~pm0
+            pcs = pclut[extra.view(np.uint8)].sum(axis=1, dtype=np.int32)
+            big = pcs > threshold
+            for g in np.nonzero(big)[0]:
+                j = 1 + int(g)                       # bit 1+tid(τ_g)
+                cd_big[fam * S + s, j >> 6] |= np.uint64(1) << np.uint64(j & 63)
+            extra = np.where(big[:, None], np.uint32(0), extra)
+            union = np.bitwise_or.reduce(extra, axis=0)
+            if union.any():
+                bits = np.unpackbits(union.view(np.uint8),
+                                     bitorder="little")[:vocab_size]
+                toks = np.nonzero(bits)[0].astype(np.int32)
+                cols = (extra[:, toks >> 5]
+                        >> (toks & 31).astype(np.uint32)) & np.uint32(1)
+                fol = np.zeros((toks.size, FW), dtype=np.uint64)
+                for g in range(stride - 1):
+                    j = 1 + g                       # bit 1+tid(τ_g)
+                    fol[:, j >> 6] |= (cols[g].astype(np.uint64)
+                                       << np.uint64(j & 63))
+                tok_parts.append(toks)
+                fol_parts.append(fol)
+                n += toks.size
+            cd_ptr[fam * S + s + 1] = n
+    cd_token = (np.concatenate(tok_parts) if tok_parts
+                else np.zeros(0, np.int32))
+    cd_follow = (np.concatenate(fol_parts) if fol_parts
+                 else np.zeros((0, FW), np.uint64))
+    return cd_ptr, cd_token, cd_follow, cd_big
+
+
+def _concat_context_splits(splits, stride: int):
+    """Concatenate per-shard context splits (each family-major over its
+    OWN state range) into the global family-major layout. Bitwise equal
+    to `derive_context_split` over the concatenated packed rows."""
+    FW = (stride + 63) // 64
+    tok_parts: list = []
+    fol_parts: list = []
+    big_parts: list = []
+    count_parts: list = []
+    for fam in range(2):
+        for ptr, tok, fol, big in splits:
+            Si = (ptr.shape[0] - 1) // 2
+            lo, hi = int(ptr[fam * Si]), int(ptr[(fam + 1) * Si])
+            tok_parts.append(tok[lo:hi])
+            fol_parts.append(fol[lo:hi])
+            big_parts.append(big[fam * Si:(fam + 1) * Si])
+            count_parts.append(np.diff(ptr[fam * Si:(fam + 1) * Si + 1]))
+    counts = (np.concatenate(count_parts) if count_parts
+              else np.zeros(0, np.int64))
+    cd_ptr = np.zeros(counts.size + 1, np.int64)
+    np.cumsum(counts, out=cd_ptr[1:])
+    cd_token = (np.concatenate(tok_parts) if tok_parts
+                else np.zeros(0, np.int32))
+    cd_follow = (np.concatenate(fol_parts) if fol_parts
+                 else np.zeros((0, FW), np.uint64))
+    cd_big = (np.concatenate(big_parts) if big_parts
+              else np.zeros((0, FW), np.uint64))
+    return cd_ptr, cd_token, cd_follow, cd_big
 
 
 class MaskStore:
     def __init__(self, grammar: Grammar, tokenizer: ByteTokenizer,
-                 packed: np.ndarray, meta: dict):
+                 packed: np.ndarray, meta: dict, split=None,
+                 row_pc: np.ndarray | None = None,
+                 fb: np.ndarray | None = None):
         self.grammar = grammar
         self.tokenizer = tokenizer
         self.packed = packed            # [rows, words] uint32
@@ -75,8 +291,29 @@ class MaskStore:
         self.row_stride = self.num_terminals + 1
         # the strict family occupies the second half of the packed array
         self.strict_offset = packed.shape[0] // 2
-        self._row_pc = None             # lazy per-row popcounts (spec path)
-        self._fb = None                 # lazy first-byte -> vocab bitmask
+        self.num_states = self.strict_offset // self.row_stride
+        # per-state finals flags and per-terminal start states: the
+        # runtime's position-0 follow-split addressing (cheap, from the
+        # grammar — never serialized)
+        self.state_finals = compute_state_finals(grammar)
+        self.term_start = term_start_states(grammar)
+        # context-split tables: loaded from the v4 cache / shard builds,
+        # or re-derived here (raw constructions — same pure function)
+        if split is None:
+            pm0_mask, pm0_strict = pm0_rows_from_packed(
+                grammar, packed, self.row_stride)
+            split = derive_context_split(
+                packed[:self.strict_offset], packed[self.strict_offset:],
+                self.row_stride, tokenizer.vocab_size,
+                self.state_finals, pm0_mask, pm0_strict)
+        self.cd_ptr, self.cd_token, self.cd_follow, self.cd_big = split
+        self.follow_words = self.cd_follow.shape[1]
+        # residue scatter addressing, precomputed once: token t sets bit
+        # cd_bit[i] of word cd_word[i] of the step's overlay
+        self.cd_word = (self.cd_token >> 5).astype(np.int64)
+        self.cd_bit = np.uint32(1) << (self.cd_token & 31).astype(np.uint32)
+        self._row_pc = row_pc           # build-time per-row popcounts
+        self._fb = fb                   # build-time first-byte bitmasks
 
     # ---- row addressing ----
     def global_state(self, terminal: str, q: int) -> int:
@@ -92,6 +329,41 @@ class MaskStore:
         off = self.strict_offset if strict else 0
         return (self.global_state(terminal, q) * self.row_stride
                 + 1 + tid + off)
+
+    def row_ci(self, global_state: int) -> int:
+        """Context-independent row of a global DFA state: the strict-M0
+        / end_live row, shared by BOTH families (the mode only selects
+        which CD residue table applies)."""
+        return self.strict_offset + global_state * self.row_stride
+
+    def row_fam_m0(self, fam: int, global_state: int) -> int:
+        """Family M0 row of a global state — the base row when the
+        accept set contains the length-1 (α=0) sequence. For the strict
+        family this coincides with the CI row."""
+        return fam * self.strict_offset + global_state * self.row_stride
+
+    def row_follow_start(self, fam: int, tid: int) -> int:
+        """pmatch-from-start row of follow terminal tid: the store row
+        of its DFA start state (mask M0 / strict CI) — emitted when the
+        remainder walk lands in F (position-0 split)."""
+        return (fam * self.strict_offset
+                + int(self.term_start[tid]) * self.row_stride)
+
+    def cd_range(self, fam: int, global_state: int) -> tuple[int, int]:
+        """[lo, hi) slice of cd_token/cd_follow holding the residue of
+        (family fam: 0 = grammar_mask, 1 = grammar_strict; state)."""
+        i = fam * self.num_states + global_state
+        return int(self.cd_ptr[i]), int(self.cd_ptr[i + 1])
+
+    def cd_big_bits(self, fam: int, global_state: int) -> int:
+        """Python int bitmask of big CD rows at (family, state): bit
+        1+g set means M1[τ_g]'s residue overflowed CD_ROW_THRESHOLD and
+        the legacy row id must be emitted when τ_g is a follow."""
+        w = self.cd_big[fam * self.num_states + global_state]
+        out = 0
+        for k in range(self.follow_words - 1, -1, -1):
+            out = (out << 64) | int(w[k])
+        return out
 
     # ---- host-side mask ops (reference; device path is in kernels/) ----
     def union_rows(self, rows) -> np.ndarray:
@@ -113,20 +385,14 @@ class MaskStore:
     # without ever materializing the [V] boolean mask.
 
     def row_popcounts(self) -> np.ndarray:
-        """[rows] int32 allowed-token count per packed row (computed once,
-        lazily). The jump-forward analyzer uses it as a short-circuit:
-        the union of a row set can only collapse to <= 1 token if every
-        member row already allows <= 1, so per-step forced detection is a
-        gather + max instead of a mask union."""
+        """[rows] int32 allowed-token count per packed row. Precomputed
+        at build time and shipped in the v4 cache; raw constructions
+        compute it once here. The jump-forward analyzer uses it as a
+        short-circuit: the union of a row set can only collapse to <= 1
+        token if every member row already allows <= 1, so per-step
+        forced detection is a gather + max instead of a mask union."""
         if self._row_pc is None:
-            # 256-entry popcount LUT over the uint8 view: same result as
-            # unpackbits().sum() at 1/8 the transient memory (no [R, V]
-            # bit expansion next to the resident model)
-            lut = np.unpackbits(
-                np.arange(256, dtype=np.uint8)[:, None], axis=1
-            ).sum(axis=1, dtype=np.int32)
-            self._row_pc = lut[self.packed.view(np.uint8)].sum(
-                axis=1, dtype=np.int32)
+            self._row_pc = compute_row_popcounts(self.packed)
         return self._row_pc
 
     @staticmethod
@@ -159,14 +425,12 @@ class MaskStore:
         grammar-FORCED even though several tokens (prefix-nested merges)
         remain in the mask. The jump-forward analyzer chains this to
         recover forced literal byte-strings that token-level popcount
-        misses. Lazy [256, words] first-byte bitmasks, one AND per query."""
+        misses. [256, words] first-byte bitmasks precomputed at build
+        time (computed once here on raw constructions), one AND per
+        query."""
         if self._fb is None:
-            W = self.packed.shape[1]
-            fb = np.zeros((256, W), np.uint32)
-            for tid, b in enumerate(self.tokenizer.id_to_bytes):
-                if b and tid < self.tokenizer.vocab_size:
-                    fb[b[0], tid // 32] |= np.uint32(1 << (tid % 32))
-            self._fb = fb
+            self._fb = compute_first_byte_table(self.tokenizer,
+                                                self.packed.shape[1])
         return (self._fb & packed_union[None, :]).any(axis=1)
 
     def sole_survivor(self, rows):
@@ -192,7 +456,11 @@ def _fingerprint(grammar: Grammar, tok: ByteTokenizer) -> str:
     # older packed layout must not fingerprint-match (it would load as
     # wrong masks — soundness, not just staleness)
     words = (tok.vocab_size + 31) // 32
-    h.update(f"layout{STORE_LAYOUT_VERSION}:uint32le:w{words}".encode())
+    # ":ctxsplit" folds the context-split classification into the
+    # fingerprint explicitly (beyond the version bump): any change to
+    # how CI/CD tables are derived must miss stale caches
+    h.update(f"layout{STORE_LAYOUT_VERSION}:uint32le:w{words}"
+             f":ctxsplit2-t{CD_ROW_THRESHOLD}".encode())
     h.update(grammar.name.encode())
     for t in grammar.terminal_names:
         h.update(t.encode())
@@ -292,11 +560,13 @@ def _pack_rows(rows: np.ndarray, V: int) -> np.ndarray:
 
 def build_rows_shard(grammar: Grammar, tokenizer: ByteTokenizer,
                      lo: int, hi: int, prep: _Prep | None = None):
-    """Packed rows for the global DFA states [lo, hi).
+    """Packed rows + context split for the global DFA states [lo, hi).
 
-    Returns (mask_packed, strict_packed), each uint32 of shape
-    [(hi-lo)·stride, W]. Shards concatenated in global-state order
-    reproduce the full store bit-for-bit regardless of how the range
+    Returns (mask_packed, strict_packed, split), the packed halves
+    uint32 of shape [(hi-lo)·stride, W] and `split` the shard-local
+    (cd_ptr, cd_token, cd_follow) from `derive_context_split`. Shards
+    concatenated in global-state order reproduce the full store (and
+    its CI/CD tables) bit-for-bit regardless of how the range
     [0, total_dfa_states) was split — the parallel offline builder
     relies on this.
     """
@@ -343,18 +613,47 @@ def build_rows_shard(grammar: Grammar, tokenizer: ByteTokenizer,
     # never allow specials through the grammar mask (EOS handled separately)
     mask_rows[:, ~nonempty] = False
     strict_rows[:, ~nonempty] = False
-    return _pack_rows(mask_rows, V), _pack_rows(strict_rows, V)
+    mask_packed = _pack_rows(mask_rows, V)
+    strict_packed = _pack_rows(strict_rows, V)
+    # the shard may not contain the terminals' start states, so the
+    # pmatch-from-start rows come from the prep suffix tables (bit 0 =
+    # split position 0); identical to the start-state rows of the full
+    # store — tests assert the identity
+    pm0_mask = _pack_rows(
+        ((p.S_bits & np.uint64(1)) != 0) & nonempty[None, :], V)
+    pm0_strict = _pack_rows(
+        ((p.Ss_bits & np.uint64(1)) != 0) & nonempty[None, :], V)
+    split = derive_context_split(
+        mask_packed, strict_packed, stride, V,
+        compute_state_finals(grammar, lo, hi), pm0_mask, pm0_strict)
+    return mask_packed, strict_packed, split
 
 
 def assemble_store(grammar: Grammar, tokenizer: ByteTokenizer, parts,
                    cache_dir: str | None = None, verbose: bool = False,
                    t0: float | None = None) -> MaskStore:
     """Concatenate shard outputs (in global-state order, covering the
-    whole state space) into the [2R, W] packed array and publish it
+    whole state space) into the [2R, W] packed array plus the global
+    context-split / popcount / first-byte tables, and publish it all
     atomically through the disk cache."""
     fp = _fingerprint(grammar, tokenizer)
+    stride = len(grammar.terminal_names) + 1
     packed = np.concatenate([part[0] for part in parts] +
                             [part[1] for part in parts], axis=0)
+    if any(len(part) < 3 for part in parts):
+        # legacy 2-tuple parts (tests, old pickles): derive globally —
+        # the full packed array carries the start-state rows
+        pm0_mask, pm0_strict = pm0_rows_from_packed(grammar, packed, stride)
+        split = derive_context_split(
+            packed[:packed.shape[0] // 2], packed[packed.shape[0] // 2:],
+            stride, tokenizer.vocab_size,
+            compute_state_finals(grammar), pm0_mask, pm0_strict)
+    else:
+        split = _concat_context_splits([part[2] for part in parts], stride)
+    cd_ptr, cd_token, cd_follow, cd_big = split
+    row_pc = compute_row_popcounts(packed)
+    fb = compute_first_byte_table(tokenizer, packed.shape[1])
+    per_state = np.diff(cd_ptr)
     meta = {
         "build_seconds": time.time() - (t0 if t0 is not None else time.time()),
         "rows": int(packed.shape[0]),
@@ -362,11 +661,22 @@ def assemble_store(grammar: Grammar, tokenizer: ByteTokenizer, parts,
         "grammar": grammar.name,
         "vocab": tokenizer.vocab_size,
         "cached": False,
+        # context-split shape: total residue entries, the worst
+        # per-(family, state) residue as a fraction of the vocab (the
+        # "almost everything is precomputable" claim, measured), and how
+        # many (state, follow) rows fell back to whole-row gathers
+        "cd_entries": int(cd_token.shape[0]),
+        "cd_max_tokens": int(per_state.max()) if per_state.size else 0,
+        "cd_max_frac": (float(per_state.max()) / tokenizer.vocab_size
+                        if per_state.size else 0.0),
+        "cd_big_rows": int(compute_row_popcounts(
+            cd_big.view(np.uint32)).sum()) if cd_big.size else 0,
     }
     if verbose:
         print(f"[mask_store] {grammar.name}: {meta['rows']} rows x "
               f"{packed.shape[1]} words, {meta['bytes']/1e6:.1f} MB, "
-              f"{meta['build_seconds']:.1f}s")
+              f"cd_max {meta['cd_max_tokens']}/{tokenizer.vocab_size} "
+              f"tok, {meta['build_seconds']:.1f}s")
     if cache_dir:
         os.makedirs(cache_dir, exist_ok=True)
         path = os.path.join(cache_dir, f"maskstore_{grammar.name}_{fp}.npz")
@@ -384,7 +694,9 @@ def assemble_store(grammar: Grammar, tokenizer: ByteTokenizer, parts,
             prefix=f".maskstore_{grammar.name}_{fp}.{os.getpid()}.")
         try:
             with os.fdopen(fd, "wb") as f:
-                np.savez_compressed(f, packed=packed)
+                np.savez_compressed(f, packed=packed, cd_ptr=cd_ptr,
+                                    cd_token=cd_token, cd_follow=cd_follow,
+                                    cd_big=cd_big, row_pc=row_pc, fb=fb)
             os.replace(tmp, path)
         finally:
             try:
@@ -392,7 +704,8 @@ def assemble_store(grammar: Grammar, tokenizer: ByteTokenizer, parts,
             except OSError:
                 pass
         meta["path"] = path
-    return MaskStore(grammar, tokenizer, packed, meta)
+    return MaskStore(grammar, tokenizer, packed, meta, split=split,
+                     row_pc=row_pc, fb=fb)
 
 
 def load_cached_store(grammar: Grammar, tokenizer: ByteTokenizer,
@@ -405,8 +718,14 @@ def load_cached_store(grammar: Grammar, tokenizer: ByteTokenizer,
     if not os.path.exists(path):
         return None
     z = np.load(path)
+    # the v4 fingerprint guarantees the split tables are present; the
+    # guard keeps a hand-rolled npz (tests) loadable by re-deriving
+    split = ((z["cd_ptr"], z["cd_token"], z["cd_follow"], z["cd_big"])
+             if "cd_big" in z.files else None)
     return MaskStore(grammar, tokenizer, z["packed"],
-                     {"cached": True, "path": path})
+                     {"cached": True, "path": path}, split=split,
+                     row_pc=z["row_pc"] if "row_pc" in z.files else None,
+                     fb=z["fb"] if "fb" in z.files else None)
 
 
 def build_mask_store(grammar: Grammar, tokenizer: ByteTokenizer,

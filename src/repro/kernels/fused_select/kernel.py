@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: fused mask union + filter + sample — ONE device
+call takes a decode step from raw logits to selected token ids.
+
+Grid: (B, A) with the accept-row axis innermost. Each (b, a) step ORs
+one scalar-prefetch-selected packed store row into a VMEM accumulator
+that was SEEDED with the slot's context-dependent residue words (the
+context split means the host ships only those few bits; everything
+else is a precomputed row id). On the last accept step the union is
+unpacked in-register against the whole vocab block and the select
+math runs fused:
+
+    masked   = where(allow, logits, NEG_INF)
+    greedy   = argmax(masked)
+    filtered = topk_topp_filter(masked / temp)     (shared impl!)
+    sampled  = argmax(filtered + gumbel_noise)
+
+`topk_topp_filter` is imported from `core.decoding` — the SAME
+function the batched reference selector uses, so kept-token sets are
+identical by construction. The Gumbel-noise argmax IS
+`jax.random.categorical` (categorical(key, x) == argmax(x + gumbel)),
+with the noise precomputed off the critical path; parity with the
+keys-based reference is fuzz-tested bit-for-bit.
+
+The kernel emits BOTH the selected ids and the masked logits — the
+engine's opportunistic accept test and its resample/ban path reuse the
+masked logits without a second mask pass.
+
+`mode` is host-static: "greedy" skips the filter/noise math entirely
+(an all-greedy batch does no sort), "sample" runs the full path and
+resolves per-row greedy flags with a where.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .._compat import CompilerParams as _CompilerParams
+from ...core.decoding import topk_topp_filter
+
+NEG_INF = -1e30
+
+
+def _kernel(rows_ref,            # scalar-prefetch [B, A] int32
+            eos_ref,             # scalar-prefetch [B] int32
+            cons_ref,            # scalar-prefetch [B] int32
+            greedy_ref,          # scalar-prefetch [B] int32
+            logits_ref,          # [1, V]
+            store_ref,           # [1, W] uint32 (row selected by index_map)
+            cd_ref,              # [1, W] uint32 residue overlay
+            noise_ref,           # [1, V] f32 Gumbel noise
+            temp_ref,            # [1, 1] f32
+            topk_ref,            # [1, 1] i32
+            topp_ref,            # [1, 1] f32
+            ids_ref,             # out [1, 1] int32
+            masked_ref,          # out [1, V]
+            acc_ref,             # scratch [1, W] uint32
+            *, eos_id: int, num_accept: int, vocab: int, mode: str):
+    b = pl.program_id(0)
+    a = pl.program_id(1)
+
+    @pl.when(a == 0)
+    def _init():
+        acc_ref[...] = cd_ref[...]
+
+    rid = rows_ref[b, a]
+    acc_ref[...] |= jnp.where(rid >= 0, store_ref[...], jnp.uint32(0))
+
+    @pl.when(a == num_accept - 1)
+    def _finish():
+        words = acc_ref[0, :]
+        idx = jax.lax.broadcasted_iota(jnp.int32, (vocab,), 0)
+        wsel = words[idx // 32]
+        bit = (wsel >> (idx % 32).astype(jnp.uint32)) & jnp.uint32(1)
+        allow = bit == jnp.uint32(1)
+        allow |= (idx == eos_id) & (eos_ref[b] > 0)
+        allow |= cons_ref[b] == 0
+        lg = logits_ref[0, :]
+        masked = jnp.where(allow, lg, jnp.asarray(NEG_INF, lg.dtype))
+        masked_ref[0, :] = masked
+        arg = jnp.argmax(masked).astype(jnp.int32)
+        if mode == "greedy":
+            ids_ref[0, 0] = arg
+        else:
+            scaled = masked / jnp.maximum(temp_ref[0, 0], 1e-6)
+            scaled = topk_topp_filter(scaled, topk_ref[0, 0],
+                                      topp_ref[0, 0])
+            sampled = jnp.argmax(scaled + noise_ref[0, :]).astype(jnp.int32)
+            ids_ref[0, 0] = jnp.where(greedy_ref[b] > 0, arg, sampled)
+
+
+@functools.partial(jax.jit, static_argnames=("eos_id", "mode", "interpret"))
+def fused_select(logits, store, rows, cd, eos_allowed, constrained,
+                 greedy_flags, temperature, top_k, top_p, noise, *,
+                 eos_id: int = 1, mode: str = "sample",
+                 interpret: bool = True):
+    """logits [B,V], store [R,W] uint32, rows [B,A] int32 (-1 pad),
+    cd [B,W] uint32, eos/constrained/greedy [B] bool, temperature/top_p
+    [B] f32, top_k [B] i32, noise [B,V] f32 -> (ids [B] i32,
+    masked [B,V])."""
+    B, V = logits.shape
+    R, W = store.shape
+    A = rows.shape[1]
+    assert V % 32 == 0, V
+
+    grid = (B, A)
+    kernel = functools.partial(_kernel, eos_id=eos_id, num_accept=A,
+                               vocab=V, mode=mode)
+    ids, masked = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, V), lambda b, a, *pf: (b, 0)),
+                pl.BlockSpec(
+                    (1, W),
+                    lambda b, a, rows, *pf: (jnp.maximum(rows[b, a], 0), 0)),
+                pl.BlockSpec((1, W), lambda b, a, *pf: (b, 0)),
+                pl.BlockSpec((1, V), lambda b, a, *pf: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b, a, *pf: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b, a, *pf: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b, a, *pf: (b, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1), lambda b, a, *pf: (b, 0)),
+                pl.BlockSpec((1, V), lambda b, a, *pf: (b, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((1, W), jnp.uint32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, V), logits.dtype),
+        ],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(rows.astype(jnp.int32), eos_allowed.astype(jnp.int32),
+      constrained.astype(jnp.int32), greedy_flags.astype(jnp.int32),
+      logits, store, cd, noise,
+      temperature.reshape(B, 1).astype(jnp.float32),
+      top_k.reshape(B, 1).astype(jnp.int32),
+      top_p.reshape(B, 1).astype(jnp.float32))
+    return ids[:, 0], masked

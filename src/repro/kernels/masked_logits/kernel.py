@@ -34,6 +34,7 @@ def _kernel(rows_ref,            # scalar-prefetch [B, A] int32
             eos_ref,             # scalar-prefetch [B] int32
             logits_ref,          # [1, BV]
             store_ref,           # [1, BW] uint32 (row selected by index_map)
+            cd_ref,              # [1, BW] uint32 context-dependent overlay
             out_ref,             # [1, BV]
             acc_ref,             # scratch [1, BW] uint32
             *, eos_id: int, num_accept: int, block_v: int):
@@ -43,7 +44,9 @@ def _kernel(rows_ref,            # scalar-prefetch [B, A] int32
 
     @pl.when(a == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # seed the union with the context-split residue overlay: the
+        # host's few per-step bits ride in with zero extra grid steps
+        acc_ref[...] = cd_ref[...]
 
     rid = rows_ref[b, a]
     word = jnp.where(rid >= 0, store_ref[...], jnp.uint32(0))
@@ -69,6 +72,7 @@ def _kernel_span(rows_ref,           # scalar-prefetch [B, K, A] int32
                  eos_ref,            # scalar-prefetch [B, K] int32
                  logits_ref,         # [1, 1, BV]
                  store_ref,          # [1, BW] uint32 (row via index_map)
+                 cd_ref,             # [1, 1, BW] uint32 overlay
                  out_ref,            # [1, 1, BV]
                  acc_ref,            # scratch [1, BW] uint32
                  *, eos_id: int, num_accept: int, block_v: int):
@@ -83,7 +87,7 @@ def _kernel_span(rows_ref,           # scalar-prefetch [B, K, A] int32
 
     @pl.when(a == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[...] = cd_ref[0, ...]
 
     rid = rows_ref[b, k, a]
     word = jnp.where(rid >= 0, store_ref[...], jnp.uint32(0))
@@ -105,10 +109,11 @@ def _kernel_span(rows_ref,           # scalar-prefetch [B, K, A] int32
 
 @functools.partial(jax.jit, static_argnames=("eos_id", "block_v",
                                              "interpret"))
-def masked_logits_span(logits, store, rows, eos_allowed, *, eos_id: int = 1,
-                       block_v: int = 4096, interpret: bool = True):
+def masked_logits_span(logits, store, rows, eos_allowed, cd, *,
+                       eos_id: int = 1, block_v: int = 4096,
+                       interpret: bool = True):
     """logits [B,K,V], store [R,W] uint32, rows [B,K,A] int32,
-    eos_allowed [B,K] bool -> [B,K,V] masked logits.
+    eos_allowed [B,K] bool, cd [B,K,W] uint32 -> [B,K,V] masked logits.
 
     The [B,K,V] span form of `masked_logits` used by grammar-aware
     speculative decoding: position k of slot b carries its own mask-row
@@ -137,6 +142,8 @@ def masked_logits_span(logits, store, rows, eos_allowed, *, eos_id: int = 1,
                     (1, bw),
                     lambda b, k, v, a, rows, eos: (
                         jnp.maximum(rows[b, k, a], 0), v)),
+                pl.BlockSpec((1, 1, bw),
+                             lambda b, k, v, a, rows, eos: (b, k, v)),
             ],
             out_specs=pl.BlockSpec((1, 1, block_v),
                                    lambda b, k, v, a, rows, eos: (b, k, v)),
@@ -147,16 +154,17 @@ def masked_logits_span(logits, store, rows, eos_allowed, *, eos_id: int = 1,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
-    )(rows.astype(jnp.int32), eos_allowed.astype(jnp.int32), logits, store)
+    )(rows.astype(jnp.int32), eos_allowed.astype(jnp.int32), logits, store,
+      cd)
     return out
 
 
 @functools.partial(jax.jit, static_argnames=("eos_id", "block_v",
                                              "interpret"))
-def masked_logits(logits, store, rows, eos_allowed, *, eos_id: int = 1,
+def masked_logits(logits, store, rows, eos_allowed, cd, *, eos_id: int = 1,
                   block_v: int = 4096, interpret: bool = True):
     """logits [B,V], store [R,W] uint32, rows [B,A] int32,
-    eos_allowed [B] bool -> [B,V] masked logits."""
+    eos_allowed [B] bool, cd [B,W] uint32 -> [B,V] masked logits."""
     B, V = logits.shape
     R, W = store.shape
     A = rows.shape[1]
@@ -178,6 +186,7 @@ def masked_logits(logits, store, rows, eos_allowed, *, eos_id: int = 1,
                 pl.BlockSpec(
                     (1, bw),
                     lambda b, v, a, rows, eos: (jnp.maximum(rows[b, a], 0), v)),
+                pl.BlockSpec((1, bw), lambda b, v, a, rows, eos: (b, v)),
             ],
             out_specs=pl.BlockSpec((1, block_v),
                                    lambda b, v, a, rows, eos: (b, v)),
@@ -187,5 +196,6 @@ def masked_logits(logits, store, rows, eos_allowed, *, eos_id: int = 1,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(rows.astype(jnp.int32), eos_allowed.astype(jnp.int32), logits, store)
+    )(rows.astype(jnp.int32), eos_allowed.astype(jnp.int32), logits, store,
+      cd)
     return out

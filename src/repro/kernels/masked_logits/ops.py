@@ -20,8 +20,11 @@ from ...distributed.api import sharding_active
 
 def apply_grammar_mask(logits, store, rows, eos_allowed, *, eos_id: int = 1,
                        backend: str = "auto", block_v: int = 4096,
-                       constrained=None):
+                       constrained=None, cd=None):
     """backend: 'pallas' | 'jnp' | 'auto' (pallas-interpret off-TPU).
+
+    `cd` [B, W] uint32 (optional): context-split residue words ORed
+    into the row union (see core/constrain.py).
 
     Under an active serving sharding context the jnp reference is used
     regardless of backend: GSPMD cannot partition a pallas_call, while
@@ -29,13 +32,17 @@ def apply_grammar_mask(logits, store, rows, eos_allowed, *, eos_id: int = 1,
     the vocab-sharded store words (docs/sharding.md)."""
     if backend == "jnp" or sharding_active():
         return masked_logits_ref(logits, store, rows, eos_allowed,
-                                 eos_id=eos_id, constrained=constrained)
+                                 eos_id=eos_id, constrained=constrained,
+                                 cd=cd)
     interpret = jax.default_backend() != "tpu"
     if backend == "auto" and interpret and logits.shape[-1] > 16384:
         # interpret-mode is slow for big vocabs; use the oracle off-TPU
         return masked_logits_ref(logits, store, rows, eos_allowed,
-                                 eos_id=eos_id, constrained=constrained)
-    out = masked_logits(logits, store, rows, eos_allowed, eos_id=eos_id,
+                                 eos_id=eos_id, constrained=constrained,
+                                 cd=cd)
+    if cd is None:
+        cd = jnp.zeros((logits.shape[0], store.shape[1]), jnp.uint32)
+    out = masked_logits(logits, store, rows, eos_allowed, cd, eos_id=eos_id,
                         block_v=min(block_v, logits.shape[-1]),
                         interpret=interpret)
     if constrained is not None:
@@ -45,7 +52,7 @@ def apply_grammar_mask(logits, store, rows, eos_allowed, *, eos_id: int = 1,
 
 def apply_grammar_mask_span(logits, store, rows, eos_allowed, *,
                             eos_id: int = 1, backend: str = "auto",
-                            block_v: int = 4096, constrained=None):
+                            block_v: int = 4096, constrained=None, cd=None):
     """Span ([B,K,V]) form of `apply_grammar_mask` for grammar-aware
     speculative decoding: every draft position carries its own mask-row
     set, so mask + accept-test run fused on device over the whole draft
@@ -55,12 +62,17 @@ def apply_grammar_mask_span(logits, store, rows, eos_allowed, *,
     `apply_grammar_mask`)."""
     if backend == "jnp" or sharding_active():
         return masked_logits_span_ref(logits, store, rows, eos_allowed,
-                                      eos_id=eos_id, constrained=constrained)
+                                      eos_id=eos_id, constrained=constrained,
+                                      cd=cd)
     interpret = jax.default_backend() != "tpu"
     if backend == "auto" and interpret and logits.shape[-1] > 16384:
         return masked_logits_span_ref(logits, store, rows, eos_allowed,
-                                      eos_id=eos_id, constrained=constrained)
-    out = masked_logits_span(logits, store, rows, eos_allowed, eos_id=eos_id,
+                                      eos_id=eos_id, constrained=constrained,
+                                      cd=cd)
+    if cd is None:
+        cd = jnp.zeros(logits.shape[:2] + (store.shape[1],), jnp.uint32)
+    out = masked_logits_span(logits, store, rows, eos_allowed, cd,
+                             eos_id=eos_id,
                              block_v=min(block_v, logits.shape[-1]),
                              interpret=interpret)
     if constrained is not None:

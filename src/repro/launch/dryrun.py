@@ -140,20 +140,20 @@ def _jit_target(model, mode, specs, mesh, microbatch: int = 1):
         s_sh = NamedSharding(mesh, P(None, mp_w))
 
         def serve_step(params, caches, token, pos, mask_store, mask_rows,
-                       eos_allowed):
+                       mask_cd, eos_allowed):
             logits, caches = model.decode_step(params, caches, token, pos)
             masked = masked_logits_ref(logits, mask_store, mask_rows,
-                                       eos_allowed)
+                                       eos_allowed, cd=mask_cd)
             nxt = jnp.argmax(masked, axis=-1).astype(jnp.int32)
             return nxt, masked, caches
 
         fn = jax.jit(serve_step,
                      in_shardings=(p_sh, c_sh, t_sh, t_sh, s_sh, t_sh,
-                                   t_sh),
+                                   s_sh, t_sh),
                      donate_argnums=(1,))
         return fn, (specs["params"], specs["caches"], specs["token"],
                     specs["pos"], specs["mask_store"], specs["mask_rows"],
-                    specs["eos_allowed"])
+                    specs["mask_cd"], specs["eos_allowed"])
     raise ValueError(mode)
 
 

@@ -100,6 +100,7 @@ def input_specs(model, shape: str):
             "pos": _sds((B,), jnp.int32),
             "mask_store": _sds((MASK_STORE_ROWS, words), jnp.uint32),
             "mask_rows": _sds((B, MAX_ACCEPT), jnp.int32),
+            "mask_cd": _sds((B, words), jnp.uint32),
             "eos_allowed": _sds((B,), jnp.bool_),
         }
     raise ValueError(mode)

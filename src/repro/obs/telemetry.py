@@ -44,8 +44,12 @@ from .trace import Tracer
 # overlap engine. Host-phase spans supply the grammar term; devtime
 # brackets supply the kernel terms when device timing is on (bench /
 # profile mode), falling back to dispatch-span lower bounds in serving.
-ATTR_HOST_GRAMMAR_PHASES = ("rows_build", "host_oracle", "plan",
-                            "feed_build")
+ATTR_HOST_GRAMMAR_PHASES = ("ci_lookup", "cd_check", "host_oracle",
+                            "plan", "feed_build")
+# context-split sub-components of host_grammar: the precomputed-row
+# lookup vs the context-dependent residue check (docs/observability.md)
+ATTR_HOST_GRAMMAR_CI_PHASES = ("ci_lookup",)
+ATTR_HOST_GRAMMAR_CD_PHASES = ("cd_check",)
 ATTR_MASK_PHASES = ("mask_dispatch", "select_resolve")
 ATTR_FORWARD_PHASES = ("forward", "overlap_forward")
 
@@ -146,6 +150,12 @@ class Telemetry:
         c("repro_step_attribution_seconds_total", help,
           {"component": "host_grammar"},
           fn=phase_sum(ATTR_HOST_GRAMMAR_PHASES))
+        c("repro_step_attribution_seconds_total", help,
+          {"component": "host_grammar_ci"},
+          fn=phase_sum(ATTR_HOST_GRAMMAR_CI_PHASES))
+        c("repro_step_attribution_seconds_total", help,
+          {"component": "host_grammar_cd"},
+          fn=phase_sum(ATTR_HOST_GRAMMAR_CD_PHASES))
         c("repro_step_attribution_seconds_total", help,
           {"component": "mask_sample_kernel"},
           fn=lambda: self._kernel_seconds(("mask_sample",),
@@ -272,12 +282,20 @@ class Telemetry:
             return {"enabled": False}
         host = sum(self.phase_seconds(p)
                    for p in ATTR_HOST_GRAMMAR_PHASES)
+        host_ci = sum(self.phase_seconds(p)
+                      for p in ATTR_HOST_GRAMMAR_CI_PHASES)
+        host_cd = sum(self.phase_seconds(p)
+                      for p in ATTR_HOST_GRAMMAR_CD_PHASES)
         mask = self._kernel_seconds(("mask_sample",), ATTR_MASK_PHASES)
         fwd = self._kernel_seconds(ATTR_FORWARD_PHASES,
                                    ATTR_FORWARD_PHASES)
         hidden = self.c_overlap_hidden.value
         total = host + mask + fwd
-        comp = {"host_grammar": host, "mask_sample_kernel": mask,
+        # host_grammar_ci/_cd are SUB-components of host_grammar (they
+        # overlap it, not the total): the context-split breakdown of
+        # the per-step grammar work
+        comp = {"host_grammar": host, "host_grammar_ci": host_ci,
+                "host_grammar_cd": host_cd, "mask_sample_kernel": mask,
                 "forward_kernel": fwd, "overlap_hidden": hidden}
         dev_mask = self.devtime.seconds("mask_sample") > 0.0
         dev_fwd = any(self.devtime.seconds(f) > 0.0
@@ -286,7 +304,9 @@ class Telemetry:
             "enabled": True,
             "seconds": comp,
             "fractions": {k: (v / total if total > 0 else 0.0)
-                          for k, v in comp.items() if k != "overlap_hidden"},
+                          for k, v in comp.items()
+                          if k in ("host_grammar", "mask_sample_kernel",
+                                   "forward_kernel")},
             "source": {
                 "mask_sample_kernel": "device" if dev_mask
                                       else "host-dispatch",

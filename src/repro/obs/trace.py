@@ -29,8 +29,9 @@ DEFAULT_CAPACITY = 65536
 # tracks (devtime brackets + merged jax.profiler kernel threads) group
 # after the host phases; anything else (slot tracks, custom tracks)
 # sorts after them by name
-_TRACK_ORDER = ("step", "admit", "plan", "feed_build", "rows_build",
-                "mask_dispatch", "forward", "overlap_forward",
+_TRACK_ORDER = ("step", "admit", "plan", "feed_build", "ci_lookup",
+                "cd_check", "mask_dispatch", "forward",
+                "overlap_forward",
                 "select_resolve", "host_oracle", "opportunistic",
                 "device:forward", "device:overlap_forward",
                 "device:mask_sample")

@@ -6,13 +6,17 @@ The engine is built around **continuous batching** over a fixed pool of
   * one jitted `[B, V]` decode step advances every active request at once
     (decode caches are allocated `[.., B, ..]` up front; per-request
     prefill results are inserted into their slot on admission),
-  * the host side of Algorithm 2 fills a `[B, A]` mask-row matrix + `[B]`
-    eos vector for all constrained slots in one pass
-    (`GrammarConstraint.step_rows_batch`),
-  * a single fused mask+sample device call applies the packed mask-store
-    rows (`repro.kernels.masked_logits`) and draws every slot's next token
-    with per-request greedy/temperature/top-k/top-p (`select_batch`) —
-    only the `[B]` sampled ids come back to the host, never `[B, V]`,
+  * the host side of Algorithm 2 runs in two context-split stages
+    (`GrammarConstraint.ci_rows_batch` + `cd_overlay_batch`): a `[B, A]`
+    matrix of PRECOMPUTED store row ids and a `[B, W]` residue-word
+    overlay covering the few context-dependent tokens per step,
+  * a single fused mask+filter+sample device call unions the packed
+    store rows with the residue overlay and draws every slot's next
+    token with per-request greedy/temperature/top-k/top-p
+    (`repro.kernels.fused_select`; an all-greedy batch rides a
+    host-static argmax-only variant, sampling batches precomputed
+    Gumbel noise) — only the `[B]` sampled ids come back to the host,
+    never `[B, V]`,
   * the paper's *opportunistic masking* fast path (§5 Baselines) validates
     the whole batch's unconstrained proposals first and computes mask rows
     only for the slots whose proposal was rejected,
@@ -57,6 +61,9 @@ from repro.distributed.sharding import (serving_cache_shardings,
                                         serving_param_shardings,
                                         serving_rules,
                                         serving_store_sharding)
+from repro.core.constrain import accept_width
+from repro.kernels.fused_select.ops import (fused_mask_select,
+                                            gumbel_noise)
 from repro.kernels.masked_logits.ops import (apply_grammar_mask,
                                              apply_grammar_mask_span)
 from repro.obs import Telemetry
@@ -198,9 +205,10 @@ class _SelectCtx:
     ok: object = None
     need_mask: object = None
     clean: bool = True
-    mask_elapsed: float = 0.0   # rows_build + mask_dispatch span seconds
-                                # (resolve adds its sync span, then
-                                # distributes the total per slot)
+    mask_elapsed: float = 0.0   # ci_lookup + cd_check + mask_dispatch
+                                # span seconds (resolve adds its sync
+                                # span, then distributes the total per
+                                # slot)
 
 
 class Engine:
@@ -399,13 +407,30 @@ class Engine:
 
     def _build_batched_fns(self):
         backend = self.mask_backend
+        vocab = self.model.cfg.vocab_size
 
-        def mask_sample(logits, store, rows, eos, constrained,
-                        greedy, temp, top_k, top_p, keys):
-            masked = apply_grammar_mask(logits, store, rows, eos,
-                                        backend=backend,
-                                        constrained=constrained)
-            ids = select_batch(masked, keys, greedy, temp, top_k, top_p)
+        def fused_greedy(logits, store, rows, cd, eos, constrained):
+            """Host-static all-greedy variant: one fused mask+argmax
+            device call — no filter math, no PRNG (the selected ids are
+            the masked argmax regardless of the per-slot configs)."""
+            B = logits.shape[0]
+            ids, masked = fused_mask_select(
+                logits, store, rows, cd, eos, constrained,
+                jnp.ones((B,), bool), jnp.ones((B,), jnp.float32),
+                jnp.zeros((B,), jnp.int32), jnp.ones((B,), jnp.float32),
+                backend=backend)
+            ok = jnp.any(masked > NEG_INF / 2, axis=-1)
+            return masked, ids, ok
+
+        def fused_sample(logits, store, rows, cd, eos, constrained,
+                         greedy, temp, top_k, top_p, noise):
+            """Sampling variant: precomputed Gumbel noise replaces the
+            per-call categorical streams — `argmax(filtered + noise)`
+            selects the bit-identical token (kernels/fused_select) while
+            the PRNG work rides the previous step's resolve."""
+            ids, masked = fused_mask_select(
+                logits, store, rows, cd, eos, constrained,
+                greedy, temp, top_k, top_p, noise=noise, backend=backend)
             ok = jnp.any(masked > NEG_INF / 2, axis=-1)
             return masked, ids, ok
 
@@ -423,15 +448,17 @@ class Engine:
                 lambda f, o: jax.lax.dynamic_update_slice_in_dim(
                     f, o.astype(f.dtype), b, axis=1), full, one)
 
-        def span_mask_select(logits, store, rows, eos, constrained,
+        def span_mask_select(logits, store, rows, cd, eos, constrained,
                              greedy, temp, top_k, top_p, keys):
             """Fused speculation pass: grammar-mask a [B, S, V] span and
             select a token at every position (constrained positions via
-            the packed store rows, padding/unconstrained pass through).
-            The accept test is a host-side == against the [B, S] ids."""
+            the precomputed store rows + per-position residue overlay,
+            padding/unconstrained pass through). The accept test is a
+            host-side == against the [B, S] ids."""
             masked = apply_grammar_mask_span(logits, store, rows, eos,
                                              backend=backend,
-                                             constrained=constrained)
+                                             constrained=constrained,
+                                             cd=cd)
             ids = select_span(masked, keys, greedy, temp, top_k, top_p)
             ok = jnp.any(masked > NEG_INF / 2, axis=-1)
             return masked, ids, ok
@@ -455,7 +482,13 @@ class Engine:
             (leaves are [count, P, ps, K, Dh])."""
             return jax.tree.map(lambda a: a.at[:, d].set(a[:, s]), c)
 
-        self._mask_sample = self._shard_jit(mask_sample)
+        self._fused_greedy = self._shard_jit(fused_greedy)
+        self._fused_sample = self._shard_jit(fused_sample)
+        self._gumbel = self._shard_jit(
+            lambda keys: gumbel_noise(keys, vocab))
+        self._noise_cache = None    # (keys bytes, [B, V] device noise)
+                                    # speculatively dispatched by the
+                                    # previous step's resolve
         self._resample = self._shard_jit(resample)
         self._sample_plain = self._shard_jit(select_batch)
         self._insert_caches = self._shard_jit(insert)
@@ -636,10 +669,14 @@ class Engine:
         if not pending:
             return ctx
 
-        # ---- fused mask + batched sample dispatch -------------------
-        # The two spans partition the old single mask_time bracket:
-        # their sum (ctx.mask_elapsed) is byte-identical accounting.
-        with obs.span("rows_build") as sp_rows:
+        # ---- context-split host stages + fused mask/select dispatch -
+        # Three spans partition the old rows_build+mask_dispatch
+        # bracket: ci_lookup (parse, group, emit precomputed row ids),
+        # cd_check (the context-dependent residue overlay — a handful
+        # of packed words per slot), mask_dispatch (the device call).
+        # Their sum (ctx.mask_elapsed) keeps the historical mask_time
+        # accounting byte-identical.
+        with obs.span("ci_lookup") as sp_ci:
             cons = [slot_state[b].constraint
                     if (b in pending and slot_state[b] is not None)
                     else None for b in range(B)]
@@ -649,31 +686,76 @@ class Engine:
                 [self._row_offset.get(slot_state[b].req.grammar, 0)
                  if slot_state[b] is not None else 0
                  for b in range(B)], np.int64)
-            rows, eos, _ = GrammarConstraint.step_rows_batch(
+            rows, eos, _, groups = GrammarConstraint.ci_rows_batch(
                 cons, texts, max_accept=MAX_ACCEPT, row_offsets=offs)
+        with obs.span("cd_check") as sp_cd:
+            cd = GrammarConstraint.cd_overlay_batch(
+                cons, groups, int(self._store_cat.shape[1]))
         with obs.device_span("mask_sample") as dv:
             with obs.span("mask_dispatch") as sp_disp:
                 need_mask = np.array([c is not None for c in cons], bool)
-                keys = self._step_keys(seeds, salts, 1)
-                ctx.masked, ctx.ids, ctx.ok = self._mask_sample(
-                    logits, self._store_cat, jnp.asarray(rows),
-                    jnp.asarray(eos), jnp.asarray(need_mask),
-                    jnp.asarray(greedy), jnp.asarray(temp),
-                    jnp.asarray(top_k), jnp.asarray(top_p),
-                    jnp.asarray(keys))
+                # numpy args go into the jitted calls DIRECTLY — an
+                # explicit jnp.asarray round-trip costs ~25x the
+                # dispatch itself on CPU. The per-step arrays (rows,
+                # cd, eos, need_mask, keys) are freshly allocated each
+                # step; the long-lived decode-config arrays are mutated
+                # by admit(), so they ship private copies (the same
+                # zero-copy aliasing hazard class as the paged feed).
+                if bool(np.all(greedy)):
+                    ctx.masked, ctx.ids, ctx.ok = self._fused_greedy(
+                        logits, self._store_cat, rows, cd, eos,
+                        need_mask)
+                    cost_args = (logits, self._store_cat, rows, cd,
+                                 eos, need_mask)
+                    cost_fn = self._fused_greedy
+                else:
+                    keys = self._step_keys(seeds, salts, 1)
+                    noise = self._noise_take(keys)
+                    ctx.masked, ctx.ids, ctx.ok = self._fused_sample(
+                        logits, self._store_cat, rows, cd, eos,
+                        need_mask, greedy.copy(), temp.copy(),
+                        top_k.copy(), top_p.copy(), noise)
+                    cost_args = (logits, self._store_cat, rows, cd,
+                                 eos, need_mask, greedy.copy(),
+                                 temp.copy(), top_k.copy(),
+                                 top_p.copy(), noise)
+                    cost_fn = self._fused_sample
             # host span stays dispatch-only; in bench/profile mode the
             # device bracket blocks on the sampled ids here
             dv.done((ctx.ids, ctx.ok))
-        self._note_jit_cost(
-            obs, "mask_sample", self._mask_sample, logits,
-            self._store_cat, jnp.asarray(rows), jnp.asarray(eos),
-            jnp.asarray(need_mask), jnp.asarray(greedy),
-            jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
-            jnp.asarray(keys))
+        self._note_jit_cost(obs, "mask_sample", cost_fn, *cost_args)
         ctx.need_mask = need_mask
         ctr["mask_computations"] += int(need_mask.sum())
-        ctx.mask_elapsed = sp_rows.dur + sp_disp.dur
+        ctx.mask_elapsed = sp_ci.dur + sp_cd.dur + sp_disp.dur
         return ctx
+
+    # --------------------- Gumbel-noise speculation ---------------------
+
+    def _noise_take(self, keys: np.ndarray):
+        """[B, V] device Gumbel noise for exactly these threefry keys.
+        The previous step's resolve usually dispatched it speculatively
+        (`_noise_prefetch`); a miss — admission changed a seed, a slot
+        finished — computes it inline. Either way the noise is the
+        bitwise `jax.random.gumbel` stream of `keys`, so sampling
+        equivalence never depends on the cache."""
+        kb = keys.tobytes()
+        cached, self._noise_cache = self._noise_cache, None
+        if cached is not None and cached[0] == kb:
+            return cached[1]
+        return self._gumbel(keys)
+
+    def _noise_prefetch(self, slot_state, seeds: np.ndarray) -> None:
+        """Dispatch next step's first-round noise with PREDICTED salts
+        (every live slot advances one step). The dispatch is async —
+        the host returns immediately; the device fills the noise while
+        the host runs the oracle loop and the next forward."""
+        B = self.slots
+        salts = np.array(
+            [slot_state[b].steps + 1
+             if slot_state[b] is not None and not slot_state[b].done
+             else 0 for b in range(B)], np.uint32)
+        keys = self._step_keys(seeds, salts, 1)
+        self._noise_cache = (keys.tobytes(), self._gumbel(keys))
 
     def _select_resolve(self, ctx, slot_state,
                         seeds, greedy, temp, top_k, top_p, obs=None):
@@ -692,9 +774,13 @@ class Engine:
         masked = ctx.masked
         with obs.span("select_resolve") as sp_sync:
             ids_h, ok_h = np.asarray(ctx.ids), np.asarray(ctx.ok)
+        # speculative Gumbel dispatch for the NEXT step: the device
+        # draws the noise while this step's oracle loop runs
+        if not bool(np.all(greedy)):
+            self._noise_prefetch(slot_state, seeds)
         n_masked = int(ctx.need_mask.sum())
-        # rows build + dispatch + sync — the historical mask_time
-        # definition (the oracle loop below was never part of it)
+        # ci lookup + cd check + dispatch + sync — the historical
+        # mask_time definition (the oracle loop was never part of it)
         elapsed = sp_sync.dur + ctx.mask_elapsed
         for b in np.where(ctx.need_mask)[0]:
             slot_state[b].mask_computations += 1
@@ -1049,17 +1135,23 @@ class Engine:
                 self._commit(st, proposal)
                 return
 
-        with obs.span("rows_build") as sp_rows:
-            sm = gc.step_rows(text)
+        with obs.span("ci_lookup") as sp_rows:
+            sg = gc.step_groups(text)
+            rlist = gc.group_rows(sg.groups)
             off = self._row_offset[req.grammar]
-            rows = jnp.asarray(np.where(sm.rows >= 0, sm.rows + off,
-                                        sm.rows)[None, :])
-            eos = jnp.asarray([sm.eos_allowed])
+            rows = np.full((1, accept_width(len(rlist), gc.max_accept)),
+                           -1, np.int32)
+            rows[0, :len(rlist)] = [r + off for r in rlist]
+            eos = np.array([sg.eos_allowed])
+        with obs.span("cd_check") as sp_cd:
+            cdw = gc.cd_overlay(sg.groups)
+            cd = None if cdw is None else cdw[None, :]
         with obs.span("mask_dispatch") as sp_disp:
             masked = apply_grammar_mask(logits, self._store_cat,
                                         rows, eos,
-                                        backend=self.mask_backend)
-        st.mask_time += sp_rows.dur + sp_disp.dur
+                                        backend=self.mask_backend,
+                                        cd=cd)
+        st.mask_time += sp_rows.dur + sp_cd.dur + sp_disp.dur
         st.mask_computations += 1
 
         # rejection wrapper (see generate() for the batched variant)

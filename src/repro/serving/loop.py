@@ -435,7 +435,8 @@ class StepLoop:
             tokens=sum(st.steps for st in self.all_states)
             if self.keep_states else int(self.c_steps.value),
             wall=time.perf_counter() - self.t0,
-            mask_time=(tele.phase_seconds("rows_build")
+            mask_time=(tele.phase_seconds("ci_lookup")
+                       + tele.phase_seconds("cd_check")
                        + tele.phase_seconds("mask_dispatch")
                        + tele.phase_seconds("select_resolve")),
             mask_computations=int(self.c_mask_comp.value),
@@ -940,9 +941,10 @@ class SpecMode(_ModeBase):
                                             st.prompt_len))
 
         # ---- mask rows for every selection position -----------------
-        # three spans partitioning the historical mask_time bracket:
-        # host row building, fused mask+select dispatch, ids sync
-        with loop.tele.span("rows_build"):
+        # four spans partitioning the historical mask_time bracket:
+        # host row building (ci_lookup), residue overlay (cd_check),
+        # fused mask+select dispatch, ids sync
+        with loop.tele.span("ci_lookup"):
             span_sms: dict[tuple, tuple] = {}  # (b, f) -> (StepMask, off)
             eosm = np.zeros((B, S), bool)
             consm = np.zeros((B, S), bool)
@@ -974,17 +976,23 @@ class SpecMode(_ModeBase):
             for (b, f), (sm, off) in span_sms.items():
                 r = np.where(sm.rows >= 0, sm.rows + off, sm.rows)
                 rows[b, f, :r.shape[0]] = r
+        with loop.tele.span("cd_check"):
+            W = int(eng._store_cat.shape[1])
+            cdm = np.zeros((B, S, W), np.uint32)
+            for (b, f), (sm, _) in span_sms.items():
+                if sm.cd_words is not None:
+                    cdm[b, f] = sm.cd_words
         with loop.tele.device_span("mask_sample") as dv:
             with loop.tele.span("mask_dispatch"):
                 salts = np.array([slot_state[b].steps if slot_state[b]
                                   else 0 for b in range(B)], np.uint32)
                 keys = eng._span_keys(loop.seeds, salts, S)
+                # per-step arrays go in as numpy (fresh allocations);
+                # the admit()-mutated decode configs ship copies
                 masked, ids, ok = eng._span_mask_select(
-                    logits, eng._store_cat, jnp.asarray(rows),
-                    jnp.asarray(eosm), jnp.asarray(consm),
-                    jnp.asarray(loop.greedy), jnp.asarray(loop.temp),
-                    jnp.asarray(loop.top_k), jnp.asarray(loop.top_p),
-                    jnp.asarray(keys))
+                    logits, eng._store_cat, rows, cdm, eosm, consm,
+                    loop.greedy.copy(), loop.temp.copy(),
+                    loop.top_k.copy(), loop.top_p.copy(), keys)
             dv.done((ids, ok))
         with loop.tele.span("select_resolve"):
             ids_h, ok_h = np.asarray(ids), np.asarray(ok)

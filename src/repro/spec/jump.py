@@ -138,7 +138,7 @@ def forced_literal(gc: GrammarConstraint, text: bytes,
             sm = gc.step_rows(cur)
         if sm.eos_allowed:
             break
-        fb = gc.store.allowed_first_bytes(gc.store.union_rows(sm.rows))
+        fb = gc.store.allowed_first_bytes(gc.union_packed(sm))
         nz = np.nonzero(fb)[0]
         if nz.size != 1:
             break

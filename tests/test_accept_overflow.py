@@ -96,8 +96,9 @@ def test_forced_step_not_confused_by_overflow(wide_gc):
 
 def test_step_rows_batch_grows_width(wide_gc):
     gc, tok = wide_gc
-    rows, eos, nseq = GrammarConstraint.step_rows_batch(
+    rows, cd, eos, nseq = GrammarConstraint.step_rows_batch(
         [gc, None, gc], [b"", b"", b"Aq"])
+    assert cd.shape == (3, gc.store.num_words) and (cd[1] == 0).all()
     assert rows.shape[1] > MAX_ACCEPT
     assert (rows[1] == -1).all()
     # the narrow slot (after "Aq" the sentence can only end) pads out

@@ -26,6 +26,13 @@ def _loop_source():
     return inspect.getsource(loop)
 
 
+def _engine_source():
+    import inspect
+
+    import repro.serving.engine as engine
+    return inspect.getsource(engine)
+
+
 def test_step_loop_ships_copies_of_mutated_cursors():
     """Every decode/feed dispatch that passes a long-lived, in-place
     mutated cursor array through jnp.asarray must pass a .copy().
@@ -47,6 +54,67 @@ def test_step_loop_ships_copies_of_mutated_cursors():
         f"the paged span feed")
     # the explanatory comment must survive too (it carries the root cause)
     assert "zero-copy alias" in src
+
+
+def test_fused_dispatch_ships_copies_of_decode_configs():
+    """The fused mask+select dispatch passes NUMPY arrays into jitted
+    calls directly (the jnp.asarray round-trip costs ~25x the dispatch
+    on CPU), which widens the aliasing hazard: jit may zero-copy alias
+    the host buffer too. Per-step arrays (rows, cd, eos, need_mask,
+    keys, noise) are freshly allocated each step and safe; the
+    long-lived decode-config arrays (greedy/temp/top_k/top_p) are
+    mutated in place by admit() and MUST ship private copies — in the
+    engine's sampled dispatch and in SpecMode's span dispatch."""
+    esrc = _engine_source()
+    for arr in ("greedy", "temp", "top_k", "top_p"):
+        assert re.search(rf"\b{arr}\.copy\(\)", esrc), (
+            f"engine _select_dispatch must ship {arr}.copy() — admit() "
+            f"mutates it in place while the device call is in flight")
+    lsrc = _loop_source()
+    for arr in ("greedy", "temp", "top_k", "top_p"):
+        assert re.search(rf"loop\.{arr}\.copy\(\)", lsrc), (
+            f"SpecMode span dispatch must ship loop.{arr}.copy()")
+
+
+def test_fused_dispatch_safe_under_config_mutation():
+    """Semantic form of the guard above: dispatch the fused sampled
+    path with numpy configs, clobber every config array in place
+    immediately (before any sync — what admit() does on the overlap
+    path), and require the resolved ids to match an isolated re-run."""
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_select.ops import fused_mask_select
+    from repro.kernels.fused_select.ref import gumbel_noise
+    rng = np.random.default_rng(0)
+    B, V, R = 4, 512, 32
+    store = rng.integers(0, 2 ** 32, (R, V // 32), dtype=np.uint32)
+    rows = rng.integers(-1, R, (B, 8)).astype(np.int32)
+    logits = rng.normal(size=(B, V)).astype(np.float32)
+    cd = np.zeros((B, V // 32), np.uint32)
+    eos = np.ones(B, bool)
+    cons = np.ones(B, bool)
+    keys = rng.integers(0, 2 ** 32, (B, 2), dtype=np.uint32)
+    noise = gumbel_noise(jnp.asarray(keys), V)
+    greedy = np.zeros(B, bool)
+    temp = np.full(B, 0.8, np.float32)
+    top_k = np.full(B, 8, np.int32)
+    top_p = np.full(B, 0.9, np.float32)
+    ids, _ = fused_mask_select(jnp.asarray(logits), jnp.asarray(store),
+                               rows, cd, eos, cons, greedy.copy(),
+                               temp.copy(), top_k.copy(), top_p.copy(),
+                               noise=noise)
+    # in-place mutation right after dispatch, as admit() would do
+    greedy[:] = True
+    temp[:] = 99.0
+    top_k[:] = 1
+    top_p[:] = 0.01
+    want, _ = fused_mask_select(jnp.asarray(logits), jnp.asarray(store),
+                                rows, cd, eos, cons,
+                                np.zeros(B, bool),
+                                np.full(B, 0.8, np.float32),
+                                np.full(B, 8, np.int32),
+                                np.full(B, 0.9, np.float32), noise=noise)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want))
 
 
 def test_grammar_pipeline_batches_are_fresh(grammar_bundle, tokenizer):

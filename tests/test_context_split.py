@@ -1,0 +1,174 @@
+"""Context-split differential: the precomputed CI rows + CD residue
+overlay must reproduce the legacy per-accept-sequence mask BITWISE.
+
+The legacy contract (one M0/M1 store row per accept sequence, no
+classification) is re-derived here from first principles via
+store.row_m0/row_m1 — the per-terminal row addressing survives exactly
+so this oracle stays expressible. The split path under test is the one
+the serving engine ships to the device: `step_rows` (CI row ids + cd
+overlay words) unioned by `union_packed`.
+
+Covers every builtin grammar x both approximation families, at token
+boundaries AND adversarial mid-token byte cuts (deterministic sweeps
+plus hypothesis), and locks in the economics of the split: the
+context-dependent residue the host must still touch per step stays a
+few percent of the vocab — that bound is WHY ci_lookup is cheap.
+"""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade gracefully: only @given tests skip
+    from tests._hypothesis_stub import given, settings, st
+
+from repro.core.constrain import GrammarConstraint
+from repro.core.grammars import BUILTIN
+from repro.core.mask_store import CD_ROW_THRESHOLD
+from repro.core.sampling import GrammarSampler
+from repro.core.tokenizer import EOS_ID
+
+
+def legacy_union(gc, text: bytes):
+    """Pre-split reference: union of one M0/M1 row per accept sequence
+    (dropping sequences whose remainder walk dies), exactly what
+    step_rows emitted before the context split."""
+    res = gc.parser.partial_parse(text)
+    r = res.remainder
+    g, store = gc.grammar, gc.store
+    strict = gc.mode == "grammar_strict"
+    rows, walked = [], {}
+    for seq in res.accept_sequences:
+        t1 = seq[0]
+        q = walked.get(t1)
+        if q is None:
+            dfa = g.terminals[t1].dfa
+            q = dfa.walk_live(dfa.start, r)
+            walked[t1] = q = int(q) if dfa.live[q] else -1
+        if q < 0:
+            continue
+        rows.append(store.row_m0(t1, q, strict=strict) if len(seq) == 1
+                    else store.row_m1(t1, q, seq[1], strict=strict))
+    packed = store.union_rows(np.asarray(rows or [-1], np.int32))
+    return packed, res.eos_allowed
+
+
+def _assert_split_matches(gc, text: bytes):
+    sm = gc.step_rows(text)
+    got = gc.union_packed(sm)
+    want, eos = legacy_union(gc, text)
+    np.testing.assert_array_equal(got, want, err_msg=repr(text))
+    assert sm.eos_allowed == eos, text
+
+
+# ---------------- deterministic: all builtins x both modes ---------------
+
+@pytest.mark.parametrize("mode", GrammarConstraint.MODES)
+@pytest.mark.parametrize("name", BUILTIN)
+def test_split_union_equals_legacy(name, mode, grammar_bundle, tokenizer):
+    """Every token-boundary cut of sampled programs plus random BYTE
+    cuts (mid-token = the adversarial case for residue selection)."""
+    g, tab, store, _ = grammar_bundle(name)
+    gc = GrammarConstraint(g, tab, store, tokenizer, mode=mode)
+    sampler = GrammarSampler(g, seed=11)
+    rng = np.random.default_rng(11)
+    checked = 0
+    for _ in range(4):
+        prog = sampler.sample(14, max_bytes=200)
+        prefix = b""
+        for tid in tokenizer.encode(prog):
+            _assert_split_matches(gc, prefix)
+            prefix += tokenizer.id_to_bytes[tid]
+            checked += 1
+        for cut in rng.integers(0, len(prog) + 1, size=8):
+            try:
+                gc.parser.partial_parse(prog[:int(cut)])
+            except Exception:
+                continue            # unparseable cut: nothing to compare
+            _assert_split_matches(gc, prog[:int(cut)])
+            checked += 1
+    assert checked > 30
+
+
+def test_token_mask_unchanged_by_split(grammar_bundle, tokenizer):
+    """End-to-end boolean mask: rows+overlay through unpack must equal
+    the legacy union through unpack, EOS bit included."""
+    g, tab, store, gc = grammar_bundle("json")
+    for text in (b"", b"{", b'{"a": [1, ', b'{"k": {"x": true'):
+        m = gc.token_mask(text)
+        want, eos = legacy_union(gc, text)
+        ref = store.unpack(want)
+        if eos:
+            ref[EOS_ID] = True
+        np.testing.assert_array_equal(m, ref, err_msg=repr(text))
+
+
+# ---------------- the residue stays small (the split's economics) --------
+
+@pytest.mark.parametrize("name", BUILTIN)
+def test_cd_residue_fraction_small(name, grammar_bundle, tokenizer):
+    """At every sampled cut the CD overlay — the only per-step host work
+    proportional to mask content — must stay a few percent of the
+    vocab. The CI rows carry everything else, precomputed."""
+    g, tab, store, gc = grammar_bundle(name)
+    sampler = GrammarSampler(g, seed=5)
+    V = tokenizer.vocab_size
+    budget = max(2 * CD_ROW_THRESHOLD, int(0.05 * V))
+    worst = 0
+    for _ in range(4):
+        prog = sampler.sample(14, max_bytes=200)
+        prefix = b""
+        for tid in tokenizer.encode(prog):
+            sm = gc.step_rows(prefix)
+            if sm.cd_words is not None:
+                worst = max(worst, store.popcount_packed(sm.cd_words))
+            prefix += tokenizer.id_to_bytes[tid]
+    assert worst <= budget, (name, worst, budget)
+
+
+def test_cd_tables_respect_threshold(grammar_bundle):
+    """Offline classification invariant: per (state, follow terminal)
+    the small-residue token count is <= CD_ROW_THRESHOLD (bigger
+    residues must have been demoted to cd_big legacy rows instead).
+    A state's cd_token slice aggregates across follows, so the bound is
+    on each follow-bit column of cd_follow, not on the slice length."""
+    for name in BUILTIN:
+        _, _, store, _ = grammar_bundle(name)
+        for i in range(len(store.cd_ptr) - 1):
+            lo, hi = int(store.cd_ptr[i]), int(store.cd_ptr[i + 1])
+            if hi <= lo:
+                continue
+            fol = store.cd_follow[lo:hi]
+            for w in range(fol.shape[1]):
+                for j in range(64):
+                    cnt = int(((fol[:, w] >> np.uint64(j))
+                               & np.uint64(1)).sum())
+                    assert cnt <= CD_ROW_THRESHOLD, (name, i, w, j, cnt)
+
+
+# ---------------- hypothesis: random grammar/seed/cut --------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.sampled_from(["calc", "json", "python_mini"]),
+       st.sampled_from(GrammarConstraint.MODES),
+       st.integers(0, 10 ** 6), st.data())
+def test_fuzz_split_union_equals_legacy(name, mode, seed, data):
+    from repro.core.grammars import load_grammar
+    from repro.core.mask_store import build_mask_store
+    from repro.core.tokenizer import ByteTokenizer
+    from tests.conftest import _BUNDLES
+    if name not in _BUNDLES:
+        tok = ByteTokenizer(1024)
+        g, tab = load_grammar(name)
+        store = build_mask_store(g, tok)
+        _BUNDLES[name] = (g, tab, store,
+                          GrammarConstraint(g, tab, store, tok))
+    g, tab, store, base = _BUNDLES[name]
+    gc = GrammarConstraint(g, tab, store, base.tokenizer, mode=mode)
+    prog = GrammarSampler(g, seed=seed).sample(14, max_bytes=200)
+    cut = data.draw(st.integers(0, len(prog)))
+    prefix = prog[:cut]
+    try:
+        gc.parser.partial_parse(prefix)
+    except Exception:
+        return                      # unparseable mid-byte cut: no mask
+    _assert_split_matches(gc, prefix)

@@ -254,11 +254,14 @@ def _fabricate(tele, phase_seconds=(), device_seconds=()):
 
 def test_attribution_host_dispatch_fallback():
     tele = Telemetry(enabled=True)
-    _fabricate(tele, phase_seconds=[("rows_build", 0.3), ("plan", 0.1),
+    _fabricate(tele, phase_seconds=[("ci_lookup", 0.25), ("cd_check", 0.05),
+                                    ("plan", 0.1),
                                     ("mask_dispatch", 0.2),
                                     ("forward", 0.4)])
     a = tele.attribution()
     assert a["seconds"]["host_grammar"] == pytest.approx(0.4)
+    assert a["seconds"]["host_grammar_ci"] == pytest.approx(0.25)
+    assert a["seconds"]["host_grammar_cd"] == pytest.approx(0.05)
     assert a["seconds"]["mask_sample_kernel"] == pytest.approx(0.2)
     assert a["seconds"]["forward_kernel"] == pytest.approx(0.4)
     assert a["source"] == {"mask_sample_kernel": "host-dispatch",

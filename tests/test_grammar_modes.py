@@ -123,17 +123,27 @@ def test_strict_subset_per_step(name, grammar_bundle, tokenizer):
 
 
 def test_mode_selects_row_family(grammar_bundle, tokenizer):
+    """Under the context split the two families SHARE the
+    context-independent rows (strict-half M0 rows by construction), so
+    the strict mode's rows all live in the strict half, while the mask
+    mode mixes its own family rows with stride-aligned CI rows."""
     g, tab, store, _ = grammar_bundle("calc")
     gm = GrammarConstraint(g, tab, store, tokenizer, mode="grammar_mask")
     gs_ = GrammarConstraint(g, tab, store, tokenizer,
                             mode="grammar_strict")
     R = store.strict_offset
-    rm = gm.step_rows(b"1+").rows
-    rs = gs_.step_rows(b"1+").rows
-    assert (rm[rm >= 0] < R).all()
+    smm = gm.step_rows(b"1+")
+    sms = gs_.step_rows(b"1+")
+    rm, rs = smm.rows, sms.rows
     assert (rs[rs >= 0] >= R).all()
-    # same rows, shifted: the mode only selects the family
-    np.testing.assert_array_equal(rs[rs >= 0] - R, rm[rm >= 0])
+    # mask-family rows in the strict half can only be the shared CI
+    # rows — a state's strict M0, hence stride-aligned
+    shared = rm[(rm >= 0) & (rm >= R)]
+    assert ((shared - R) % store.row_stride == 0).all()
+    # and the full packed unions still order strict subset-of mask
+    um = gm.union_packed(smm)
+    us = gs_.union_packed(sms)
+    assert not (us & ~um).any()
 
 
 def test_unknown_mode_rejected(grammar_bundle, tokenizer):

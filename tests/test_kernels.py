@@ -30,10 +30,12 @@ def test_masked_logits_matches_ref(B, V, R, A, block_v, dtype):
     rows = rng.integers(-1, R, size=(B, A)).astype(np.int32)
     logits = rng.normal(size=(B, V)).astype(np.float32)
     eos = rng.integers(0, 2, size=(B,)).astype(bool)
+    cd = rng.integers(0, 2 ** 32, size=(B, V // 32), dtype=np.uint32)
     args = (jnp.asarray(logits, dtype), jnp.asarray(store),
             jnp.asarray(rows), jnp.asarray(eos))
-    ref = masked_logits_ref(*args)
-    out = masked_logits(*args, block_v=block_v, interpret=True)
+    ref = masked_logits_ref(*args, cd=jnp.asarray(cd))
+    out = masked_logits(*args, jnp.asarray(cd), block_v=block_v,
+                        interpret=True)
     np.testing.assert_array_equal(np.asarray(ref, np.float32),
                                   np.asarray(out, np.float32))
 
@@ -51,16 +53,20 @@ def test_masked_logits_property(B, A, seed):
     rows = rng.integers(-1, R, size=(B, A)).astype(np.int32)
     logits = rng.normal(size=(B, V)).astype(np.float32)
     eos = rng.integers(0, 2, size=(B,)).astype(bool)
+    cd = rng.integers(0, 2 ** 32, size=(B, V // 32), dtype=np.uint32)
     args = (jnp.asarray(logits), jnp.asarray(store), jnp.asarray(rows),
             jnp.asarray(eos))
-    out = np.asarray(masked_logits(*args, block_v=256, interpret=True))
-    ref = np.asarray(masked_logits_ref(*args))
+    out = np.asarray(masked_logits(*args, jnp.asarray(cd), block_v=256,
+                                   interpret=True))
+    ref = np.asarray(masked_logits_ref(*args, cd=jnp.asarray(cd)))
     np.testing.assert_array_equal(out, ref)
-    # property: every unmasked position was allowed by some row (or EOS)
+    # property: every unmasked position was allowed by some row, the
+    # context-dependent residue overlay, or EOS
     keep = out > -1e29
     union = np.zeros(V, dtype=bool)
     for b in range(B):
-        union[:] = False
+        union[:] = np.unpackbits(cd[b].view(np.uint8),
+                                 bitorder="little")[:V].astype(bool)
         for r in rows[b]:
             if r >= 0:
                 bits = np.unpackbits(store[r].view(np.uint8),

@@ -532,8 +532,9 @@ def test_async_identity_telemetry_off(obs_engines):
 
 
 def test_sync_stats_derive_from_registry(obs_engines):
-    """EngineStats.mask_time is the rows_build + mask_dispatch +
-    select_resolve phase sum — one source of truth, two views."""
+    """EngineStats.mask_time is the ci_lookup + cd_check +
+    mask_dispatch + select_resolve phase sum — one source of truth,
+    two views."""
     from repro.serving.async_engine import AsyncEngine
 
     async def go():
@@ -544,7 +545,8 @@ def test_sync_stats_derive_from_registry(obs_engines):
             await aeng.drain()
     (_, stats), tele = asyncio.run(go())
     want = sum(tele.phase_seconds(p) for p in
-               ("rows_build", "mask_dispatch", "select_resolve"))
+               ("ci_lookup", "cd_check", "mask_dispatch",
+                "select_resolve"))
     assert stats.mask_time == pytest.approx(want)
     assert tele.phase_calls("forward") > 0
     assert tele.phase_calls("host_oracle") >= 0
@@ -635,7 +637,7 @@ def test_http_observability_surface(obs_engines):
             assert status == 200
             evs = json.loads(body)["traceEvents"]
             phases = {e["name"] for e in evs if e["ph"] == "X"}
-            assert "forward" in phases and "rows_build" in phases
+            assert "forward" in phases and "ci_lookup" in phases
             tracks = {e["args"]["name"] for e in evs
                       if e.get("name") == "thread_name"}
             assert any(t.startswith("slot ") for t in tracks)

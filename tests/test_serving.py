@@ -215,7 +215,7 @@ def test_step_rows_batch_matches_single():
     cons.append(None)
     texts.append(b"")
     offs = np.array([0, 1000, 0])
-    rows, eos, nseq = GrammarConstraint.step_rows_batch(
+    rows, cd, eos, nseq = GrammarConstraint.step_rows_batch(
         cons, texts, max_accept=48, row_offsets=offs)
     assert rows.shape == (3, 48) and eos.shape == (3,)
     for b in (0, 1):
@@ -223,4 +223,7 @@ def test_step_rows_batch_matches_single():
         want = np.where(sm.rows >= 0, sm.rows + offs[b], sm.rows)
         np.testing.assert_array_equal(rows[b], want)
         assert eos[b] == sm.eos_allowed and nseq[b] == sm.num_sequences
-    assert (rows[2] == -1).all() and not eos[2]
+        want_cd = (np.zeros_like(cd[b]) if sm.cd_words is None
+                   else sm.cd_words)
+        np.testing.assert_array_equal(cd[b], want_cd)
+    assert (rows[2] == -1).all() and not eos[2] and (cd[2] == 0).all()

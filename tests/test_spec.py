@@ -364,9 +364,11 @@ def test_masked_logits_span_kernel_matches_ref():
     rows = jnp.asarray(rng.integers(-1, R, (B, K, A)).astype(np.int32))
     logits = jnp.asarray(rng.normal(size=(B, K, V)).astype(np.float32))
     eos = jnp.asarray(rng.integers(0, 2, (B, K)).astype(bool))
-    out = masked_logits_span(logits, store, rows, eos, block_v=128,
+    cd = jnp.asarray(rng.integers(0, 2 ** 32, (B, K, V // 32),
+                                  dtype=np.uint32))
+    out = masked_logits_span(logits, store, rows, eos, cd, block_v=128,
                              interpret=True)
-    ref = masked_logits_span_ref(logits, store, rows, eos)
+    ref = masked_logits_span_ref(logits, store, rows, eos, cd=cd)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
