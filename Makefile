@@ -2,10 +2,13 @@
 
 PY ?= python
 
-.PHONY: test bench bench-smoke bench-regress obs-smoke docs-check
+.PHONY: test lint bench bench-smoke bench-regress obs-smoke docs-check
 
 test:              ## tier-1 test suite (same command CI runs)
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+lint:              ## reprolint: AST invariant analyzer over src/ + benchmarks/ + scripts/ (CI gate; rule catalog in docs/static_analysis.md)
+	$(PY) scripts/reprolint.py
 
 bench:             ## paper-table + engine benchmarks (CSV to stdout)
 	PYTHONPATH=src $(PY) benchmarks/run.py

@@ -183,10 +183,12 @@ def mask_union_micro():
     logits = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32))
     eos = jnp.asarray(np.ones(B, bool))
     ref = jax.jit(masked_logits_ref)
+    # reprolint: disable=RL003 deliberate timing bracket: this benchmark measures device wall time
     dt = timeit(lambda: jax.block_until_ready(
         ref(logits, store, rows, eos)), n=20)
     emit("mask_union_jnp_ref", dt * 1e6, f"B={B};V={V};A={A}")
     cd = jnp.zeros((B, V // 32), jnp.uint32)
+    # reprolint: disable=RL003 deliberate timing bracket: this benchmark measures device wall time
     dt2 = timeit(lambda: jax.block_until_ready(
         masked_logits(logits, store, rows, eos, cd, block_v=2048,
                       interpret=True)), n=3)

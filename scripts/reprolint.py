@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""reprolint entry point (`make lint`).
+
+Runs the repo's AST-based invariant analyzer (src/repro/analysis/)
+over src/ + benchmarks/ + scripts/ and fails on any unsuppressed
+finding. Works with or without PYTHONPATH=src.
+
+    python scripts/reprolint.py                 # whole tree, all rules
+    python scripts/reprolint.py --list-rules
+    python scripts/reprolint.py src/repro/serving --rules RL001 --json
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.analysis.cli import main                         # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""reprolint: stdlib-only AST/import-graph static analysis of the
+repo's own serving invariants.
+
+The invariants this package mechanizes used to live as regex
+source-asserts scattered across the test suite; each is now ONE rule
+implementation shared by `make lint`, CI, and the regression tests:
+
+  RL001 alias-race        mutated-in-place host buffers aliased into
+                          async device dispatches (the PR 5 bug class)
+  RL002 obs-purity        repro.obs never imports jax/numpy,
+                          transitively
+  RL003 sync-confinement  block_until_ready only in serving/devbridge
+  RL004 span-hygiene      telemetry span bodies stay host-only
+  RL005 kernel-parity     every pallas_call package ships ops/ref and
+                          a parity test
+
+Entry points: `lint()` here, `scripts/reprolint.py` / `make lint` on
+the command line. docs/static_analysis.md is the rule catalog and the
+how-to-add-a-rule guide.
+"""
+from __future__ import annotations
+
+from .findings import Finding, Report                      # noqa: F401
+from .project import Project                               # noqa: F401
+from .registry import RULES, run_rules                     # noqa: F401
+from . import rules                                        # noqa: F401
+
+DEFAULT_PATHS = ("src", "benchmarks", "scripts")
+
+
+def lint(root, paths=None, select=None, overlay=None) -> Report:
+    """Run the (selected) rules over `paths` relative to `root`.
+
+    `overlay` maps relative paths to substitute source text so tests
+    can prove a rule fires on a hypothetical edit without touching
+    disk.
+    """
+    project = Project.load(root, paths=paths or DEFAULT_PATHS,
+                           overlay=overlay)
+    return run_rules(project, select=select)

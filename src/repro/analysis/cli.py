@@ -1,0 +1,54 @@
+"""reprolint command line (`scripts/reprolint.py`, `make lint`).
+
+Exit codes: 0 clean, 1 unsuppressed findings, 2 usage/parse error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import DEFAULT_PATHS, RULES, lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="AST-based invariant analyzer for this repo "
+                    "(rule catalog: docs/static_analysis.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to scan (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", default=None,
+                    help="project root (default: auto from this file)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also list suppressed findings")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, r in sorted(RULES.items()):
+            first = r.doc.splitlines()[0] if r.doc else ""
+            print(f"{rid}  {r.name:18s} {first}")
+        return 0
+
+    root = Path(args.root) if args.root else \
+        Path(__file__).resolve().parents[3]
+    select = [s.strip() for s in args.rules.split(",")] \
+        if args.rules else None
+    try:
+        report = lint(root, paths=args.paths or None, select=select)
+    except (ValueError, SyntaxError) as e:
+        print(f"reprolint: error: {e}", file=sys.stderr)
+        return 2
+    print(report.render_json() if args.json
+          else report.render_human(verbose=args.verbose))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Finding/Report datatypes and the two output renderers.
+
+A `Finding` is one rule violation anchored at file:line. The `Report`
+separates live findings (lint fails) from suppressed ones (annotated
+away with a justified `# reprolint: disable=RLxxx <why>`) so both the
+CLI and the tests can assert on either population.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Finding:
+    rule: str                   # "RL001"
+    name: str                   # "alias-race"
+    path: str                   # repo-relative, posix separators
+    line: int
+    message: str
+    hint: str = ""
+    suppressed: bool = False
+    justification: str = ""     # set when suppressed
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def as_dict(self) -> dict:
+        return {
+            "rule": self.rule, "name": self.name, "path": self.path,
+            "line": self.line, "message": self.message, "hint": self.hint,
+            "suppressed": self.suppressed,
+            "justification": self.justification,
+        }
+
+
+@dataclass
+class Report:
+    findings: list = field(default_factory=list)    # unsuppressed
+    suppressed: list = field(default_factory=list)
+    files_scanned: int = 0
+    rules_run: list = field(default_factory=list)
+    elapsed_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def by_rule(self, rid: str) -> list:
+        return [f for f in self.findings if f.rule == rid]
+
+    def render_human(self, verbose: bool = False) -> str:
+        lines = []
+        for f in sorted(self.findings, key=lambda f: (f.path, f.line,
+                                                      f.rule)):
+            lines.append(f"{f.location()}: {f.rule} [{f.name}] "
+                         f"{f.message}")
+            if f.hint:
+                lines.append(f"    hint: {f.hint}")
+        if verbose:
+            for f in sorted(self.suppressed,
+                            key=lambda f: (f.path, f.line)):
+                lines.append(f"{f.location()}: {f.rule} suppressed "
+                             f"({f.justification})")
+        lines.append(
+            f"reprolint: {len(self.findings)} finding(s), "
+            f"{len(self.suppressed)} suppressed, "
+            f"{self.files_scanned} file(s), "
+            f"rules {','.join(self.rules_run)}, "
+            f"{self.elapsed_s:.2f}s")
+        return "\n".join(lines)
+
+    def render_json(self) -> str:
+        return json.dumps({
+            "findings": [f.as_dict() for f in self.findings],
+            "suppressed": [f.as_dict() for f in self.suppressed],
+            "files_scanned": self.files_scanned,
+            "rules_run": self.rules_run,
+            "elapsed_s": round(self.elapsed_s, 3),
+            "ok": self.ok,
+        }, indent=1)

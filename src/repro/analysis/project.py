@@ -1,0 +1,190 @@
+"""Project scanner: parse every .py once, attach directives, and build
+the repo-internal module-level import graph rules traverse (RL002).
+
+The scanner is pure stdlib and filesystem-read-only. Tests inject an
+`overlay` ({relative-path: source-text}) so a rule can be proven to
+fire on a hypothetical edit — "delete this .copy()", "add a numpy
+import under obs/" — without touching the tree.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .suppress import Directives, parse_directives
+
+SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "artifacts",
+             ".hypothesis", ".ruff_cache", "node_modules"}
+
+
+@dataclass
+class SourceFile:
+    rel: str                    # posix path relative to project root
+    text: str
+    tree: ast.Module
+    directives: Directives
+    module: str | None          # dotted name when under src/
+
+
+@dataclass
+class Project:
+    root: Path
+    files: list = field(default_factory=list)
+    _by_rel: dict = field(default_factory=dict)
+    _by_module: dict = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, root, paths=None, overlay=None) -> "Project":
+        """Parse every .py under `paths` (default: src benchmarks
+        scripts). `overlay` substitutes file contents by relative path;
+        overlay keys that match no on-disk file are added as virtual
+        files (fixture trees)."""
+        root = Path(root).resolve()
+        overlay = dict(overlay or {})
+        proj = cls(root=root)
+        rels: list[str] = []
+        for p in (paths or ("src", "benchmarks", "scripts")):
+            p = Path(p)
+            if not p.is_absolute():
+                p = root / p
+            if p.is_file():
+                rels.append(p.relative_to(root).as_posix())
+            elif p.is_dir():
+                for dirpath, dirnames, filenames in os.walk(p):
+                    dirnames[:] = [d for d in dirnames
+                                   if d not in SKIP_DIRS]
+                    for fn in sorted(filenames):
+                        if fn.endswith(".py"):
+                            rel = (Path(dirpath) / fn) \
+                                .relative_to(root).as_posix()
+                            rels.append(rel)
+        for rel in overlay:
+            if rel not in rels:
+                rels.append(rel)
+        for rel in sorted(set(rels)):
+            text = overlay.get(rel)
+            if text is None:
+                text = (root / rel).read_text()
+            proj._add(rel, text)
+        return proj
+
+    def _add(self, rel: str, text: str) -> None:
+        tree = ast.parse(text, filename=rel)
+        sf = SourceFile(rel=rel, text=text, tree=tree,
+                        directives=parse_directives(text),
+                        module=module_name(rel))
+        self.files.append(sf)
+        self._by_rel[rel] = sf
+        if sf.module:
+            self._by_module[sf.module] = sf
+
+    def file(self, rel: str):
+        return self._by_rel.get(rel)
+
+    def by_module(self, module: str):
+        return self._by_module.get(module)
+
+    def read_text(self, rel: str) -> str | None:
+        """Overlay-aware read for paths OUTSIDE the scan set (RL005
+        checks tests/ without linting it)."""
+        sf = self._by_rel.get(rel)
+        if sf is not None:
+            return sf.text
+        p = self.root / rel
+        return p.read_text() if p.is_file() else None
+
+    def glob(self, pattern: str) -> list:
+        """Relative paths matching `pattern`, merged over disk and
+        virtual overlay files."""
+        rels = {p.relative_to(self.root).as_posix()
+                for p in self.root.glob(pattern)}
+        import fnmatch
+        rels.update(r for r in self._by_rel
+                    if fnmatch.fnmatch(r, pattern))
+        return sorted(rels)
+
+    # ----------------------- import graph (RL002) -----------------------
+
+    def import_edges(self) -> dict:
+        """module -> {(imported_module, lineno)} for MODULE-LEVEL
+        imports only (function-local imports are lazy: they cannot pull
+        a dependency in at import time). Edges cover both project
+        modules and the raw top-level names of foreign imports, plus
+        ancestor packages (importing a.b.c executes a/__init__ and
+        a.b/__init__)."""
+        edges: dict = {}
+        for sf in self.files:
+            if not sf.module:
+                continue
+            out = set()
+            for node, names in _module_level_imports(sf.tree, sf.module):
+                for name in names:
+                    for target in self._resolve(name):
+                        out.add((target, node.lineno))
+            edges[sf.module] = out
+        return edges
+
+    def _resolve(self, dotted: str) -> list:
+        """dotted import -> project modules it executes (self +
+        existing ancestor packages), or its top-level name when
+        foreign."""
+        hits = []
+        parts = dotted.split(".")
+        for i in range(len(parts), 0, -1):
+            cand = ".".join(parts[:i])
+            if cand in self._by_module:
+                hits.append(cand)
+                # ancestor packages: importing a.b.c executes the
+                # __init__ of a and a.b too
+                for j in range(1, i):
+                    anc = ".".join(parts[:j])
+                    if anc in self._by_module:
+                        hits.append(anc)
+                break
+        else:
+            hits.append(parts[0])
+        return hits
+
+
+def module_name(rel: str) -> str | None:
+    """src/repro/core/lexer.py -> repro.core.lexer ;
+    src/repro/obs/__init__.py -> repro.obs ; non-src files -> None."""
+    if not rel.startswith("src/") or not rel.endswith(".py"):
+        return None
+    parts = rel[len("src/"):-len(".py")].split("/")
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) if parts else None
+
+
+def _module_level_imports(tree: ast.Module, module: str):
+    """Yield (node, [dotted names]) for imports executed at import time
+    — anywhere except inside a function body (class bodies and
+    module-level `if`/`try` blocks DO execute)."""
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            if isinstance(child, ast.Import):
+                yield child, [a.name for a in child.names]
+            elif isinstance(child, ast.ImportFrom):
+                if child.level:     # relative: resolve against module
+                    base = module.split(".")
+                    base = base[: len(base) - child.level + 1]
+                    stem = ".".join(base + ([child.module]
+                                            if child.module else []))
+                else:
+                    stem = child.module or ""
+                names = [stem] if stem else []
+                # `from pkg import sub` may bind a submodule: add
+                # pkg.sub candidates so package-internal re-exports
+                # count as edges
+                for a in child.names:
+                    if stem and a.name != "*":
+                        names.append(f"{stem}.{a.name}")
+                yield child, names
+            yield from walk(child)
+    yield from walk(tree)

@@ -1,0 +1,78 @@
+"""Rule registry and the lint driver.
+
+A rule is a function `(Project) -> list[Finding]` registered under a
+stable id. `run_rules` executes the selected rules, folds justified
+`# reprolint: disable=` suppressions into the report, and appends the
+RL000 suppression-hygiene findings (malformed directives, unjustified
+or stale suppressions) — RL000 itself can never be suppressed.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from .findings import Finding, Report
+
+RULES: dict = {}
+
+
+@dataclass
+class Rule:
+    rid: str
+    name: str
+    doc: str
+    fn: object
+
+
+def rule(rid: str, name: str):
+    def deco(fn):
+        if rid in RULES:
+            raise ValueError(f"duplicate rule id {rid}")
+        RULES[rid] = Rule(rid=rid, name=name,
+                          doc=(fn.__doc__ or "").strip(), fn=fn)
+        return fn
+    return deco
+
+
+def run_rules(project, select=None) -> Report:
+    t0 = time.perf_counter()
+    selected = sorted(select) if select else sorted(RULES)
+    unknown = [r for r in selected if r not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule id(s): {','.join(unknown)}")
+    report = Report(files_scanned=len(project.files),
+                    rules_run=selected)
+    for rid in selected:
+        for f in RULES[rid].fn(project):
+            sf = project.file(f.path)
+            d = sf.directives.disable_for(f.rule, f.line) if sf else None
+            if d is not None:
+                d.used.add(f.rule)
+                f.suppressed = True
+                f.justification = d.justification
+                report.suppressed.append(f)
+            else:
+                report.findings.append(f)
+    _suppression_hygiene(project, selected, report)
+    report.elapsed_s = time.perf_counter() - t0
+    return report
+
+
+def _suppression_hygiene(project, selected, report) -> None:
+    for sf in project.files:
+        for line, msg in sf.directives.errors:
+            report.findings.append(Finding(
+                rule="RL000", name="suppression-hygiene", path=sf.rel,
+                line=line, message=msg,
+                hint="see docs/static_analysis.md §Suppression policy"))
+        for d in sf.directives.disables:
+            ran = [r for r in d.rules if r in selected]
+            if ran and not d.used:
+                report.findings.append(Finding(
+                    rule="RL000", name="suppression-hygiene",
+                    path=sf.rel, line=d.line,
+                    message=f"stale suppression: "
+                            f"{','.join(d.rules)} matched no finding "
+                            f"on this or the next line",
+                    hint="delete the directive, or move it onto the "
+                         "offending line"))

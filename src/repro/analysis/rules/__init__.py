@@ -1,0 +1,4 @@
+"""Rule modules register themselves on import; importing this package
+is what populates the registry."""
+from . import (alias_race, kernel_parity, obs_purity,       # noqa: F401
+               span_hygiene, sync_confinement)

@@ -1,0 +1,339 @@
+"""RL001 alias-race: host numpy buffers mutated in place while an async
+device dispatch may still be reading them.
+
+On XLA:CPU, `jnp.asarray` (and a jitted call taking numpy args
+directly) may ZERO-COPY alias host memory. Dispatch is async: mutating
+the buffer afterwards mutates it under the in-flight computation's
+feet. PR 5 root-caused a 5.47-magnitude prefill-logits corruption to
+exactly this (`serving/loop.py` paged span feed); this rule mechanizes
+the guard repo-wide.
+
+Per function scope, a dispatch of a plain name/dotted buffer without a
+`.copy()` fires when any of:
+
+  * the buffer is mutated in place LATER in the same function
+    (subscript store, augmented assign, `.fill()`-class methods,
+    `np.copyto`);
+  * the dispatch sits inside a `for`/`while` loop that ALSO mutates
+    the buffer anywhere in its body (loop-carried: iteration k+1
+    mutates what iteration k dispatched);
+  * the enclosing function declares the buffer
+    `# reprolint: mutated-inflight=...` (another code path — e.g. the
+    admission handler — mutates it between this function's dispatch
+    and the device read);
+  * the buffer was produced by `next(...)` inside a loop (opaque
+    producer: a reused staging buffer is invisible here) and the
+    producer statement carries no `# reprolint: fresh-batch` contract.
+
+Dispatch sites are `jnp.asarray` / `jax.device_put` calls, plus every
+call in a statement annotated `# reprolint: dispatch` (jitted calls
+taking numpy args without an asarray wrapper). Fresh expressions
+(literals, arithmetic, allocation calls) and `.copy()` arguments never
+fire.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding
+from ..registry import rule
+
+ASARRAY_FNS = {"jnp.asarray", "jax.numpy.asarray", "jax.device_put"}
+MUTATOR_METHODS = {"fill", "sort", "put", "itemset", "partition",
+                   "resize", "byteswap"}
+STORY = ("zero-copy aliasing on XLA:CPU — the async computation can "
+         "read the buffer AFTER this function mutates it (the PR 5 "
+         "prefill-corruption bug class, CHANGES.md PR 5 addendum)")
+
+
+def _chain(node) -> str | None:
+    """Dotted name for Name/Attribute chains (`loop.feed_pos`), else
+    None (anything computed is a fresh temporary)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _iter_scope(node):
+    """Walk a scope without descending into nested function bodies
+    (those are their own scopes)."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        yield child
+        yield from _iter_scope(child)
+
+
+def _scopes(tree):
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+class _Scope:
+    def __init__(self, sf, scope):
+        self.sf = sf
+        self.scope = scope
+        self.nodes = list(_iter_scope(scope))
+        self.stmts = [n for n in self.nodes if isinstance(n, ast.stmt)]
+        self.loops = [n for n in self.nodes
+                      if isinstance(n, (ast.For, ast.AsyncFor,
+                                        ast.While))]
+        self.aliases = self._aliases()
+        self.mutations = self._mutations()   # [(canonical id, lineno)]
+        self.rebinds = self._rebinds()       # [(chain, lineno)]
+        self.producers = self._producers()   # tainted names from next()
+        self.inflight = self._inflight()
+
+    # --------------------------- resolution ---------------------------
+
+    def _aliases(self) -> dict:
+        out = {}
+        for n in self.stmts:
+            if isinstance(n, ast.Assign) and len(n.targets) == 1 and \
+                    isinstance(n.targets[0], ast.Name):
+                src = _chain(n.value)
+                if src is not None and src != n.targets[0].id:
+                    out[n.targets[0].id] = src
+        return out
+
+    def canon(self, cid: str) -> str:
+        seen = set()
+        while cid in self.aliases and cid not in seen:
+            seen.add(cid)
+            cid = self.aliases[cid]
+        return cid
+
+    # ---------------------------- mutations ---------------------------
+
+    def _mutations(self) -> list:
+        out = []
+
+        def note(expr, line):
+            cid = _chain(expr)
+            if cid is not None:
+                out.append((self.canon(cid), line))
+
+        for n in self.nodes:
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    for el in ast.walk(t):
+                        if isinstance(el, ast.Subscript):
+                            note(el.value, n.lineno)
+            elif isinstance(n, ast.AugAssign):
+                t = n.target
+                note(t.value if isinstance(t, ast.Subscript) else t,
+                     n.lineno)
+            elif isinstance(n, ast.Call):
+                if isinstance(n.func, ast.Attribute) and \
+                        n.func.attr in MUTATOR_METHODS:
+                    note(n.func.value, n.lineno)
+                fc = _chain(n.func)
+                if fc is not None and fc.split(".")[-1] == "copyto" \
+                        and n.args:
+                    note(n.args[0], n.lineno)
+        return out
+
+    def _rebinds(self) -> list:
+        """Plain rebinds of a name/attribute to a FRESH value (`redo =
+        np.zeros(B)` at the top of a retry loop): the old buffer is
+        released, so later in-place mutations touch a new object and
+        the loop-carried hazard does not apply. Assigns whose value is
+        itself a name chain are aliases, not rebinds — buffer identity
+        survives those."""
+        out = []
+        for n in self.stmts:
+            if isinstance(n, ast.Assign) and _chain(n.value) is None:
+                for t in n.targets:
+                    tc = _chain(t)
+                    if tc is not None:
+                        out.append((tc, n.lineno))
+        return out
+
+    def _producers(self) -> dict:
+        """name -> producer Assign stmt, for `x = next(...)` inside a
+        loop, propagated through comprehension targets iterating the
+        tainted dict (`for k, v in batch.items()`)."""
+        tainted: dict = {}
+        for n in self.stmts:
+            if isinstance(n, ast.Assign) and len(n.targets) == 1 and \
+                    isinstance(n.targets[0], ast.Name) and \
+                    isinstance(n.value, ast.Call) and \
+                    isinstance(n.value.func, ast.Name) and \
+                    n.value.func.id == "next" and \
+                    self._enclosing_loop(n) is not None:
+                tainted[n.targets[0].id] = n
+        for n in self.nodes:
+            if isinstance(n, (ast.ListComp, ast.SetComp, ast.DictComp,
+                              ast.GeneratorExp)):
+                for gen in n.generators:
+                    src = None
+                    it = gen.iter
+                    if isinstance(it, ast.Call) and \
+                            isinstance(it.func, ast.Attribute) and \
+                            it.func.attr in ("items", "values"):
+                        src = _chain(it.func.value)
+                    elif isinstance(it, ast.Name):
+                        src = it.id
+                    if src in tainted:
+                        for el in ast.walk(gen.target):
+                            if isinstance(el, ast.Name):
+                                tainted[el.id] = tainted[src]
+        return tainted
+
+    def _inflight(self) -> set:
+        if isinstance(self.scope, ast.Module):
+            lo, hi = 1, len(self.sf.text.splitlines()) + 1
+        else:
+            lo, hi = self.scope.lineno, self.scope.end_lineno
+        names = set()
+        for a in self.sf.directives.annotations:
+            if a.kind == "mutated-inflight" and lo <= a.line <= hi:
+                names.update(a.names)
+        return names
+
+    # ----------------------------- queries ----------------------------
+
+    def _enclosing_loop(self, node):
+        best = None
+        for lp in self.loops:
+            if lp.lineno <= node.lineno and \
+                    node.lineno <= (lp.end_lineno or lp.lineno):
+                if best is None or lp.lineno > best.lineno:
+                    best = lp
+        return best
+
+    def stmt_of(self, node):
+        """Innermost SIMPLE statement containing `node` — compound
+        statements (if/for/with/try) are excluded so a `dispatch`
+        annotation inside one branch cannot leak onto calls in the
+        header test or sibling branches."""
+        best = None
+        for st in self.stmts:
+            if isinstance(st, (ast.If, ast.For, ast.AsyncFor, ast.While,
+                               ast.With, ast.AsyncWith, ast.Try)):
+                continue
+            if st.lineno <= node.lineno <= (st.end_lineno or st.lineno):
+                if best is None or st.lineno >= best.lineno:
+                    best = st
+        return best
+
+    def has_annotation(self, kind: str, stmt) -> bool:
+        if stmt is None:
+            return False
+        return bool(self.sf.directives.annotations_on(
+            kind, stmt.lineno - 1, stmt.end_lineno or stmt.lineno))
+
+
+def _dispatch_sites(sc: _Scope):
+    """Yield (call node, [arg exprs to check]) for asarray-family calls
+    and for every call inside a `# reprolint: dispatch` statement."""
+    seen = set()
+    for n in sc.nodes:
+        if not isinstance(n, ast.Call):
+            continue
+        fc = _chain(n.func)
+        if fc in ASARRAY_FNS and n.args:
+            seen.add(id(n))
+            yield n, [n.args[0]]
+    for n in sc.nodes:
+        if not isinstance(n, ast.Call) or id(n) in seen:
+            continue
+        fc = _chain(n.func)
+        if fc is not None and (fc in ASARRAY_FNS or
+                               fc.split(".")[-1] == "copy"):
+            continue
+        stmt = sc.stmt_of(n)
+        if sc.has_annotation("dispatch", stmt):
+            args = list(n.args) + [kw.value for kw in n.keywords]
+            yield n, args
+
+
+def _check_scope(sc: _Scope, findings: list) -> None:
+    emitted = set()
+
+    def emit(node, cid, message, hint):
+        key = (node.lineno, cid, message[:40])
+        if key in emitted:
+            return
+        emitted.add(key)
+        findings.append(Finding(
+            rule="RL001", name="alias-race", path=sc.sf.rel,
+            line=node.lineno, message=message, hint=hint))
+
+    for call, args in _dispatch_sites(sc):
+        for arg in args:
+            if isinstance(arg, ast.Call) and \
+                    isinstance(arg.func, ast.Attribute) and \
+                    arg.func.attr == "copy":
+                continue                      # private copy: safe
+            raw = _chain(arg)
+            if raw is None:
+                continue                      # fresh temporary: safe
+            cid = sc.canon(raw)
+            hint = (f"dispatch {raw}.copy() — jax keeps the private "
+                    f"copy alive and nobody mutates it")
+            if raw in sc.inflight or cid in sc.inflight:
+                emit(call, cid,
+                     f"'{raw}' is declared mutated-inflight for this "
+                     f"function (another code path mutates it in place "
+                     f"while this dispatch is in flight); {STORY}",
+                     hint)
+                continue
+            later = [ln for mid, ln in sc.mutations
+                     if mid == cid and ln > call.lineno]
+            if later:
+                emit(call, cid,
+                     f"'{raw}' is dispatched here and mutated in place "
+                     f"at line {min(later)}; {STORY}", hint)
+                continue
+            loop = sc._enclosing_loop(call)
+            if loop is not None:
+                carried = [ln for mid, ln in sc.mutations
+                           if mid == cid and
+                           loop.lineno <= ln <= (loop.end_lineno or ln)]
+                fresh_each_iter = any(
+                    rc in (raw, cid) and
+                    loop.lineno <= ln <= (loop.end_lineno or ln)
+                    for rc, ln in sc.rebinds)
+                if carried and not fresh_each_iter:
+                    emit(call, cid,
+                         f"'{raw}' is dispatched inside a loop that "
+                         f"mutates it in place (line {min(carried)}): "
+                         f"iteration k+1 mutates what iteration k's "
+                         f"async dispatch is still reading; {STORY}",
+                         hint)
+                    continue
+            if isinstance(arg, ast.Name) and raw in sc.producers:
+                prod = sc.producers[raw]
+                if not (sc.has_annotation("fresh-batch", prod) or
+                        sc.has_annotation("fresh-batch",
+                                          sc.stmt_of(call))):
+                    emit(call, cid,
+                         f"'{raw}' comes from an opaque producer "
+                         f"(`next(...)` at line {prod.lineno}, inside "
+                         f"a loop) — a producer that reuses a staging "
+                         f"buffer would mutate it under the in-flight "
+                         f"dispatch; {STORY}",
+                         f"dispatch {raw}.copy(), or annotate the "
+                         f"producer statement with `# reprolint: "
+                         f"fresh-batch <test enforcing the "
+                         f"freshly-allocated-batch contract>`")
+
+
+@rule("RL001", "alias-race")
+def check(project):
+    """host buffers mutated in place under an in-flight async dispatch
+    (the PR 5 zero-copy aliasing bug class)"""
+    findings: list = []
+    for sf in project.files:
+        for scope in _scopes(sf.tree):
+            _check_scope(_Scope(sf, scope), findings)
+    return findings

@@ -1,0 +1,119 @@
+"""RL002 obs-purity: `src/repro/obs/` must not import jax or numpy,
+transitively.
+
+The observability layer's no-added-syncs guarantee is structural: a
+package that cannot even import the array libraries cannot block on a
+device value. Two checks:
+
+  * DIRECT — no obs file imports jax/numpy anywhere, including inside
+    functions (a lazy import is one refactor away from the hot path);
+  * TRANSITIVE — no module reachable from obs over MODULE-LEVEL
+    repro-internal imports has a module-level jax/numpy import (a
+    fresh interpreter importing `repro.obs` must leave sys.modules
+    clean). The one sanctioned jax touchpoint is
+    `serving/devbridge.py`, which injects sync/profiler callables
+    INTO obs — the dependency arrow points the safe way.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding
+from ..registry import rule
+
+BANNED = ("jax", "numpy")
+OBS_PREFIX = "src/repro/obs/"
+OBS_MODULE = "repro.obs"
+
+
+def _banned_imports(tree):
+    """(lineno, top-level name) for every jax/numpy import anywhere in
+    the file (function bodies included)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.split(".")[0] in BANNED:
+                    yield node.lineno, a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom):
+            if node.level == 0 and node.module and \
+                    node.module.split(".")[0] in BANNED:
+                yield node.lineno, node.module.split(".")[0]
+
+
+@rule("RL002", "obs-purity")
+def check(project):
+    """repro.obs must not import jax/numpy, transitively — telemetry
+    can then never add a device sync"""
+    findings = []
+    obs_files = [sf for sf in project.files
+                 if sf.rel.startswith(OBS_PREFIX)]
+
+    # ---- direct imports, any scope --------------------------------
+    for sf in obs_files:
+        for line, name in _banned_imports(sf.tree):
+            findings.append(Finding(
+                rule="RL002", name="obs-purity", path=sf.rel, line=line,
+                message=f"repro.obs imports {name}: the telemetry layer "
+                        f"must stay import-pure so it can never add a "
+                        f"device sync (docs/observability.md overhead "
+                        f"contract)",
+                hint="inject device capabilities through "
+                     "serving/devbridge.py instead of importing the "
+                     "array library"))
+
+    # ---- transitive closure over module-level imports -------------
+    edges = project.import_edges()
+    # module-level banned imports per project module
+    mod_banned = {}
+    for sf in project.files:
+        if sf.module:
+            hit = [(t, ln) for t, ln in edges.get(sf.module, ())
+                   if t in BANNED]
+            if hit:
+                mod_banned[sf.module] = hit
+    for sf in obs_files:
+        if not sf.module or not sf.module.startswith(OBS_MODULE):
+            continue
+        # BFS recording the chain for the finding's story
+        chain = {sf.module: None}
+        frontier = [sf.module]
+        while frontier:
+            nxt = []
+            for m in frontier:
+                for t, ln in sorted(edges.get(m, ())):
+                    if t in BANNED:
+                        if m == sf.module:
+                            continue    # direct: reported above
+                        path_back = []
+                        cur = m
+                        while cur is not None:
+                            path_back.append(cur)
+                            cur = chain[cur]
+                        via = " -> ".join(reversed(path_back))
+                        first_ln = _first_edge_line(edges, sf.module,
+                                                    path_back[-2]
+                                                    if len(path_back) > 1
+                                                    else m)
+                        findings.append(Finding(
+                            rule="RL002", name="obs-purity",
+                            path=sf.rel, line=first_ln,
+                            message=f"{sf.module} transitively imports "
+                                    f"{t} via {via} -> {t}: importing "
+                                    f"repro.obs must not pull the "
+                                    f"array libraries into "
+                                    f"sys.modules",
+                            hint="break the edge or make the heavy "
+                                 "import function-local in the "
+                                 "intermediate module"))
+                    elif t.startswith("repro.") and t not in chain:
+                        chain[t] = m
+                        nxt.append(t)
+            frontier = nxt
+    return findings
+
+
+def _first_edge_line(edges, src_module, towards):
+    for t, ln in edges.get(src_module, ()):
+        if t == towards:
+            return ln
+    return 1

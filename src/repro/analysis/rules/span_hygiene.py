@@ -1,0 +1,86 @@
+"""RL004 span-hygiene: telemetry `span(...)` bodies stay host-only.
+
+PR 7's overhead contract: enabling telemetry must never ADD a device
+sync — spans may only stamp perf_counter around host work that already
+existed. A `block_until_ready` / `.item()` / `device_get` inside a
+`with ...span(...):` body would bill device time to a host phase (and
+serialize the overlap); a direct `pallas_call` inside one would hide a
+kernel construction+dispatch in what reads as pure bookkeeping.
+
+`device_span(...)` bodies are exempt — that bracket exists to measure
+the device, and its sync is the injected devbridge capability, gated
+off in serving mode. Nested function definitions inside a span body
+are skipped (they execute elsewhere).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding
+from ..registry import rule
+
+SYNC_IDENTS = ("block_until_ready", "device_get")
+
+
+def _span_withs(tree):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                ctx = item.context_expr
+                if isinstance(ctx, ast.Call) and \
+                        isinstance(ctx.func, ast.Attribute) and \
+                        ctx.func.attr == "span":
+                    yield node
+                    break
+
+
+def _body_nodes(with_node):
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef,
+                                  ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            yield child
+            yield from walk(child)
+    for stmt in with_node.body:
+        yield stmt
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue            # nested def at body top level: executes
+        yield from walk(stmt)   # elsewhere, like any deeper nested def
+
+
+@rule("RL004", "span-hygiene")
+def check(project):
+    """telemetry span bodies stay host-only: no device sync or
+    pallas_call dispatch inside `with ...span(...)`"""
+    findings = []
+    seen = set()
+    for sf in project.files:
+        for w in _span_withs(sf.tree):
+            for node in _body_nodes(w):
+                bad = None
+                if isinstance(node, ast.Name) and \
+                        node.id in SYNC_IDENTS + ("pallas_call",):
+                    bad = node.id
+                elif isinstance(node, ast.Attribute) and \
+                        node.attr in SYNC_IDENTS + ("pallas_call",):
+                    bad = node.attr
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item" and not node.args:
+                    bad = ".item()"
+                if bad and (sf.rel, node.lineno, bad) not in seen:
+                    seen.add((sf.rel, node.lineno, bad))
+                    findings.append(Finding(
+                        rule="RL004", name="span-hygiene", path=sf.rel,
+                        line=node.lineno,
+                        message=f"{bad} inside a telemetry span body: "
+                                f"spans bracket host work only — a "
+                                f"sync or kernel dispatch here bills "
+                                f"device time to a host phase and "
+                                f"breaks the no-added-syncs contract "
+                                f"(docs/observability.md)",
+                        hint="move the device work outside the span, "
+                             "or use device_span for a deliberate "
+                             "device bracket"))
+    return findings

@@ -1,0 +1,136 @@
+"""reprolint comment directives: suppressions and rule annotations.
+
+One grammar, parsed from `tokenize` comment tokens (so strings and
+docstrings can never fake a directive):
+
+    # reprolint: disable=RL001[,RL003] <justification>
+    # reprolint: fresh-batch <justification>
+    # reprolint: dispatch [note]
+    # reprolint: mutated-inflight=name1,name2 [note]
+
+* `disable` suppresses findings of the listed rules anchored on the
+  same line or the immediately following line (put the comment on the
+  offending line, or alone on the line above a multi-line statement).
+  The justification is MANDATORY and must carry at least two words —
+  an unjustified or stale (never-matching) suppression is itself a
+  finding (RL000), so the tree cannot quietly accrete waivers.
+* `fresh-batch` declares the producer contract RL001 understands: the
+  annotated `x = next(producer)` statement's producer returns freshly
+  allocated arrays every call (never a reused staging buffer), so its
+  batches may ship through `jnp.asarray` uncopied. Justification
+  mandatory — name the test that enforces the contract.
+* `dispatch` marks a statement as an async device dispatch whose
+  direct numpy arguments RL001 must check (jitted calls taking numpy
+  args without a jnp.asarray wrapper are invisible otherwise).
+* `mutated-inflight` declares, for the enclosing function, buffer
+  names (dotted chains allowed: `loop.greedy`) that some OTHER code
+  path mutates in place while this function's dispatches are in
+  flight — RL001 then requires a `.copy()` on every dispatch of them,
+  with no intra-function mutation evidence needed.
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+
+DIRECTIVE_RE = re.compile(r"#\s*reprolint:\s*(.*)$")
+RULE_ID_RE = re.compile(r"^RL\d{3}$")
+MIN_JUSTIFICATION_WORDS = 2
+
+
+@dataclass
+class Disable:
+    line: int
+    rules: tuple
+    justification: str
+    used: set = field(default_factory=set)   # rule ids that matched
+
+
+@dataclass
+class Annotation:
+    line: int
+    kind: str           # "fresh-batch" | "dispatch" | "mutated-inflight"
+    names: tuple = ()   # mutated-inflight buffer chains
+    note: str = ""
+
+
+@dataclass
+class Directives:
+    disables: list = field(default_factory=list)
+    annotations: list = field(default_factory=list)
+    errors: list = field(default_factory=list)   # (line, message)
+
+    def disable_for(self, rule: str, line: int):
+        """Suppression covering a finding of `rule` at `line`: same
+        line, or a directive on the line directly above."""
+        for d in self.disables:
+            if rule in d.rules and line in (d.line, d.line + 1):
+                return d
+        return None
+
+    def annotations_on(self, kind: str, lo: int, hi: int) -> list:
+        """Annotations of `kind` attached to any line in [lo, hi] —
+        statement attachment for fresh-batch/dispatch."""
+        return [a for a in self.annotations
+                if a.kind == kind and lo <= a.line <= hi + 1]
+
+
+def _parse_one(line: int, body: str, out: Directives) -> None:
+    head, _, rest = body.strip().partition(" ")
+    rest = rest.strip()
+    if head.startswith("disable="):
+        rules = tuple(r.strip() for r in head[len("disable="):].split(",")
+                      if r.strip())
+        bad = [r for r in rules if not RULE_ID_RE.match(r) or r == "RL000"]
+        if not rules or bad:
+            out.errors.append((line, f"disable lists no valid rule ids "
+                                     f"(got {rules or '(none)'})"))
+            return
+        if len(rest.split()) < MIN_JUSTIFICATION_WORDS:
+            out.errors.append(
+                (line, f"unjustified suppression of {','.join(rules)} — "
+                       f"say WHY the invariant holds here "
+                       f"(>= {MIN_JUSTIFICATION_WORDS} words)"))
+            return
+        out.disables.append(Disable(line, rules, rest))
+    elif head == "fresh-batch":
+        if len(rest.split()) < MIN_JUSTIFICATION_WORDS:
+            out.errors.append(
+                (line, "fresh-batch waives RL001 for an opaque producer "
+                       "— justify it (name the test enforcing the "
+                       "freshly-allocated-batch contract)"))
+            return
+        out.annotations.append(Annotation(line, "fresh-batch", note=rest))
+    elif head == "dispatch":
+        out.annotations.append(Annotation(line, "dispatch", note=rest))
+    elif head.startswith("mutated-inflight="):
+        names = tuple(n.strip()
+                      for n in head[len("mutated-inflight="):].split(",")
+                      if n.strip())
+        if not names:
+            out.errors.append((line, "mutated-inflight lists no buffer "
+                                     "names"))
+            return
+        out.annotations.append(Annotation(line, "mutated-inflight",
+                                          names=names, note=rest))
+    else:
+        out.errors.append((line, f"unknown reprolint directive "
+                                 f"{head!r} (disable= / fresh-batch / "
+                                 f"dispatch / mutated-inflight=)"))
+
+
+def parse_directives(source: str) -> Directives:
+    out = Directives()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = DIRECTIVE_RE.search(tok.string)
+            if m:
+                _parse_one(tok.start[0], m.group(1), out)
+    except tokenize.TokenError:
+        pass    # the ast parse reports the syntax error with context
+    return out

@@ -634,6 +634,7 @@ class Engine:
         already timed — no device sync is added."""
         if obs is None:
             obs = _OBS_OFF
+        # reprolint: mutated-inflight=greedy,temp,top_k,top_p admit() rewrites the decode configs while dispatches are in flight
         B = self.slots
         committed: dict[int, int] = {}
         pending = set(pending)
@@ -649,9 +650,11 @@ class Engine:
             with obs.span("opportunistic"):
                 keys = self._step_keys(seeds, salts, 0)
                 prop = np.asarray(self._sample_plain(
-                    logits, jnp.asarray(keys), jnp.asarray(greedy),
-                    jnp.asarray(temp), jnp.asarray(top_k),
-                    jnp.asarray(top_p)))
+                    logits, jnp.asarray(keys),
+                    jnp.asarray(greedy.copy()),
+                    jnp.asarray(temp.copy()),
+                    jnp.asarray(top_k.copy()),
+                    jnp.asarray(top_p.copy())))
                 ctx.clean = False   # committed ids came from the
                                     # unmasked proposal stream
                 for b in list(pending):
@@ -702,7 +705,7 @@ class Engine:
                 # by admit(), so they ship private copies (the same
                 # zero-copy aliasing hazard class as the paged feed).
                 if bool(np.all(greedy)):
-                    ctx.masked, ctx.ids, ctx.ok = self._fused_greedy(
+                    ctx.masked, ctx.ids, ctx.ok = self._fused_greedy(  # reprolint: dispatch
                         logits, self._store_cat, rows, cd, eos,
                         need_mask)
                     cost_args = (logits, self._store_cat, rows, cd,
@@ -711,7 +714,7 @@ class Engine:
                 else:
                     keys = self._step_keys(seeds, salts, 1)
                     noise = self._noise_take(keys)
-                    ctx.masked, ctx.ids, ctx.ok = self._fused_sample(
+                    ctx.masked, ctx.ids, ctx.ok = self._fused_sample(  # reprolint: dispatch
                         logits, self._store_cat, rows, cd, eos,
                         need_mask, greedy.copy(), temp.copy(),
                         top_k.copy(), top_p.copy(), noise)
@@ -1158,7 +1161,12 @@ class Engine:
         masked = np.asarray(masked, np.float32)
         for attempt in range(4):
             key, sub = jax.random.split(key)
-            nxt = self._select(st, jnp.asarray(masked), sub)
+            # masked is a long-lived host buffer mutated in place below
+            # (the demote line) while jnp.asarray may zero-copy alias it
+            # — safe today only because _select syncs before returning.
+            # Ship a private copy, same invariant as every other
+            # dispatch site (RL001).
+            nxt = self._select(st, jnp.asarray(masked.copy()), sub)
             if masked[0, nxt] <= NEG_INF / 2:
                 break
             if nxt == EOS_ID or gc.is_valid_extension(text, nxt):

@@ -566,15 +566,14 @@ class DenseMode(_ModeBase):
             # the paged feed (see PagedMode.step)
             with tele.device_span("forward") as dv:
                 with tele.span("forward"):
+                    tok_dev = jnp.asarray(self.cur_tok.copy())
+                    pos_dev = jnp.asarray(loop.feed_pos.copy())
                     logits, self.caches = eng._decode(
-                        eng.params, self.caches,
-                        jnp.asarray(self.cur_tok.copy()),
-                        jnp.asarray(loop.feed_pos.copy()))
+                        eng.params, self.caches, tok_dev, pos_dev)
                 dv.done(logits)     # host span stays dispatch-only; the
                 # device bracket blocks here in bench/profile mode
             eng._note_jit_cost(tele, "forward", eng._decode, eng.params,
-                               self.caches, jnp.asarray(self.cur_tok),
-                               jnp.asarray(loop.feed_pos))
+                               self.caches, tok_dev, pos_dev)
         loop.c_decode_steps.inc()
         for b in active:
             loop.slot_state[b].steps += 1
@@ -728,17 +727,17 @@ class PagedMode(_ModeBase):
             # chunked-prefill runs; see CHANGES.md PR 5 addendum.
             with loop.tele.device_span("forward") as dv:
                 with loop.tele.span("forward"):
+                    pos_dev = jnp.asarray(loop.feed_pos.copy())
                     logits, self.caches = eng._span_feed_paged(
                         eng.params, self.caches, jnp.asarray(tokens),
-                        jnp.asarray(loop.feed_pos.copy()),
-                        jnp.asarray(fmask), jnp.asarray(page_tab),
-                        jnp.asarray(sel))
+                        pos_dev, jnp.asarray(fmask),
+                        jnp.asarray(page_tab), jnp.asarray(sel))
                 dv.done(logits)
             eng._note_jit_cost(
                 loop.tele, "forward", eng._span_feed_paged, eng.params,
-                self.caches, jnp.asarray(tokens),
-                jnp.asarray(loop.feed_pos), jnp.asarray(fmask),
-                jnp.asarray(page_tab), jnp.asarray(sel))
+                self.caches, jnp.asarray(tokens), pos_dev,
+                jnp.asarray(fmask), jnp.asarray(page_tab),
+                jnp.asarray(sel))
             loop.c_decode_steps.inc()
             for b in live:
                 st = loop.slot_state[b]
@@ -838,6 +837,7 @@ class SpecMode(_ModeBase):
         B = loop.B
         slot_state = loop.slot_state
         feed_pos = loop.feed_pos
+        # reprolint: mutated-inflight=loop.greedy,loop.temp,loop.top_k,loop.top_p admit() rewrites the decode configs while the span dispatch is in flight
 
         def commit_one(st, token):
             st.steps += 1
@@ -989,7 +989,7 @@ class SpecMode(_ModeBase):
                 keys = eng._span_keys(loop.seeds, salts, S)
                 # per-step arrays go in as numpy (fresh allocations);
                 # the admit()-mutated decode configs ship copies
-                masked, ids, ok = eng._span_mask_select(
+                masked, ids, ok = eng._span_mask_select(  # reprolint: dispatch
                     logits, eng._store_cat, rows, cdm, eosm, consm,
                     loop.greedy.copy(), loop.temp.copy(),
                     loop.top_k.copy(), loop.top_p.copy(), keys)

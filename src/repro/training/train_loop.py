@@ -40,12 +40,15 @@ def train(model, params, data_iter, steps: int,
     result = TrainResult()
     t0 = time.time()
     for i in range(steps):
-        batch = next(data_iter)
         # jnp.asarray may zero-copy alias host memory on CPU (the hazard
         # class fixed in serving/loop.py): safe here ONLY because every
         # pipeline's __next__ returns freshly allocated arrays, never a
-        # reused staging buffer — tests/test_aliasing_guard.py holds the
-        # pipelines to that contract
+        # reused staging buffer. The fresh-batch annotation is the
+        # machine-readable form of that contract — RL001 waives the
+        # opaque-producer check on its strength, and
+        # tests/test_aliasing_guard.py holds the pipelines to it.
+        # reprolint: fresh-batch tests/test_aliasing_guard.py pipeline-freshness tests enforce the contract
+        batch = next(data_iter)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         if i % log_every == 0 or i == steps - 1:

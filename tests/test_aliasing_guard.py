@@ -1,79 +1,123 @@
 """Zero-copy aliasing guards.
 
-On CPU, `jnp.asarray` may zero-copy alias host numpy memory. A host
-buffer that is mutated in place after being shipped to an ASYNC device
-computation is then mutated under the computation's feet — root-caused
-in PR 5 from a 5.47-magnitude logits drift in chunked-prefill runs.
-Two guards hold the line:
+On CPU, `jnp.asarray` (and a jitted call taking numpy args directly)
+may zero-copy alias host numpy memory. A host buffer that is mutated in
+place after being shipped to an ASYNC device computation is then
+mutated under the computation's feet — root-caused in PR 5 from a
+5.47-magnitude logits drift in chunked-prefill runs.
+
+The source-level guards here are reprolint RL001 (src/repro/analysis/),
+the same rule `make lint` runs over the whole tree — there is exactly
+ONE implementation of the invariant. These tests keep the original
+failure stories as regression tests:
 
  1. the serving step-loop dispatch sites must keep shipping PRIVATE
     copies of the long-lived, mutated-in-place cursor arrays
-    (cur_tok / feed_pos) — asserted against the source so a cleanup
-    that "removes the redundant .copy()" fails loudly with the story;
- 2. the training pipelines must return freshly allocated batches (the
+    (cur_tok / feed_pos) — proven by running RL001 against an overlay
+    where the .copy() has been "cleaned up", which must fail loudly
+    with the PR 5 story;
+ 2. the fused mask+select dispatch must keep copying the admit()-
+    mutated decode-config arrays (greedy/temp/top_k/top_p) — enforced
+    through the `# reprolint: mutated-inflight=` declarations on the
+    dispatch functions;
+ 3. the training pipelines must return freshly allocated batches (the
     training loop ships them with a bare jnp.asarray on the strength
-    of that contract — see training/data.py).
+    of its `# reprolint: fresh-batch` contract — see training/data.py).
 """
-import re
+from pathlib import Path
 
 import numpy as np
 
+from repro.analysis import lint
 
-def _loop_source():
-    import inspect
-
-    import repro.serving.loop as loop
-    return inspect.getsource(loop)
-
-
-def _engine_source():
-    import inspect
-
-    import repro.serving.engine as engine
-    return inspect.getsource(engine)
+ROOT = Path(__file__).resolve().parents[1]
+LOOP = "src/repro/serving/loop.py"
+ENGINE = "src/repro/serving/engine.py"
+TRAIN = "src/repro/training/train_loop.py"
 
 
-def test_step_loop_ships_copies_of_mutated_cursors():
-    """Every decode/feed dispatch that passes a long-lived, in-place
-    mutated cursor array through jnp.asarray must pass a .copy().
-
-    DenseMode.step mutates cur_tok and feed_pos right after the resolve
-    sync; PagedMode/SpecMode mutate feed_pos during prefill-drain steps
-    that never sync. If any of these sites loses its .copy(), the async
-    computation can read the NEXT step's cursors."""
-    src = _loop_source()
-    # dense decode: both cursors copied
-    assert re.search(r"jnp\.asarray\(self\.cur_tok\.copy\(\)\)", src), \
-        "DenseMode dispatch must ship cur_tok.copy()"
-    # feed_pos copies: dense decode + paged span feed + spec span feed
-    n_feed = len(re.findall(r"jnp\.asarray\((?:loop\.)?feed_pos\.copy\(\)\)",
-                            src))
-    assert n_feed >= 3, (
-        f"expected >= 3 feed_pos.copy() dispatch sites in serving/loop.py "
-        f"(dense, paged, spec), found {n_feed} — see the aliasing note at "
-        f"the paged span feed")
-    # the explanatory comment must survive too (it carries the root cause)
-    assert "zero-copy alias" in src
+def _rl001(path, overlay=None):
+    return lint(ROOT, paths=(path,), select=["RL001"], overlay=overlay)
 
 
-def test_fused_dispatch_ships_copies_of_decode_configs():
-    """The fused mask+select dispatch passes NUMPY arrays into jitted
+def _overlay(rel, old, new, count=0):
+    src = (ROOT / rel).read_text()
+    assert old in src, f"expected {old!r} in {rel} — did the site move?"
+    return {rel: src.replace(old, new) if not count
+            else src.replace(old, new, count)}
+
+
+# ===================== serving tree clean at HEAD ======================
+
+def test_serving_dispatch_sites_clean_at_head():
+    """RL001 over the whole serving package: every dispatch of a
+    mutated-in-place buffer ships a private copy today."""
+    report = _rl001("src/repro/serving")
+    assert report.ok, report.render_human()
+
+
+# ============ deleting a .copy() fails with the PR 5 story =============
+
+def test_deleting_feed_pos_copy_at_the_paged_feed_fires():
+    """PagedMode's chunked-prefill span feed mutates feed_pos right
+    after dispatch WITHOUT a sync. Removing the .copy() must re-flag
+    the exact PR 5 bug."""
+    ov = _overlay(LOOP, "jnp.asarray(loop.feed_pos.copy())",
+                  "jnp.asarray(loop.feed_pos)")
+    report = _rl001(LOOP, overlay=ov)
+    hits = report.by_rule("RL001")
+    assert hits, "RL001 must fire when the feed_pos copy is deleted"
+    assert all(f.path == LOOP for f in hits)
+    assert any("feed_pos" in f.message and "PR 5" in f.message
+               for f in hits), [f.message for f in hits]
+
+
+def test_deleting_cur_tok_copy_at_the_dense_decode_fires():
+    """DenseMode.step mutates cur_tok after the resolve; the dispatch
+    must keep its private copy."""
+    ov = _overlay(LOOP, "jnp.asarray(self.cur_tok.copy())",
+                  "jnp.asarray(self.cur_tok)")
+    report = _rl001(LOOP, overlay=ov)
+    assert any("cur_tok" in f.message for f in report.by_rule("RL001")), \
+        report.render_human()
+
+
+def test_deleting_spec_feed_pos_copy_fires():
+    """SpecMode's span feed has the same prefill-drain hazard."""
+    ov = _overlay(LOOP, "jnp.asarray(feed_pos.copy())",
+                  "jnp.asarray(feed_pos)")
+    report = _rl001(LOOP, overlay=ov)
+    assert any("feed_pos" in f.message
+               for f in report.by_rule("RL001")), report.render_human()
+
+
+# ====== admit()-mutated decode configs: the mutated-inflight wall ======
+
+def test_deleting_a_config_copy_in_the_fused_dispatch_fires():
+    """The fused mask+sample dispatch passes NUMPY arrays into jitted
     calls directly (the jnp.asarray round-trip costs ~25x the dispatch
     on CPU), which widens the aliasing hazard: jit may zero-copy alias
-    the host buffer too. Per-step arrays (rows, cd, eos, need_mask,
-    keys, noise) are freshly allocated each step and safe; the
-    long-lived decode-config arrays (greedy/temp/top_k/top_p) are
-    mutated in place by admit() and MUST ship private copies — in the
-    engine's sampled dispatch and in SpecMode's span dispatch."""
-    esrc = _engine_source()
-    for arr in ("greedy", "temp", "top_k", "top_p"):
-        assert re.search(rf"\b{arr}\.copy\(\)", esrc), (
-            f"engine _select_dispatch must ship {arr}.copy() — admit() "
-            f"mutates it in place while the device call is in flight")
-    lsrc = _loop_source()
-    for arr in ("greedy", "temp", "top_k", "top_p"):
-        assert re.search(rf"loop\.{arr}\.copy\(\)", lsrc), (
-            f"SpecMode span dispatch must ship loop.{arr}.copy()")
+    the host buffer too. The long-lived decode-config arrays
+    (greedy/temp/top_k/top_p) are mutated in place by admit() while the
+    dispatch is in flight — `# reprolint: mutated-inflight=` declares
+    that, so every un-copied dispatch of them is a finding."""
+    ov = _overlay(ENGINE,
+                  "need_mask, greedy.copy(), temp.copy(),\n"
+                  "                        top_k.copy(), top_p.copy(), noise)",
+                  "need_mask, greedy, temp.copy(),\n"
+                  "                        top_k.copy(), top_p.copy(), noise)")
+    report = _rl001(ENGINE, overlay=ov)
+    hits = report.by_rule("RL001")
+    assert any("greedy" in f.message and "mutated-inflight" in f.message
+               for f in hits), report.render_human()
+
+
+def test_deleting_a_config_copy_in_the_spec_span_dispatch_fires():
+    ov = _overlay(LOOP, "loop.greedy.copy(), loop.temp.copy()",
+                  "loop.greedy, loop.temp.copy()")
+    report = _rl001(LOOP, overlay=ov)
+    assert any("loop.greedy" in f.message
+               for f in report.by_rule("RL001")), report.render_human()
 
 
 def test_fused_dispatch_safe_under_config_mutation():
@@ -117,9 +161,32 @@ def test_fused_dispatch_safe_under_config_mutation():
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(want))
 
 
+# ============== training: the fresh-batch contract =====================
+
+def test_training_tree_clean_under_fresh_batch_contract():
+    """RL001 over the training/launch/benchmark paths (the ROADMAP
+    aliasing-audit sweep, mechanized): clean at HEAD."""
+    for path in ("src/repro/training", "src/repro/launch", "benchmarks"):
+        report = _rl001(path)
+        assert report.ok, report.render_human()
+
+
+def test_removing_the_fresh_batch_annotation_fires():
+    """The training loop ships `next(data_iter)` batches with a bare
+    jnp.asarray on the strength of the `# reprolint: fresh-batch`
+    contract. Without the annotation the producer is opaque and RL001
+    must demand a copy."""
+    ov = _overlay(TRAIN, "# reprolint: fresh-batch", "# (contract gone)")
+    report = _rl001(TRAIN, overlay=ov)
+    hits = report.by_rule("RL001")
+    assert any("opaque producer" in f.message for f in hits), \
+        report.render_human()
+
+
 def test_grammar_pipeline_batches_are_fresh(grammar_bundle, tokenizer):
     """Successive GrammarDataPipeline batches must not share memory:
-    the training loop ships them with a bare jnp.asarray."""
+    the training loop ships them with a bare jnp.asarray. This is the
+    runtime half of the fresh-batch contract the annotation names."""
     from repro.training.data import GrammarDataPipeline
     g, _, _, _ = grammar_bundle("calc")
     pipe = GrammarDataPipeline(g, tokenizer, seq_len=16, batch_size=2,

@@ -392,16 +392,32 @@ def test_enabled_span_overhead_under_budget():
 
 
 # ================================ purity ===============================
+# The source-level purity/sync invariants are reprolint rules
+# (src/repro/analysis/ — the same implementation `make lint` runs); the
+# tests here keep the original failure stories as regression tests and
+# prove each rule still FIRES on the forbidden edit via source overlays.
 
-_BANNED_IMPORT = re.compile(r"^\s*(import|from)\s+(jax|numpy)\b", re.M)
+def _lint(paths, select, overlay=None):
+    from repro.analysis import lint
+    return lint(SRC.parent, paths=paths, select=select, overlay=overlay)
 
 
 def test_obs_package_never_imports_jax_or_numpy():
-    obs_dir = SRC / "repro" / "obs"
-    for py in sorted(obs_dir.glob("*.py")):
-        assert not _BANNED_IMPORT.search(py.read_text()), py
+    """RL002 obs-purity: repro.obs must not import jax/numpy,
+    transitively over module-level imports — the structural proof
+    telemetry can never add a device sync."""
+    report = _lint(("src/repro/obs", "src/repro/serving"), ["RL002"])
+    assert report.ok, report.render_human()
+    # adding the import back must fail with the purity story
+    bad = "import numpy as np\n\n" + \
+        (SRC / "repro" / "obs" / "registry.py").read_text()
+    report = _lint(("src/repro/obs",), ["RL002"],
+                   overlay={"src/repro/obs/registry.py": bad})
+    hits = report.by_rule("RL002")
+    assert hits and any("numpy" in f.message for f in hits), \
+        report.render_human()
     # and transitively: a fresh interpreter importing repro.obs must not
-    # end up with jax or numpy in sys.modules
+    # end up with jax or numpy in sys.modules (runtime half of RL002)
     code = ("import sys; import repro.obs; "
             "bad = [m for m in ('jax', 'numpy') if m in sys.modules]; "
             "sys.exit(1 if bad else 0)")
@@ -412,21 +428,46 @@ def test_obs_package_never_imports_jax_or_numpy():
 
 
 def test_serving_loop_has_no_explicit_device_sync():
-    """Telemetry must not have smuggled a sync into the step loop: the
-    loop and engine sources contain no block_until_ready / .item() /
-    device_get — timestamps only bracket host-side work."""
-    for mod in ("loop", "engine", "async_engine", "server"):
-        src = (SRC / "repro" / "serving" / f"{mod}.py").read_text()
-        for pat in ("block_until_ready", ".item()", "device_get"):
-            assert pat not in src, (mod, pat)
-    # devbridge.py is the ONE deliberate exception: it binds
-    # block_until_ready INTO the obs layer as an injected capability
-    # (invoked only in bench/profile mode — tests/test_devtime.py proves
-    # serving mode never calls it). No other serving module may sync.
-    serving = SRC / "repro" / "serving"
-    syncful = sorted(p.name for p in serving.glob("*.py")
-                     if "block_until_ready" in p.read_text())
-    assert syncful == ["devbridge.py"]
+    """RL003 sync-confinement: telemetry must not have smuggled a sync
+    into the step loop — no block_until_ready / .item() / device_get in
+    the serving package; devbridge.py is the ONE deliberate exception
+    (it binds block_until_ready INTO the obs layer as an injected
+    capability, invoked only in bench/profile mode —
+    tests/test_devtime.py proves serving mode never calls it)."""
+    report = _lint(("src/repro/serving", "src/repro/obs"), ["RL003"])
+    assert report.ok, report.render_human()
+    # devbridge really is the sole block_until_ready site (the rule
+    # would only prove absence elsewhere, not presence there)
+    bridge = (SRC / "repro" / "serving" / "devbridge.py").read_text()
+    assert "block_until_ready" in bridge
+    # smuggling a sync into the loop must fail with the confinement story
+    loop_rel = "src/repro/serving/loop.py"
+    src = (SRC / "repro" / "serving" / "loop.py").read_text()
+    bad = src.replace("loop.c_decode_steps.inc()",
+                      "jax.block_until_ready(logits); "
+                      "loop.c_decode_steps.inc()", 1)
+    assert bad != src
+    report = _lint((loop_rel,), ["RL003"], overlay={loop_rel: bad})
+    hits = report.by_rule("RL003")
+    assert hits and any("devbridge" in f.message for f in hits), \
+        report.render_human()
+
+
+def test_span_bodies_stay_host_only():
+    """RL004 span-hygiene: a device sync inside a telemetry span body
+    would bill device time to a host phase and break the no-added-syncs
+    contract. Clean at HEAD; a sync smuggled into a span body fires."""
+    report = _lint(("src", "benchmarks"), ["RL004"])
+    assert report.ok, report.render_human()
+    loop_rel = "src/repro/serving/loop.py"
+    src = (SRC / "repro" / "serving" / "loop.py").read_text()
+    bad = src.replace(
+        "with tele.span(\"forward\"):",
+        "with tele.span(\"forward\"):\n"
+        "                    jax.block_until_ready(self.caches)", 1)
+    assert bad != src
+    report = _lint((loop_rel,), ["RL004"], overlay={loop_rel: bad})
+    assert report.by_rule("RL004"), report.render_human()
 
 
 # ======================= identity: telemetry off =======================

@@ -1,0 +1,565 @@
+"""reprolint (src/repro/analysis/) — the analyzer's own test suite.
+
+Three layers:
+
+  * **fixtures** — for each rule RL001–RL005, minimal snippets where
+    the rule must FIRE (positive) and near-miss variants where it must
+    stay QUIET (negative), injected as virtual overlay files so nothing
+    touches disk;
+  * **suppressions** — `# reprolint: disable=` parsing, mandatory
+    justifications, staleness detection (RL000), and the annotation
+    grammar (fresh-batch / dispatch / mutated-inflight);
+  * **whole tree** — `lint(ROOT)` is clean at HEAD (zero unsuppressed
+    findings: the exact gate `make lint` / CI runs) and stays inside
+    the <10 s runtime budget that keeps it a cheap gate.
+"""
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from repro.analysis import DEFAULT_PATHS, RULES, lint
+from repro.analysis.cli import main as cli_main
+from repro.analysis.project import Project, module_name
+from repro.analysis.suppress import parse_directives
+
+ROOT = Path(__file__).resolve().parents[1]
+FX = "src/repro/_fx"           # fixture namespace: no on-disk files
+
+
+def run_fixture(select, overlay):
+    """Lint ONLY the virtual fixture files (scan path matches nothing
+    on disk; overlay keys become virtual files)."""
+    return lint(ROOT, paths=(FX,), select=select, overlay=overlay)
+
+
+# ========================= RL001 alias-race ============================
+
+def _rl001(src):
+    body = "import numpy as np\nimport jax.numpy as jnp\n\n" + src
+    return run_fixture(["RL001"], {f"{FX}/case.py": body})
+
+
+def test_rl001_fires_on_mutation_after_dispatch():
+    r = _rl001(
+        "def f(buf):\n"
+        "    out = jnp.asarray(buf)\n"
+        "    buf[0] = 1\n"
+        "    return out\n")
+    assert len(r.by_rule("RL001")) == 1
+    f = r.by_rule("RL001")[0]
+    assert "mutated in place" in f.message and "PR 5" in f.message
+    assert ".copy()" in f.hint
+
+
+def test_rl001_quiet_when_copy_shipped():
+    r = _rl001(
+        "def f(buf):\n"
+        "    out = jnp.asarray(buf.copy())\n"
+        "    buf[0] = 1\n"
+        "    return out\n")
+    assert r.ok, r.render_human()
+
+
+def test_rl001_quiet_when_mutation_precedes_dispatch():
+    # near-miss: the mutation is BEFORE the dispatch, no loop — the
+    # buffer is never touched while the computation is in flight
+    r = _rl001(
+        "def f(buf):\n"
+        "    buf[0] = 1\n"
+        "    return jnp.asarray(buf)\n")
+    assert r.ok, r.render_human()
+
+
+def test_rl001_quiet_on_fresh_temporaries():
+    r = _rl001(
+        "def f(buf):\n"
+        "    a = jnp.asarray(buf + 1)\n"          # computed: fresh
+        "    b = jnp.asarray(np.zeros(4))\n"      # allocation call
+        "    buf[0] = 1\n"
+        "    return a, b\n")
+    assert r.ok, r.render_human()
+
+
+def test_rl001_fires_on_loop_carried_mutation():
+    r = _rl001(
+        "def f(n):\n"
+        "    buf = np.zeros(4)\n"
+        "    for i in range(n):\n"
+        "        buf[0] = i\n"
+        "        yield jnp.asarray(buf)\n")
+    hits = r.by_rule("RL001")
+    assert len(hits) == 1 and "iteration k+1" in hits[0].message
+
+
+def test_rl001_quiet_when_loop_rebinds_fresh_buffer():
+    # near-miss: the buffer is reallocated every iteration, so the
+    # mutation touches a NEW object, never the dispatched one
+    r = _rl001(
+        "def f(n):\n"
+        "    for i in range(n):\n"
+        "        buf = np.zeros(4)\n"
+        "        buf[0] = i\n"
+        "        yield jnp.asarray(buf)\n")
+    assert r.ok, r.render_human()
+
+
+def test_rl001_sees_through_aliases():
+    r = _rl001(
+        "def f(buf):\n"
+        "    view = buf\n"
+        "    out = jnp.asarray(view)\n"
+        "    buf[0] = 1\n"
+        "    return out\n")
+    assert len(r.by_rule("RL001")) == 1
+
+
+def test_rl001_fires_on_mutator_methods_and_copyto():
+    r = _rl001(
+        "def f(buf, other):\n"
+        "    a = jnp.asarray(buf)\n"
+        "    buf.fill(0)\n"
+        "    b = jnp.asarray(other)\n"
+        "    np.copyto(other, a)\n"
+        "    return a, b\n")
+    assert len(r.by_rule("RL001")) == 2
+
+
+def test_rl001_fires_on_mutated_inflight_declaration():
+    r = _rl001(
+        "def f(cfg):\n"
+        "    # reprolint: mutated-inflight=cfg admit() rewrites it\n"
+        "    return jnp.asarray(cfg)\n")
+    hits = r.by_rule("RL001")
+    assert len(hits) == 1 and "mutated-inflight" in hits[0].message
+
+
+def test_rl001_mutated_inflight_satisfied_by_copy():
+    r = _rl001(
+        "def f(cfg):\n"
+        "    # reprolint: mutated-inflight=cfg admit() rewrites it\n"
+        "    return jnp.asarray(cfg.copy())\n")
+    assert r.ok, r.render_human()
+
+
+def test_rl001_dispatch_annotation_reveals_bare_jit_calls():
+    # a jitted call taking numpy args directly is invisible without the
+    # annotation (near-miss: same code, no annotation -> quiet)
+    bare = (
+        "def f(fn, cfg):\n"
+        "    out = fn(cfg)\n"
+        "    cfg[0] = 1\n"
+        "    return out\n")
+    assert _rl001(bare).ok
+    annotated = bare.replace("out = fn(cfg)",
+                             "out = fn(cfg)  # reprolint: dispatch")
+    hits = _rl001(annotated).by_rule("RL001")
+    assert len(hits) == 1 and "mutated in place" in hits[0].message
+
+
+def test_rl001_fires_on_opaque_producer_in_loop():
+    r = _rl001(
+        "def f(it, n):\n"
+        "    for i in range(n):\n"
+        "        batch = next(it)\n"
+        "        yield jnp.asarray(batch)\n")
+    hits = r.by_rule("RL001")
+    assert len(hits) == 1 and "opaque producer" in hits[0].message
+    assert "fresh-batch" in hits[0].hint
+
+
+def test_rl001_fresh_batch_annotation_waives_producer():
+    r = _rl001(
+        "def f(it, n):\n"
+        "    for i in range(n):\n"
+        "        # reprolint: fresh-batch test_pipelines enforces it\n"
+        "        batch = next(it)\n"
+        "        yield jnp.asarray(batch)\n")
+    assert r.ok, r.render_human()
+
+
+def test_rl001_producer_taint_propagates_through_items():
+    r = _rl001(
+        "def f(it, n):\n"
+        "    for i in range(n):\n"
+        "        batch = next(it)\n"
+        "        yield {k: jnp.asarray(v) for k, v in batch.items()}\n")
+    hits = r.by_rule("RL001")
+    assert len(hits) == 1 and "'v'" in hits[0].message
+
+
+def test_rl001_nested_functions_are_separate_scopes():
+    # the nested closure's dispatch sees no mutation in ITS scope, and
+    # the outer scope has no dispatch: quiet (documented scope model)
+    r = _rl001(
+        "def f(buf):\n"
+        "    def g():\n"
+        "        return jnp.asarray(buf.copy())\n"
+        "    buf[0] = 1\n"
+        "    return g\n")
+    assert r.ok, r.render_human()
+
+
+# ========================= RL002 obs-purity ============================
+
+def test_rl002_fires_on_direct_import_even_function_local():
+    r = run_fixture(["RL002"], {
+        "src/repro/obs/_fx_probe.py":
+            "def f():\n"
+            "    import numpy as np\n"
+            "    return np.zeros(1)\n"})
+    hits = r.by_rule("RL002")
+    assert len(hits) == 1 and "numpy" in hits[0].message
+
+
+def test_rl002_fires_transitively_with_chain_story():
+    r = run_fixture(["RL002"], {
+        "src/repro/obs/_fx_probe.py": "from repro import _fx_mid\n",
+        "src/repro/_fx_mid.py": "import jax\n"})
+    hits = r.by_rule("RL002")
+    assert any("transitively" in f.message and
+               "repro._fx_mid -> jax" in f.message for f in hits), \
+        r.render_human()
+
+
+def test_rl002_quiet_when_intermediate_import_is_lazy():
+    # function-local imports in the intermediate module are lazy: they
+    # cannot pull jax in at import time
+    r = run_fixture(["RL002"], {
+        "src/repro/obs/_fx_probe.py": "from repro import _fx_mid\n",
+        "src/repro/_fx_mid.py":
+            "def f():\n"
+            "    import jax\n"
+            "    return jax\n"})
+    assert r.ok, r.render_human()
+
+
+def test_rl002_ignores_non_obs_importers():
+    r = run_fixture(["RL002"],
+                    {f"{FX}/elsewhere.py": "import numpy as np\n"})
+    assert r.ok, r.render_human()
+
+
+# ====================== RL003 sync-confinement =========================
+
+def test_rl003_fires_outside_devbridge():
+    r = run_fixture(["RL003"], {
+        f"{FX}/helper.py":
+            "import jax\n\n"
+            "def f(x):\n"
+            "    return jax.block_until_ready(x)\n"})
+    hits = r.by_rule("RL003")
+    assert len(hits) == 1 and "devbridge" in hits[0].message
+
+
+def test_rl003_quiet_in_devbridge_and_in_docstrings():
+    r = run_fixture(["RL003"], {
+        f"{FX}/doc.py":
+            '"""block_until_ready may appear in prose freely."""\n'
+            "# and in comments: block_until_ready\n"})
+    assert r.ok, r.render_human()
+    # the real devbridge.py (which genuinely syncs) is clean at HEAD
+    r2 = lint(ROOT, paths=("src/repro/serving/devbridge.py",),
+              select=["RL003"])
+    assert r2.ok, r2.render_human()
+
+
+def test_rl003_serving_bans_item_and_device_get():
+    r = run_fixture(["RL003"], {
+        "src/repro/serving/_fx_sync.py":
+            "def f(x, jax):\n"
+            "    a = x.item()\n"
+            "    b = jax.device_get(x)\n"
+            "    return a, b\n"})
+    msgs = [f.message for f in r.by_rule("RL003")]
+    assert len(msgs) == 2
+    assert any(".item()" in m for m in msgs)
+    assert any("device_get" in m for m in msgs)
+
+
+def test_rl003_item_with_args_and_outside_serving_quiet():
+    # dict.item(i)-style calls take args; .item() outside serving is
+    # not the serving-confinement concern
+    r = run_fixture(["RL003"], {
+        "src/repro/serving/_fx_ok.py": "def f(x):\n"
+                                       "    return x.item(0)\n",
+        f"{FX}/notserving.py": "def f(x):\n"
+                               "    return x.item()\n"})
+    assert r.ok, r.render_human()
+
+
+# ======================== RL004 span-hygiene ===========================
+
+def test_rl004_fires_on_sync_inside_span_body():
+    r = run_fixture(["RL004"], {
+        f"{FX}/spanned.py":
+            "def f(tele, jax, x):\n"
+            "    with tele.span('forward'):\n"
+            "        jax.block_until_ready(x)\n"})
+    hits = r.by_rule("RL004")
+    assert len(hits) == 1 and "no-added-syncs" in hits[0].message
+
+
+def test_rl004_fires_on_pallas_call_and_item_in_span():
+    r = run_fixture(["RL004"], {
+        f"{FX}/spanned.py":
+            "def f(tele, pl, x):\n"
+            "    with tele.span('mask'):\n"
+            "        y = pl.pallas_call(x)\n"
+            "        return y.item()\n"})
+    assert len(r.by_rule("RL004")) == 2
+
+
+def test_rl004_quiet_for_device_span_and_nested_defs():
+    r = run_fixture(["RL004"], {
+        f"{FX}/spanned.py":
+            "def f(tele, jax, x):\n"
+            "    with tele.device_span('forward'):\n"
+            "        jax.block_until_ready(x)\n"   # the bracket's job
+            "    with tele.span('plan'):\n"
+            "        def later():\n"               # executes elsewhere
+            "            return jax.block_until_ready(x)\n"
+            "        return later\n"})
+    assert r.ok, r.render_human()
+
+
+# ======================== RL005 kernel-parity ==========================
+
+_KERNEL = ("import jax.experimental.pallas as pl\n\n"
+           "def run(x):\n"
+           "    return pl.pallas_call(None)(x)\n")
+# fixture package path built at runtime: RL005 greps every
+# tests/test_*.py (including THIS file) for "kernels.<pkg>" /
+# "kernels/<pkg>", so the joined literal must not appear in our source
+_PKG = "_fx" + "pkg"
+_KDIR = "/".join(["src", "repro", "kernels", _PKG])
+
+
+def test_rl005_fires_on_missing_ops_ref_and_test():
+    r = run_fixture(["RL005"], {f"{_KDIR}/kernel.py": _KERNEL})
+    msgs = [f.message for f in r.by_rule("RL005")]
+    assert len(msgs) == 3, msgs
+    assert any("ops.py" in m for m in msgs)
+    assert any("ref.py" in m for m in msgs)
+    assert any("no tests/test_*.py" in m for m in msgs)
+
+
+def test_rl005_quiet_with_full_contract():
+    r = run_fixture(["RL005"], {
+        f"{_KDIR}/kernel.py": _KERNEL,
+        f"{_KDIR}/ops.py": "def op():\n    pass\n",
+        f"{_KDIR}/ref.py": "def ref():\n    pass\n",
+        f"tests/test{_PKG}.py":
+            f"from repro.kernels.{_PKG} import ops\n"})
+    assert r.ok, r.render_human()
+
+
+def test_rl005_missing_test_is_the_only_gap_detected():
+    # near-miss: ops/ref shipped, but no test references the package
+    r = run_fixture(["RL005"], {
+        f"{_KDIR}/kernel.py": _KERNEL,
+        f"{_KDIR}/ops.py": "def op():\n    pass\n",
+        f"{_KDIR}/ref.py": "def ref():\n    pass\n"})
+    msgs = [f.message for f in r.by_rule("RL005")]
+    assert len(msgs) == 1 and "no tests/test_*.py" in msgs[0]
+
+
+def test_rl005_ignores_packages_without_pallas_call():
+    r = run_fixture(["RL005"], {
+        "src/repro/kernels/_fxutil/helpers.py": "def pad(x):\n"
+                                                "    return x\n"})
+    assert r.ok, r.render_human()
+
+
+# ================== RL000 suppressions & directives ====================
+
+_VIOLATION = ("import jax\n\n"
+              "def f(x):\n"
+              "    return jax.block_until_ready(x){}\n")
+
+
+def test_justified_suppression_moves_finding_aside():
+    src = _VIOLATION.format(
+        "  # reprolint: disable=RL003 deliberate bench timing bracket")
+    r = run_fixture(["RL003"], {f"{FX}/s.py": src})
+    assert r.ok and len(r.suppressed) == 1
+    s = r.suppressed[0]
+    assert s.rule == "RL003" and s.suppressed
+    assert s.justification == "deliberate bench timing bracket"
+
+
+def test_suppression_on_line_above_works():
+    src = ("import jax\n\n"
+           "def f(x):\n"
+           "    # reprolint: disable=RL003 deliberate timing bracket\n"
+           "    return jax.block_until_ready(x)\n")
+    r = run_fixture(["RL003"], {f"{FX}/s.py": src})
+    assert r.ok and len(r.suppressed) == 1
+
+
+def test_unjustified_suppression_is_its_own_finding():
+    src = _VIOLATION.format("  # reprolint: disable=RL003")
+    r = run_fixture(["RL003"], {f"{FX}/s.py": src})
+    rules = {f.rule for f in r.findings}
+    # the malformed directive suppresses nothing AND reports itself
+    assert rules == {"RL000", "RL003"}, r.render_human()
+    assert any("unjustified" in f.message for f in r.by_rule("RL000"))
+
+
+def test_one_word_justification_is_rejected():
+    src = _VIOLATION.format("  # reprolint: disable=RL003 benchmark")
+    r = run_fixture(["RL003"], {f"{FX}/s.py": src})
+    assert any("unjustified" in f.message for f in r.by_rule("RL000"))
+
+
+def test_stale_suppression_is_a_finding():
+    src = ("def f(x):\n"
+           "    return x  # reprolint: disable=RL003 nothing here syncs\n")
+    r = run_fixture(["RL003"], {f"{FX}/s.py": src})
+    hits = r.by_rule("RL000")
+    assert len(hits) == 1 and "stale" in hits[0].message
+
+
+def test_stale_check_only_counts_rules_that_ran():
+    # RL003 never ran, so its suppression cannot be judged stale
+    src = ("def f(x):\n"
+           "    return x  # reprolint: disable=RL003 nothing here syncs\n")
+    r = run_fixture(["RL001"], {f"{FX}/s.py": src})
+    assert r.ok, r.render_human()
+
+
+def test_unknown_directive_and_rl000_disable_are_findings():
+    src = ("def f(x):  # reprolint: disable=RL000 self-suppress attempt\n"
+           "    return x  # reprolint: frobnicate the whatsit\n")
+    r = run_fixture(["RL001"], {f"{FX}/s.py": src})
+    msgs = [f.message for f in r.by_rule("RL000")]
+    assert len(msgs) == 2
+    assert any("no valid rule ids" in m for m in msgs)
+    assert any("unknown reprolint directive" in m for m in msgs)
+
+
+def test_directives_in_strings_are_ignored():
+    d = parse_directives(
+        's = "# reprolint: disable=RL001 not a real directive"\n'
+        "x = 1  # reprolint: disable=RL001 a real justified one\n")
+    assert len(d.disables) == 1 and d.disables[0].line == 2
+    assert not d.errors
+
+
+def test_fresh_batch_requires_justification():
+    src = ("import jax.numpy as jnp\n\n"
+           "def f(it, n):\n"
+           "    for i in range(n):\n"
+           "        batch = next(it)  # reprolint: fresh-batch\n"
+           "        yield jnp.asarray(batch)\n")
+    r = run_fixture(["RL001"], {f"{FX}/s.py": src})
+    rules = {f.rule for f in r.findings}
+    assert "RL000" in rules and "RL001" in rules, r.render_human()
+
+
+def test_multi_rule_disable_tracks_usage_per_rule():
+    src = ("import jax\n\n"
+           "def f(tele, x):\n"
+           "    with tele.span('t'):\n"
+           "        # reprolint: disable=RL003,RL004 deliberate probe here\n"
+           "        return jax.block_until_ready(x)\n")
+    r = run_fixture(["RL003", "RL004"], {f"{FX}/s.py": src})
+    assert r.ok and {f.rule for f in r.suppressed} == {"RL003", "RL004"}
+
+
+# ============================== project ================================
+
+def test_module_name_mapping():
+    assert module_name("src/repro/core/lexer.py") == "repro.core.lexer"
+    assert module_name("src/repro/obs/__init__.py") == "repro.obs"
+    assert module_name("benchmarks/run.py") is None
+
+
+def test_overlay_replaces_disk_and_adds_virtual_files():
+    proj = Project.load(ROOT, paths=("src/repro/analysis",),
+                        overlay={"src/repro/analysis/cli.py": "x = 1\n",
+                                 "src/virtual/extra.py": "y = 2\n"})
+    assert proj.file("src/repro/analysis/cli.py").text == "x = 1\n"
+    assert proj.file("src/virtual/extra.py").text == "y = 2\n"
+
+
+def test_syntax_error_fixture_raises_cleanly():
+    try:
+        run_fixture(["RL001"], {f"{FX}/bad.py": "def f(:\n"})
+    except SyntaxError:
+        pass
+    else:
+        raise AssertionError("expected SyntaxError to propagate")
+
+
+# ================================ CLI ==================================
+
+def test_cli_clean_fixture_exits_zero(tmp_path, capsys):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "ok.py").write_text("def f():\n    return 1\n")
+    rc = cli_main(["--root", str(tmp_path), "src"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "0 finding(s)" in out
+
+
+def test_cli_findings_exit_one_with_json(tmp_path, capsys):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "bad.py").write_text(
+        "import jax\n\ndef f(x):\n    return jax.block_until_ready(x)\n")
+    rc = cli_main(["--root", str(tmp_path), "src", "--json"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    payload = json.loads(out)
+    assert not payload["ok"]
+    assert payload["findings"][0]["rule"] == "RL003"
+    assert payload["findings"][0]["line"] == 4
+
+
+def test_cli_list_rules_and_bad_rule_id(capsys):
+    rc = cli_main(["--list-rules"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    for rid in ("RL001", "RL002", "RL003", "RL004", "RL005"):
+        assert rid in out
+    rc = cli_main(["--root", str(ROOT), "--rules", "RL999"])
+    assert rc == 2
+
+
+def test_cli_script_entrypoint_runs_without_pythonpath():
+    r = subprocess.run([sys.executable, str(ROOT / "scripts" /
+                                            "reprolint.py"),
+                        "--list-rules"],
+                       capture_output=True, text=True, timeout=60,
+                       cwd=str(ROOT))
+    assert r.returncode == 0 and "RL005" in r.stdout
+
+
+# ============================ whole tree ===============================
+
+def test_whole_tree_is_clean_at_head():
+    """The exact gate `make lint` runs: zero unsuppressed findings over
+    src/ + benchmarks/ + scripts/, every suppression justified."""
+    report = lint(ROOT)
+    assert report.ok, report.render_human()
+    assert set(report.rules_run) == set(RULES)
+    assert report.files_scanned > 50
+    for s in report.suppressed:
+        assert len(s.justification.split()) >= 2, s.as_dict()
+
+
+def test_all_five_rules_registered_with_docs():
+    assert sorted(RULES) == ["RL001", "RL002", "RL003", "RL004", "RL005"]
+    for r in RULES.values():
+        assert r.doc, f"{r.rid} has no docstring"
+    assert DEFAULT_PATHS == ("src", "benchmarks", "scripts")
+
+
+def test_lint_runtime_stays_under_budget():
+    """make lint must stay a cheap gate: whole tree, all rules, < 10 s
+    (CI budget asserted here so a quadratic rule cannot creep in)."""
+    t0 = time.perf_counter()
+    report = lint(ROOT)
+    elapsed = time.perf_counter() - t0
+    assert report.ok
+    assert elapsed < 10.0, f"reprolint took {elapsed:.1f}s (budget 10s)"
